@@ -1,0 +1,54 @@
+"""Shared helpers for the benchmark harness (CPU-sized paper reproductions)."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.core import FedConfig, FederatedTrainer           # noqa: E402
+from repro.data import make_federated_image_data             # noqa: E402
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn  # noqa: E402
+
+HW = (14, 14)          # reduced MNIST-shaped images (CPU budget)
+N_NODES = 10
+ROUNDS = 4
+LOCAL_STEPS = 12
+
+
+def build_trainer(mode: str, *, n_malicious: int = 3, detect: bool = True,
+                  detect_s: float = 80.0, rounds: int = ROUNDS,
+                  sparsify: float = 1.0, seed: int = 0,
+                  sigma: float | None = 0.05) -> FederatedTrainer:
+    """sigma=0.05 default (workable SNR); pass sigma=None for the paper's
+    ε=8 calibration — the sigma-tradeoff bench sweeps both."""
+    node_data, test, cloud, _ = make_federated_image_data(
+        seed, n_nodes=N_NODES, n_malicious=n_malicious, n_train=1500,
+        n_test=400, n_cloud_test=300, hw=HW)
+    cfg = FedConfig(mode=mode, n_nodes=N_NODES, rounds=rounds,
+                    local_steps=LOCAL_STEPS, batch_size=32, lr=0.1,
+                    detect=detect, detect_s=detect_s, sparsify_ratio=sparsify,
+                    sigma=sigma, seed=seed)
+    params = init_cnn(jax.random.PRNGKey(seed), in_hw=HW)
+    return FederatedTrainer(params, cnn_loss, cnn_accuracy, node_data, test,
+                            cloud, cfg)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.dt * 1e6

@@ -1,0 +1,28 @@
+"""Paper Fig. 6: malicious-node-detection threshold sweep s ∈ {50..90}.
+
+(a) ASR — fraction of malicious-node updates that get aggregated;
+(b) global accuracy at each threshold.
+"""
+from __future__ import annotations
+
+from .common import Timer, build_trainer, emit
+
+
+def run() -> None:
+    for s in (50, 60, 70, 80, 90):
+        tr = build_trainer("aldpfl", n_malicious=3, detect=True,
+                           detect_s=float(s))
+        with Timer() as t:
+            hist = tr.run()
+        total = len(hist) * tr.cfg.n_nodes
+        rejected = sum(r.n_rejected for r in hist)
+        # proxy ASR: malicious updates not rejected / malicious updates sent
+        sent_malicious = len(hist) * 3
+        asr = max(0.0, (sent_malicious - rejected) / sent_malicious)
+        emit(f"fig6a_asr_s{s}", t.us / max(total, 1), f"asr={asr:.3f}")
+        emit(f"fig6b_acc_s{s}", t.us / max(total, 1),
+             f"accuracy={hist[-1].accuracy:.3f}")
+
+
+if __name__ == "__main__":
+    run()

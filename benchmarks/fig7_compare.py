@@ -1,0 +1,20 @@
+"""Paper Fig. 7: ALDPFL vs SLDPFL vs AFL vs SFL — accuracy and running time."""
+from __future__ import annotations
+
+from .common import Timer, build_trainer, emit
+
+
+def run() -> None:
+    for mode in ("sfl", "afl", "sldpfl", "aldpfl"):
+        tr = build_trainer(mode, n_malicious=0, detect=False)
+        with Timer() as t:
+            hist = tr.run()
+        emit(f"fig7a_accuracy_{mode}", t.us / len(hist),
+             f"accuracy={hist[-1].accuracy:.3f}")
+        emit(f"fig7b_runtime_{mode}", t.us / len(hist),
+             f"sim_clock_s={hist[-1].t:.2f};kappa={tr.kappa():.4f};"
+             f"eps={tr.epsilon_spent():.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Fig. 8: label-flipping robustness vs malicious proportion p.
+
+General task = overall accuracy; special task = accuracy on the attacked
+class (digit '1' analogue: class 1 flipped to 7).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from .common import HW, Timer, build_trainer, emit
+
+
+def run() -> None:
+    from repro.models.cnn import per_class_accuracy
+    for p in (10, 20, 30):
+        n_mal = max(1, round(p / 100 * 10))
+        for detect in (True, False):
+            tr = build_trainer("aldpfl", n_malicious=n_mal, detect=detect)
+            with Timer() as t:
+                hist = tr.run()
+            x_te, y_te = tr.test_data
+            special = float(per_class_accuracy(tr.params, x_te, y_te, 1))
+            tag = "with" if detect else "without"
+            emit(f"fig8a_general_p{p}_{tag}", t.us / len(hist),
+                 f"accuracy={hist[-1].accuracy:.3f}")
+            emit(f"fig8b_special_p{p}_{tag}", t.us / len(hist),
+                 f"class1_acc={special:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Pallas kernel micro-benchmarks (interpret mode — correctness-path timing;
+derived column reports the HBM bytes the fused kernel saves on real TPU)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import Timer, emit
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ldp_noise import ldp_perturb_flat
+from repro.kernels.sparsify import sparsify_flat
+
+
+def _bench(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    B, H, KV, S, D = 1, 4, 2, 256, 64
+    q = jax.random.normal(key, (B, H, S, D), jnp.float32)
+    k = jax.random.normal(key, (B, KV, S, D), jnp.float32)
+    v = jax.random.normal(key, (B, KV, S, D), jnp.float32)
+    us = _bench(lambda a, b, c: flash_attention(a, b, c, bq=128, bk=128),
+                q, k, v)
+    flops = 4 * B * H * S * S * D * 0.5
+    emit("kernel_flash_attention_256", us, f"flops={flops:.0f};"
+         f"vmem_tile=128x128x{D}")
+
+    n = 1 << 20
+    g = jax.random.normal(key, (n,), jnp.float32)
+    us = _bench(lambda x: ldp_perturb_flat(x, jnp.int32(1), jnp.float32(0.5),
+                                           0.1, 1.0), g)
+    emit("kernel_ldp_noise_1M", us,
+         f"hbm_bytes_fused={2*4*n};hbm_bytes_naive={6*4*n}")
+
+    r = jax.random.normal(key, (n,), jnp.float32)
+    us = _bench(lambda a, b: sparsify_flat(a, b, jnp.float32(0.5)), g, r)
+    emit("kernel_sparsify_1M", us,
+         f"hbm_bytes_fused={4*4*n};hbm_bytes_naive={8*4*n}")
+
+    from repro.kernels.selective_scan import selective_scan
+    B_, L_, D_, N_ = 1, 128, 64, 16
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (B_, L_, D_), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B_, L_, D_))) * 0.1
+    Bm = jax.random.normal(ks[2], (B_, L_, N_))
+    Cm = jax.random.normal(ks[3], (B_, L_, N_))
+    A = -jnp.exp(jax.random.normal(key, (D_, N_)) * 0.2)
+    us = _bench(lambda *a: selective_scan(*a, block_l=64, block_d=64)[0],
+                x, dt, Bm, Cm, A)
+    hbm_fused = 4 * (2 * B_ * L_ * D_ + 2 * B_ * L_ * N_ + B_ * L_ * D_)
+    hbm_xla = hbm_fused + 4 * B_ * L_ * D_ * N_ * 7   # h_all × assoc-scan passes
+    emit("kernel_selective_scan", us,
+         f"hbm_bytes_fused={hbm_fused};hbm_bytes_xla_scan={hbm_xla}")
+
+    from repro.kernels.ssd_scan import ssd_scan
+    H_, P_ = 8, 16
+    xh = jax.random.normal(ks[0], (1, 128, H_, P_), jnp.float32)
+    dth = jax.nn.softplus(jax.random.normal(ks[1], (1, 128, H_))) * 0.2
+    Ah = -jnp.exp(jax.random.normal(key, (H_,)) * 0.3)
+    Bh = jax.random.normal(ks[2], (1, 128, N_))
+    Ch = jax.random.normal(ks[3], (1, 128, N_))
+    us = _bench(lambda *a: ssd_scan(*a, chunk=64, block_h=8)[0],
+                xh, dth, Bh, Ch, Ah)
+    emit("kernel_ssd_scan", us,
+         f"hbm_bytes_fused={4*(2*128*H_*P_+2*128*N_+128*H_)};"
+         f"vmem_state={H_*P_*N_*4}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper §5.5: gradient-leakage (DLG) attack vs the ALDP defence.
+
+Reconstruction MSE and ASR as the noise multiplier σ grows (σ=0 is the
+undefended baseline the malicious cloud exploits).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Timer, emit
+
+from repro.core.aldp import add_gaussian_noise
+from repro.core.attacks import (attack_success_rate, dlg_attack,
+                                reconstruction_mse)
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (64, 10)) * 0.2
+
+    def loss(params, x, y_soft):
+        return jnp.mean((x @ params - y_soft) ** 2)
+
+    x_true = jax.random.normal(jax.random.PRNGKey(1), (2, 64)) * 0.5
+    y_true = jax.nn.one_hot(jnp.array([3, 7]), 10)
+    g = jax.grad(loss)(W, x_true, y_true)
+
+    for sigma in (0.0, 0.01, 0.1, 0.5):
+        g_obs = g if sigma == 0 else add_gaussian_noise(
+            g, jax.random.PRNGKey(2), sigma, 1.0)
+        with Timer() as t:
+            x_rec, hist = dlg_attack(loss, W, g_obs, (2, 64), 10,
+                                     jax.random.PRNGKey(3), steps=250, lr=0.1)
+        mse = float(reconstruction_mse(x_true, x_rec))
+        asr = float(attack_success_rate(x_true, x_rec, mse_threshold=0.05))
+        emit(f"leakage_dlg_sigma{sigma}", t.us / 250,
+             f"mse={mse:.4f};asr={asr:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Roofline table: summarises every dry-run JSON in results/dryrun into the
+§Roofline rows (per arch × shape × mesh: three terms, dominant, ratios)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run() -> None:
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        emit("roofline_table", 0.0, "no dry-run results found — run "
+             "`python -m repro.launch.dryrun_all` first")
+        return
+    for path in files:
+        with open(path) as f:
+            rec = json.load(f)
+        tag = f"{rec.get('arch')}.{rec.get('shape')}.{rec.get('mesh')}"
+        if rec.get("status") != "ok":
+            emit(f"roofline_{tag}", 0.0, f"status={rec.get('status')}")
+            continue
+        r = rec["roofline"]
+        emit(f"roofline_{tag}", rec["timings"]["compile_s"] * 1e6,
+             f"compute_s={r['compute_s']:.4g};memory_s={r['memory_s']:.4g};"
+             f"memory_lb_s={r.get('memory_lb_s', 0):.4g};"
+             f"collective_s={r['collective_s']:.4g};dominant={r['dominant']};"
+             f"useful_ratio={r['useful_flops_ratio']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Attack vs defence demo: both attacks from the paper, and both defences.
+
+1. Label-flipping (poisoning): 30% malicious nodes flip class 1 -> 7; compare
+   ALDPFL accuracy with and without the cloud-side detection mechanism.
+2. Gradient leakage (DLG): a malicious cloud reconstructs a node's input from
+   its gradients; the ALDP noise breaks the reconstruction.
+
+  PYTHONPATH=src python examples/attack_defense.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FedConfig, FederatedTrainer
+from repro.core.aldp import add_gaussian_noise
+from repro.core.attacks import dlg_attack, reconstruction_mse
+from repro.data import make_federated_image_data
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn, per_class_accuracy
+
+
+def label_flip_experiment() -> None:
+    print("=== 1. label-flipping attack (p=30%) ===")
+    node_data, test, cloud, _ = make_federated_image_data(
+        seed=0, n_nodes=10, n_malicious=3, n_train=1500, n_test=400,
+        n_cloud_test=300, hw=(14, 14))
+    for detect in (False, True):
+        cfg = FedConfig(mode="aldpfl", n_nodes=10, rounds=4, local_steps=12,
+                        batch_size=32, lr=0.1, detect=detect, sigma=0.05)
+        tr = FederatedTrainer(init_cnn(jax.random.PRNGKey(0), in_hw=(14, 14)),
+                              cnn_loss, cnn_accuracy, node_data, test, cloud,
+                              cfg)
+        hist = tr.run()
+        special = float(per_class_accuracy(tr.params, *tr.test_data, 1))
+        print(f"  detection={'ON ' if detect else 'OFF'}  "
+              f"general acc={hist[-1].accuracy:.3f}  "
+              f"class-1 acc={special:.3f}  "
+              f"rejected={sum(r.n_rejected for r in hist)} updates")
+
+
+def dlg_experiment() -> None:
+    print("=== 2. gradient-leakage (DLG) attack vs ALDP ===")
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (64, 10)) * 0.2
+
+    def loss(params, x, y_soft):
+        return jnp.mean((x @ params - y_soft) ** 2)
+
+    # two samples: the rank-2 gradient pins the reconstruction scale
+    x_true = jax.random.normal(jax.random.PRNGKey(1), (2, 64)) * 0.5
+    y_true = jax.nn.one_hot(jnp.array([3, 7]), 10)
+    g = jax.grad(loss)(W, x_true, y_true)
+    for sigma in (0.0, 0.1, 0.5):
+        g_obs = g if sigma == 0 else add_gaussian_noise(
+            g, jax.random.PRNGKey(2), sigma, 1.0)
+        x_rec, _ = dlg_attack(loss, W, g_obs, (2, 64), 10,
+                              jax.random.PRNGKey(3), steps=400, lr=0.1)
+        mse = float(reconstruction_mse(x_true, x_rec))
+        verdict = "LEAKED" if mse < 0.05 else "protected"
+        print(f"  σ={sigma:4.2f}: reconstruction MSE={mse:8.4f}  -> {verdict}")
+
+
+if __name__ == "__main__":
+    label_flip_experiment()
+    dlg_experiment()

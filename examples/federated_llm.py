@@ -1,0 +1,75 @@
+"""The paper's technique on a transformer LM — the datacenter fed_train_step.
+
+One jitted SPMD program per federated round: per-node local SGD (scan) →
+ALDP clip+noise (Eq. 8) → cloud-side detection (Alg. 2) → masked-mean
+all-reduce + α-mix (Eq. 6). Runs the smoke variant of any assigned arch.
+
+  PYTHONPATH=src python examples/federated_llm.py [--arch zamba2-1.2b]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.fed_step import FedStepConfig, fed_train_step
+from repro.data.synthetic import make_token_dataset
+from repro.models import init_params, loss_fn
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=ARCH_IDS)
+    ap.add_argument("--rounds", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch).replace(attn_chunk=16)
+    fcfg = FedStepConfig(n_nodes=4, local_steps=2, lr=0.1, alpha=0.5,
+                         sigma=1e-3, clip_s=1.0, detect=True, detect_s=50.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name}  params={n_params/1e6:.2f}M  "
+          f"nodes={fcfg.n_nodes}  local_steps={fcfg.local_steps}  "
+          f"σ={fcfg.sigma}  s={fcfg.detect_s}")
+
+    seq = 32
+    data = make_token_dataset(0, 256, seq, cfg.vocab)
+    rng = np.random.default_rng(0)
+
+    def batch(lead, cfg=cfg):
+        n = int(np.prod(lead))
+        idx = rng.integers(0, data.shape[0], n)
+        b = {"tokens": jnp.asarray(data[idx, :seq].reshape(lead + (seq,))),
+             "targets": jnp.asarray(data[idx, 1:seq + 1].reshape(lead + (seq,)))}
+        if cfg.family == "vlm":
+            b["patches"] = jnp.asarray(rng.normal(
+                0, 1, lead + (cfg.n_patches, cfg.d_model)), jnp.float32)
+        if cfg.family == "audio":
+            b["frames"] = jnp.asarray(rng.normal(
+                0, 1, lead + (cfg.n_audio_frames, cfg.d_model)), jnp.float32)
+        return b
+
+    lfn = lambda p, b: loss_fn(p, cfg, b)
+    afn = lambda p, b: loss_fn(p, cfg, b)[1]["accuracy"]
+    step = jax.jit(lambda p, nb, eb, k: fed_train_step(
+        p, nb, eb, k, loss_fn=lfn, acc_fn=afn, fcfg=fcfg))
+
+    key = jax.random.PRNGKey(1)
+    for r in range(args.rounds):
+        key, k = jax.random.split(key)
+        nb = batch((fcfg.n_nodes, fcfg.local_steps, 2))
+        eb = batch((2,))
+        params, m = step(params, nb, eb, k)
+        print(f"round {r:2d}  loss={float(m['loss']):.4f}  "
+              f"node_acc={float(m['node_accuracies'].mean()):.3f}  "
+              f"normal={int(m['n_normal'])}/{fcfg.n_nodes}  "
+              f"Δ-norm={float(m['delta_norm_mean']):.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

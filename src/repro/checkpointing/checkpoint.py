@@ -1,0 +1,53 @@
+"""Flat .npz checkpoints with a JSON tree manifest (no orbax offline)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: int = 0, extra: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    dtypes = {}
+    stored = {}
+    for k, v in flat.items():
+        dtypes[k] = str(v.dtype)
+        # numpy's npz cannot serialise bfloat16 — store the raw bits
+        stored[k] = v.view(np.uint16) if v.dtype.name == "bfloat16" else v
+    np.savez(path if path.endswith(".npz") else path + ".npz", **stored)
+    manifest = {"step": step, "keys": sorted(flat), "dtypes": dtypes,
+                "extra": extra or {}}
+    with open(path.replace(".npz", "") + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def load_checkpoint(path: str, like_tree) -> Tuple[Any, int]:
+    """Restores into the structure of ``like_tree``; returns (tree, step)."""
+    base = path.replace(".npz", "")
+    data = np.load(base + ".npz")
+    with open(base + ".json") as f:
+        manifest = json.load(f)
+
+    flat_like = jax.tree_util.tree_flatten_with_path(like_tree)
+    dtypes = manifest.get("dtypes", {})
+    leaves = []
+    for pathk, leaf in flat_like[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pathk)
+        arr = data[key]
+        if dtypes.get(key) == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16.dtype)
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves), manifest["step"]

@@ -1,0 +1,61 @@
+"""Asynchronous Local Differential Privacy (ALDP) mechanism — paper §5.2.
+
+The node-side perturbation of Eq. (8):
+
+    Δω̄ᵏ = Δωᵏ / max(1, ‖Δωᵏ‖₂ / S)        (clip at sensitivity S)
+    upload(Δω̄ᵏ + N(0, σ²S²))               (Gaussian mechanism, node-local)
+
+All functions operate on parameter pytrees. The noise key must be node-local
+(fold in the node id) so perturbation happens "on the edge node" — the cloud
+never sees an unperturbed delta (node-level LDP, the paper's point of
+difference vs server-side DP).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, clip_s: float) -> Tuple[object, jnp.ndarray]:
+    """Eq. (8) clipping: tree / max(1, ‖tree‖₂/S). Returns (clipped, norm)."""
+    nrm = global_norm(tree)
+    scale = 1.0 / jnp.maximum(1.0, nrm / clip_s)
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), nrm
+
+
+def add_gaussian_noise(tree, key, sigma: float, clip_s: float):
+    """Adds N(0, (σS)²) independently to every coordinate."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        (x + sigma * clip_s * jax.random.normal(k, x.shape, jnp.float32).astype(x.dtype))
+        for x, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+def aldp_perturb(tree, key, sigma: float, clip_s: float):
+    """Full node-side ALDP: clip at S then add N(0, σ²S²). Returns
+    (perturbed_tree, pre_clip_norm)."""
+    clipped, nrm = clip_by_global_norm(tree, clip_s)
+    return add_gaussian_noise(clipped, key, sigma, clip_s), nrm
+
+
+def sigma_for_epsilon(epsilon: float, delta: float) -> float:
+    """Single-release Gaussian mechanism calibration (Definition 2):
+    ε = (Δf/σ̃)·√(2 log(1.25/δ)) with sensitivity Δf = S and σ̃ = σS
+    ⇒ noise multiplier σ = √(2 log(1.25/δ)) / ε."""
+    return math.sqrt(2.0 * math.log(1.25 / delta)) / epsilon
+
+
+def epsilon_for_sigma(sigma: float, delta: float) -> float:
+    """Inverse of :func:`sigma_for_epsilon` (single release)."""
+    return math.sqrt(2.0 * math.log(1.25 / delta)) / sigma

@@ -1,0 +1,57 @@
+"""Asynchronous model-update scheme — paper §5.1 (Eq. 6) and §5.3.
+
+The cloud mixes every arriving (possibly stale) node model into the global
+model:   ω_t = α·ω_{t−1} + (1−α)·ω_new,   α ∈ (0,1).
+
+α trades convergence rate against the additive variance term (Theorem 6);
+the paper finds α = 0.5 optimal (following Xie et al., FedAsync). We also
+provide the FedAsync polynomial staleness-adaptive α, which the paper's
+buffer/scheduler design implies for heavily delayed updates.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mix(global_tree, new_tree, alpha: float | jnp.ndarray):
+    """Eq. (6): ω ← α·ω + (1−α)·ω_new (leafwise convex combination)."""
+    return jax.tree.map(
+        lambda g, n: (alpha * g.astype(jnp.float32)
+                      + (1.0 - alpha) * n.astype(jnp.float32)).astype(g.dtype),
+        global_tree, new_tree)
+
+
+def mix_delta(global_tree, delta_tree, alpha: float | jnp.ndarray):
+    """Delta form: ω ← ω + (1−α)·Δ (equivalent when Δ = ω_new − ω)."""
+    return jax.tree.map(
+        lambda g, d: (g.astype(jnp.float32)
+                      + (1.0 - alpha) * d.astype(jnp.float32)).astype(g.dtype),
+        global_tree, delta_tree)
+
+
+def staleness_alpha(alpha: float, staleness: jnp.ndarray | int,
+                    a: float = 0.5) -> jnp.ndarray:
+    """FedAsync polynomial staleness weighting: α_eff = α·(τ+1)^(−a).
+
+    Returns the *mixing weight of the new model*, i.e. use
+    ω ← (1 − α_eff)·ω + α_eff·ω_new with α_eff = (1−α)·(τ+1)^(−a) so that a
+    fresh update (τ=0) reproduces Eq. (6) exactly.
+    """
+    return (1.0 - alpha) * (jnp.asarray(staleness, jnp.float32) + 1.0) ** (-a)
+
+
+def mix_stale(global_tree, new_tree, alpha: float, staleness, a: float = 0.5):
+    w_new = staleness_alpha(alpha, staleness, a)
+    return jax.tree.map(
+        lambda g, n: ((1.0 - w_new) * g.astype(jnp.float32)
+                      + w_new * n.astype(jnp.float32)).astype(g.dtype),
+        global_tree, new_tree)
+
+
+def communication_efficiency(comm_time: float, comp_time: float) -> float:
+    """Eq. (5): κ = Comm / (Comp + Comm)."""
+    denom = comm_time + comp_time
+    return comm_time / denom if denom > 0 else 0.0

@@ -1,0 +1,100 @@
+"""Attacks the framework defends against — paper §3.3.
+
+* Label-flipping (data poisoning): malicious nodes change all labels of a
+  source class to a target class in their local data (paper: MNIST '1'→'7',
+  CIFAR 'dog'→'cat').
+* Gradient-leakage (DLG, Zhu et al. 2019): a malicious cloud reconstructs a
+  node's training batch from its uploaded gradients by gradient matching
+  (Eq. 4). Used here to evaluate the ALDP defence: reconstruction quality
+  (MSE / attack success rate) vs noise multiplier σ.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Label-flipping (poisoning)
+# ---------------------------------------------------------------------------
+
+def flip_labels(labels: jnp.ndarray, src: int, dst: int) -> jnp.ndarray:
+    """Change every label `src` to `dst` (the paper's attack)."""
+    return jnp.where(labels == src, dst, labels)
+
+
+# ---------------------------------------------------------------------------
+# Gradient leakage (DLG) and the ASR metric
+# ---------------------------------------------------------------------------
+
+def _grad_match_loss(loss_fn: Callable, params, dummy_x, dummy_logits_y,
+                     true_grads) -> jnp.ndarray:
+    """‖∇L(F(W, X'); Y') − g‖² with soft labels (DLG uses softmax(Y'))."""
+    y_soft = jax.nn.softmax(dummy_logits_y)
+
+    def soft_loss(p):
+        return loss_fn(p, dummy_x, y_soft)
+
+    g = jax.grad(soft_loss)(params)
+    return sum(jnp.sum(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)))
+               for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(true_grads)))
+
+
+def dlg_attack(loss_fn: Callable, params, true_grads, x_shape, n_classes: int,
+               key, steps: int = 200, lr: float = 0.1
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run DLG: optimize (X', Y') to match the observed gradients (Eq. 4).
+
+    loss_fn(params, x, y_soft) -> scalar (soft-label cross entropy).
+    Adam on the gradient-match objective (plain GD stalls — the original DLG
+    uses L-BFGS). Returns (reconstructed_x, match_loss_history).
+    """
+    kx, ky = jax.random.split(key)
+    dummy_x = jax.random.normal(kx, x_shape, jnp.float32) * 0.1
+    dummy_y = jax.random.normal(ky, (x_shape[0], n_classes), jnp.float32) * 0.1
+    state = {"x": dummy_x, "y": dummy_y,
+             "mx": jnp.zeros_like(dummy_x), "vx": jnp.zeros_like(dummy_x),
+             "my": jnp.zeros_like(dummy_y), "vy": jnp.zeros_like(dummy_y),
+             "t": jnp.zeros((), jnp.float32)}
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(st):
+        val, (gx, gy) = jax.value_and_grad(_grad_match_loss, argnums=(2, 3))(
+            loss_fn, params, st["x"], st["y"], true_grads)
+        t = st["t"] + 1.0
+
+        def adam(p, g, m, v):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            return p - lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+        x, mx, vx = adam(st["x"], gx, st["mx"], st["vx"])
+        y, my, vy = adam(st["y"], gy, st["my"], st["vy"])
+        return {"x": x, "y": y, "mx": mx, "vx": vx, "my": my, "vy": vy,
+                "t": t}, val
+
+    hist = []
+    for _ in range(steps):
+        state, val = step(state)
+        hist.append(val)
+    return state["x"], jnp.stack(hist)
+
+
+def reconstruction_mse(x_true: jnp.ndarray, x_rec: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(jnp.square(x_true.astype(jnp.float32) -
+                               x_rec.astype(jnp.float32)))
+
+
+def attack_success_rate(x_true: jnp.ndarray, x_rec: jnp.ndarray,
+                        mse_threshold: float = 0.05) -> jnp.ndarray:
+    """ASR (Definition 7): fraction of samples reconstructed below an MSE
+    threshold — 'successfully reconstructed training data'."""
+    per = jnp.mean(jnp.square(x_true.astype(jnp.float32) -
+                              x_rec.astype(jnp.float32)),
+                   axis=tuple(range(1, x_true.ndim)))
+    return (per < mse_threshold).mean()

@@ -1,0 +1,54 @@
+"""Cloud-side malicious-node detection — paper §5.4, Algorithm 2.
+
+The cloud evaluates every uploaded sub-model on a held-out testing dataset,
+collects the accuracy set 𝒜, sets the threshold Thr to the top-s percentile
+of 𝒜, and marks nodes with A_j > Thr as normal. Only normal nodes'
+updates are aggregated. Larger s ⇒ stricter threshold ⇒ lower attack success
+rate (paper Fig. 6a) at some accuracy cost (Fig. 6b); the paper operates at
+s = 80.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def detection_threshold(accuracies: jnp.ndarray, s: float) -> jnp.ndarray:
+    """Thr ← top-s% of 𝒜 (the s-th percentile of the accuracy set)."""
+    return jnp.percentile(accuracies.astype(jnp.float32), s)
+
+
+def detect(accuracies: jnp.ndarray, s: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (normal_mask (N,) bool, threshold).
+
+    Algorithm 2 lines 7–14: A_j > Thr ⇒ normal. Guard: if the strict
+    comparison would reject every node (all accuracies equal), fall back to
+    `>=` so aggregation never divides by zero.
+    """
+    thr = detection_threshold(accuracies, s)
+    mask = accuracies > thr
+    mask = jnp.where(mask.any(), mask, accuracies >= thr)
+    return mask, thr
+
+
+def masked_mean(trees, mask: jnp.ndarray):
+    """Aggregate node updates over normal nodes only (Alg. 2 line 16).
+
+    `trees` is a pytree whose leaves have a leading node axis N;
+    `mask` (N,) bool.
+    """
+    w = mask.astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1.0)
+
+    def agg(x):
+        wf = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (x.astype(jnp.float32) * wf).sum(0) / denom
+
+    return jax.tree.map(agg, trees)
+
+
+def evaluate_nodes(node_params, eval_fn: Callable, *eval_args) -> jnp.ndarray:
+    """vmap a per-model accuracy function over the stacked node models."""
+    return jax.vmap(lambda p: eval_fn(p, *eval_args))(node_params)

@@ -1,0 +1,249 @@
+"""FederatedTrainer: the paper's four schemes on real (host-level) nodes.
+
+Implements SFL (sync FedAvg), AFL (async, Eq. 6), SLDPFL (sync + LDP) and
+ALDPFL (the paper's framework: async + LDP + detection + accumulation) over
+K simulated edge nodes with heterogeneous compute speeds.
+
+Asynchrony is simulated with an event queue: each node trains from the global
+model version it last received and its update arrives after its (heterogeneous)
+compute time; the cloud mixes it immediately (Eq. 6) without waiting for other
+nodes. The simulated clock gives the paper's running-time comparison (Fig. 7b)
+and κ = Comm/(Comp+Comm) (Eq. 5); training math runs in JAX (jitted local SGD).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import accumulator as accum
+from . import aldp, async_update, detection
+from .accountant import MomentsAccountant
+
+
+@dataclass
+class FedConfig:
+    mode: str = "aldpfl"            # sfl | afl | sldpfl | aldpfl
+    n_nodes: int = 10
+    rounds: int = 20
+    local_steps: int = 10           # minibatch SGD steps per round per node
+    batch_size: int = 64
+    lr: float = 0.05
+    alpha: float = 0.5              # Eq. (6) mixing
+    staleness_adaptive: bool = False
+    # ALDP
+    clip_s: float = 1.0
+    epsilon: float = 8.0
+    delta: float = 1e-3
+    sigma: Optional[float] = None   # None => calibrated from (epsilon, delta)
+    # detection
+    detect: bool = True
+    detect_s: float = 80.0
+    # communication model
+    sparsify_ratio: float = 1.0     # <1 => gradient accumulation container
+    bandwidth_bytes_per_s: float = 12.5e6   # 100 Mbit/s edge uplink
+    base_compute_s: float = 1.0
+    heterogeneity: float = 0.5      # lognormal sigma of node speeds
+    seed: int = 0
+
+    def noise_multiplier(self) -> float:
+        if self.mode in ("sfl", "afl"):
+            return 0.0
+        return self.sigma if self.sigma is not None else \
+            aldp.sigma_for_epsilon(self.epsilon, self.delta)
+
+
+@dataclass
+class RoundRecord:
+    t: float
+    version: int
+    accuracy: float
+    comm_bytes: float
+    comp_time: float
+    comm_time: float
+    n_rejected: int
+
+
+class FederatedTrainer:
+    """Runs one of the paper's four schemes on K host-simulated nodes.
+
+    Args:
+      init_params: global model params pytree.
+      loss_fn: (params, batch{x,y}) -> (loss, metrics)
+      acc_fn: (params, x, y) -> scalar accuracy (cloud-side test quality).
+      node_data: list of (x, y) arrays per node (possibly label-flipped).
+      test_data: (x, y) for global accuracy reporting.
+      cloud_test: (x, y) the cloud's detection testing dataset (§5.4).
+    """
+
+    def __init__(self, init_params, loss_fn: Callable, acc_fn: Callable,
+                 node_data: Sequence[Tuple[np.ndarray, np.ndarray]],
+                 test_data: Tuple[np.ndarray, np.ndarray],
+                 cloud_test: Tuple[np.ndarray, np.ndarray],
+                 cfg: FedConfig):
+        self.cfg = cfg
+        self.params = init_params
+        self.loss_fn = loss_fn
+        self.acc_fn = jax.jit(acc_fn)
+        self.node_data = [(jnp.asarray(x), jnp.asarray(y)) for x, y in node_data]
+        self.test_data = (jnp.asarray(test_data[0]), jnp.asarray(test_data[1]))
+        self.cloud_test = (jnp.asarray(cloud_test[0]), jnp.asarray(cloud_test[1]))
+        self.rng = np.random.default_rng(cfg.seed)
+        self.key = jax.random.PRNGKey(cfg.seed)
+        self.sigma = cfg.noise_multiplier()
+        self.n_params = sum(x.size for x in jax.tree.leaves(init_params))
+        self.accountant = MomentsAccountant(self.sigma or 1e9, 1.0)
+        self.history: List[RoundRecord] = []
+        self.residuals = [accum.init_residual(init_params)
+                          for _ in range(cfg.n_nodes)]
+        # heterogeneous node speeds (lognormal around base_compute_s)
+        self.node_time = cfg.base_compute_s * np.exp(
+            self.rng.normal(0.0, cfg.heterogeneity, cfg.n_nodes))
+        self._local_train = jax.jit(partial(self._local_train_impl, loss_fn,
+                                            cfg.local_steps, cfg.lr,
+                                            cfg.batch_size))
+
+    # -- jitted node-local SGD ------------------------------------------------
+    @staticmethod
+    def _local_train_impl(loss_fn, steps, lr, bs, params, x, y, key):
+        n = x.shape[0]
+
+        def body(carry, k):
+            p, = carry
+            idx = jax.random.randint(k, (bs,), 0, n)
+            batch = {"x": x[idx], "y": y[idx]}
+            g = jax.grad(lambda pp: loss_fn(pp, batch)[0])(p)
+            p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+            return (p,), None
+
+        keys = jax.random.split(key, steps)
+        (p,), _ = jax.lax.scan(body, (params,), keys)
+        return p
+
+    # -- per-node upload pipeline --------------------------------------------
+    def _node_update(self, node: int, start_params) -> Tuple[dict, float, float]:
+        """Local train -> delta -> [accumulate/sparsify] -> [ALDP] -> ω_new.
+
+        Returns (uploaded model ω_new, upload_bytes, node accuracy on the
+        cloud testing dataset)."""
+        cfg = self.cfg
+        x, y = self.node_data[node]
+        self.key, k1, k2 = jax.random.split(self.key, 3)
+        local = self._local_train(start_params, x, y, k1)
+        delta = jax.tree.map(lambda a, b: a - b, local, start_params)
+
+        if cfg.sparsify_ratio < 1.0:
+            delta, self.residuals[node], _ = accum.accumulate_and_sparsify(
+                self.residuals[node], delta, cfg.sparsify_ratio)
+            bytes_up = accum.upload_bytes(delta, cfg.sparsify_ratio)
+        else:
+            bytes_up = self.n_params * 4
+
+        if self.sigma > 0:
+            delta, _ = aldp.aldp_perturb(delta, k2, self.sigma, cfg.clip_s)
+            self.accountant.step()
+
+        omega_new = jax.tree.map(lambda a, b: a + b, start_params, delta)
+        acc = float(self.acc_fn(omega_new, *self.cloud_test))
+        return omega_new, bytes_up, acc
+
+    def global_accuracy(self) -> float:
+        return float(self.acc_fn(self.params, *self.test_data))
+
+    # -- schemes ---------------------------------------------------------------
+    def run(self) -> List[RoundRecord]:
+        if self.cfg.mode in ("sfl", "sldpfl"):
+            return self._run_sync()
+        return self._run_async()
+
+    def _comm_time(self, nbytes: float) -> float:
+        return nbytes / self.cfg.bandwidth_bytes_per_s
+
+    def _run_sync(self) -> List[RoundRecord]:
+        """Synchronous FedAvg (barrier per round)."""
+        cfg = self.cfg
+        clock = 0.0
+        for r in range(cfg.rounds):
+            uploads, accs, nbytes = [], [], 0.0
+            for node in range(cfg.n_nodes):
+                w, b, a = self._node_update(node, self.params)
+                uploads.append(w)
+                accs.append(a)
+                nbytes += b
+            accs = jnp.asarray(accs)
+            if cfg.detect:
+                mask, _ = detection.detect(accs, cfg.detect_s)
+            else:
+                mask = jnp.ones(cfg.n_nodes, bool)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *uploads)
+            omega_new = detection.masked_mean(stacked, mask)
+            self.params = async_update.mix(self.params, omega_new, cfg.alpha)
+            comp = float(np.max(self.node_time))          # barrier: slowest node
+            comm = self._comm_time(nbytes / cfg.n_nodes)  # parallel uplinks
+            clock += comp + comm
+            self.history.append(RoundRecord(
+                clock, r, self.global_accuracy(), nbytes, comp, comm,
+                int(cfg.n_nodes - mask.sum())))
+        return self.history
+
+    def _run_async(self) -> List[RoundRecord]:
+        """Asynchronous: event-queue, Eq. (6) mix on every arrival."""
+        cfg = self.cfg
+        version = 0
+        # (arrival_time, node, dispatched_version, seq) heap
+        events = []
+        for node in range(cfg.n_nodes):
+            heapq.heappush(events, (self.node_time[node], node, 0, node))
+        dispatched_params = {n: self.params for n in range(cfg.n_nodes)}
+        total_updates = cfg.rounds * cfg.n_nodes
+        acc_window: List[float] = []
+        seq = cfg.n_nodes
+        processed = 0
+        while processed < total_updates:
+            t, node, v_disp, _ = heapq.heappop(events)
+            w, b, a = self._node_update(node, dispatched_params[node])
+            comm = self._comm_time(b)
+            t_arrive = t + comm
+            acc_window.append(a)
+            acc_window = acc_window[-max(cfg.n_nodes, 4):]
+            rejected = 0
+            if cfg.detect and len(acc_window) >= 4:
+                accs = jnp.asarray(acc_window)
+                thr = detection.detection_threshold(accs, cfg.detect_s)
+                if a <= float(thr):
+                    rejected = 1
+            if not rejected:
+                staleness = version - v_disp
+                if cfg.staleness_adaptive:
+                    self.params = async_update.mix_stale(
+                        self.params, w, cfg.alpha, staleness)
+                else:
+                    self.params = async_update.mix(self.params, w, cfg.alpha)
+                version += 1
+            processed += 1
+            # redispatch node with the fresh global model
+            dispatched_params[node] = self.params
+            heapq.heappush(events,
+                           (t_arrive + self.node_time[node], node, version, seq))
+            seq += 1
+            if processed % cfg.n_nodes == 0:
+                self.history.append(RoundRecord(
+                    t_arrive, version, self.global_accuracy(), b,
+                    float(self.node_time[node]), comm, rejected))
+        return self.history
+
+    # -- reporting --------------------------------------------------------------
+    def kappa(self) -> float:
+        """Eq. (5) over the whole run."""
+        comm = sum(r.comm_time for r in self.history)
+        comp = sum(r.comp_time for r in self.history)
+        return async_update.communication_efficiency(comm, comp)
+
+    def epsilon_spent(self) -> float:
+        return self.accountant.epsilon(self.cfg.delta) if self.sigma > 0 else 0.0

@@ -1,0 +1,3 @@
+from .synthetic import (make_image_dataset, make_token_dataset,   # noqa: F401
+                        partition_dirichlet, partition_iid)
+from .federated import make_federated_image_data                  # noqa: F401

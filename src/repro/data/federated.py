@@ -1,0 +1,41 @@
+"""Federated data assembly: per-node shards + label-flipping adversaries."""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..core.attacks import flip_labels
+from .synthetic import make_image_dataset, partition_dirichlet, partition_iid
+
+
+def make_federated_image_data(
+        seed: int, n_nodes: int, n_malicious: int, *,
+        n_train: int = 4000, n_test: int = 1000, n_cloud_test: int = 500,
+        hw: Tuple[int, int] = (28, 28), ch: int = 1, n_classes: int = 10,
+        flip_src: int = 1, flip_dst: int = 7, iid: bool = True,
+        dirichlet_alpha: float = 0.5):
+    """Returns (node_data, test, cloud_test, malicious_ids).
+
+    The first ``n_malicious`` nodes flip labels src->dst in their local data
+    (the paper's label-flipping attack: MNIST '1'→'7').
+    """
+    x, y = make_image_dataset(seed, n_train + n_test + n_cloud_test,
+                              hw=hw, ch=ch, n_classes=n_classes)
+    x_tr, y_tr = x[:n_train], y[:n_train]
+    x_te, y_te = x[n_train:n_train + n_test], y[n_train:n_train + n_test]
+    x_ct, y_ct = x[n_train + n_test:], y[n_train + n_test:]
+
+    if iid:
+        parts = partition_iid(n_train, n_nodes, seed)
+    else:
+        parts = partition_dirichlet(y_tr, n_nodes, dirichlet_alpha, seed)
+
+    malicious = list(range(n_malicious))
+    node_data = []
+    for node, idx in enumerate(parts):
+        xn, yn = x_tr[idx], y_tr[idx]
+        if node in malicious:
+            yn = np.asarray(flip_labels(yn, flip_src, flip_dst))
+        node_data.append((xn, yn))
+    return node_data, (x_te, y_te), (x_ct, y_ct), malicious

@@ -1,0 +1,91 @@
+"""Fused ALDP perturbation — Pallas TPU kernel.
+
+The paper's node-side hot loop (Eq. 8) is three memory-bound passes in naive
+form: scale-by-clip, sample Gaussian noise, add. This kernel fuses them into
+a single HBM pass over the flattened gradient: each (rows × 1024) VMEM block
+is scaled by the precomputed clip factor and perturbed with Gaussian noise
+generated on-core (pltpu PRNG + Box–Muller), so noise never touches HBM.
+
+The global L2 norm is a separate reduction pass (unavoidable data dependency:
+the clip scale needs the whole-tensor norm before any output element).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 1024
+
+
+def _hash_uniform(seed: jnp.ndarray, stream: int, shape) -> jnp.ndarray:
+    """Counter-based uniform(0,1) from a murmur3-finalizer hash of the
+    per-element index — pure u32 VPU ops, identical on CPU interpret and TPU.
+    (pltpu.prng_random_bits has no CPU-interpret lowering in this jax build.)
+    """
+    rows = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    x = rows * jnp.uint32(shape[1]) + cols
+    x = x + seed.astype(jnp.uint32) * jnp.uint32(2654435761)
+    x = x + jnp.uint32((stream * 0x9E3779B9) & 0xFFFFFFFF)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return (x >> 8).astype(jnp.float32) / jnp.float32(1 << 24)
+
+
+def _kernel(seed_ref, scale_ref, g_ref, o_ref, *, sigma_s: float,
+            block_rows: int):
+    pid = pl.program_id(0)
+    g = g_ref[...].astype(jnp.float32) * scale_ref[0]
+    if sigma_s > 0.0:
+        shape = g.shape
+        blk_seed = seed_ref[0] + pid * 7919
+        # Box–Muller from two independent uniform draws
+        u1 = jnp.maximum(_hash_uniform(blk_seed, 1, shape), 1e-12)
+        u2 = _hash_uniform(blk_seed, 2, shape)
+        r = jnp.sqrt(-2.0 * jnp.log(u1))
+        theta = (2.0 * math.pi) * u2
+        g = g + sigma_s * r * jnp.cos(theta)
+    o_ref[...] = g.astype(o_ref.dtype)
+
+
+def ldp_perturb_flat(flat: jnp.ndarray, seed: jnp.ndarray,
+                     clip_scale: jnp.ndarray, sigma: float, clip_s: float,
+                     *, block_rows: int = 256,
+                     interpret: bool = True) -> jnp.ndarray:
+    """flat (N,) float; seed () int32; clip_scale () float32 = 1/max(1,‖g‖/S).
+
+    Returns clip_scale·flat + N(0, (σS)²) with the same shape/dtype.
+    """
+    n = flat.shape[0]
+    cols = LANE
+    rows_total = -(-n // cols)
+    pad = rows_total * cols - n
+    x = jnp.pad(flat, (0, pad)).reshape(rows_total, cols)
+    nb = -(-rows_total // block_rows)
+    pad_r = nb * block_rows - rows_total
+    if pad_r:
+        x = jnp.pad(x, ((0, pad_r), (0, 0)))
+
+    kernel = functools.partial(_kernel, sigma_s=float(sigma) * float(clip_s),
+                               block_rows=block_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, flat.dtype),
+        interpret=interpret,
+    )(seed.reshape(1).astype(jnp.int32), clip_scale.reshape(1).astype(jnp.float32), x)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q (B, H, Sq, D); k, v (B, KV, Sk, D) -> (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(D))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def ldp_perturb_flat_ref(flat: jnp.ndarray, clip_scale: jnp.ndarray,
+                         noise: jnp.ndarray | None, sigma: float,
+                         clip_s: float) -> jnp.ndarray:
+    """Deterministic part of the LDP kernel: scale + (given) noise."""
+    out = flat.astype(jnp.float32) * clip_scale
+    if noise is not None and sigma > 0:
+        out = out + sigma * clip_s * noise
+    return out.astype(flat.dtype)
+
+
+def sparsify_flat_ref(grad: jnp.ndarray, residual: jnp.ndarray,
+                      threshold: jnp.ndarray):
+    c = grad.astype(jnp.float32) + residual.astype(jnp.float32)
+    keep = jnp.abs(c) >= threshold
+    return (jnp.where(keep, c, 0.0).astype(grad.dtype),
+            jnp.where(keep, 0.0, c).astype(residual.dtype))
+
+
+def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, Bm: jnp.ndarray,
+                 Cm: jnp.ndarray, A: jnp.ndarray):
+    """Sequential Mamba2 (scalar-per-head decay) oracle.
+
+    x (B,L,H,P); dt (B,L,H); Bm, Cm (B,L,N); A (H,).
+    Returns (y (B,L,H,P), h (B,H,P,N))."""
+    B, L, H, P = x.shape
+    N = Bm.shape[2]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp            # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * A[None])   # (B,H)
+        dx = dtt[..., None] * xt         # (B,H,P)
+        h = decay[..., None, None] * h + \
+            jnp.einsum("bn,bhp->bhpn", bt, dx)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h
+
+
+def selective_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, Bm: jnp.ndarray,
+                       Cm: jnp.ndarray, A: jnp.ndarray):
+    """Sequential Mamba1 scan oracle. Shapes as kernels.selective_scan."""
+    B, L, D = x.shape
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                            # (B,D),(B,D),(B,N),(B,N)
+        decay = jnp.exp(dtt[..., None] * A[None])        # (B,D,N)
+        h = decay * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B, D, A.shape[1]), jnp.float32)
+    xs = (x.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), h

@@ -1,0 +1,57 @@
+"""Fused DGC sparsify + residual accumulate — Pallas TPU kernel.
+
+The paper's gradient-accumulation container (§5.1): combined = residual + g;
+elements with |combined| >= threshold are uploaded, the rest stay in the
+residual. Naively that is 4 HBM passes (add, compare, two selects); the
+kernel does one read of (g, residual) and one write of (upload, residual').
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 1024
+
+
+def _kernel(thr_ref, g_ref, r_ref, up_ref, newr_ref):
+    c = g_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    keep = jnp.abs(c) >= thr_ref[0]
+    up_ref[...] = jnp.where(keep, c, 0.0).astype(up_ref.dtype)
+    newr_ref[...] = jnp.where(keep, 0.0, c).astype(newr_ref.dtype)
+
+
+def sparsify_flat(grad: jnp.ndarray, residual: jnp.ndarray,
+                  threshold: jnp.ndarray, *, block_rows: int = 256,
+                  interpret: bool = True):
+    """grad, residual (N,); threshold () f32 -> (upload (N,), residual' (N,))."""
+    n = grad.shape[0]
+    cols = LANE
+    rows_total = -(-n // cols)
+    pad = rows_total * cols - n
+    g = jnp.pad(grad, (0, pad)).reshape(rows_total, cols)
+    r = jnp.pad(residual, (0, pad)).reshape(rows_total, cols)
+    nb = -(-rows_total // block_rows)
+    pad_r = nb * block_rows - rows_total
+    if pad_r:
+        g = jnp.pad(g, ((0, pad_r), (0, 0)))
+        r = jnp.pad(r, ((0, pad_r), (0, 0)))
+
+    up, newr = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct(g.shape, grad.dtype),
+                   jax.ShapeDtypeStruct(g.shape, residual.dtype)],
+        interpret=interpret,
+    )(threshold.reshape(1).astype(jnp.float32), g, r)
+    return up.reshape(-1)[:n], newr.reshape(-1)[:n]

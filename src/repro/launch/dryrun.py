@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination against the production mesh and extract roofline inputs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k [--multi-pod] [--step fed|plain|auto] --out out.json
+
+The XLA_FLAGS line above MUST run before any jax import (device count locks
+on first init) — which is why this is the only entry point that sets it.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from ..configs import get_config, long_context_variant      # noqa: E402
+from ..core.fed_step import FedStepConfig                    # noqa: E402
+from ..launch import roofline as rl                          # noqa: E402
+from ..launch.hlo_cost import analyze_hlo_text               # noqa: E402
+from ..launch.mesh import make_production_mesh               # noqa: E402
+from ..launch.shapes import LONG_SKIP, SHAPES, input_specs   # noqa: E402
+from ..launch.steps import arg_pspecs, dp_axes_for, make_step  # noqa: E402
+from ..sharding.rules import shardings_for                   # noqa: E402
+
+
+def resolve_config(arch: str, shape_name: str, ssm_chunk: int = 0,
+                   seq_parallel: bool = False):
+    cfg = get_config(arch)
+    if shape_name == "long_500k":
+        if arch in LONG_SKIP:
+            return None
+        cfg = long_context_variant(cfg)
+    if ssm_chunk and cfg.ssm is not None:
+        import dataclasses
+        cfg = cfg.replace(ssm=dataclasses.replace(cfg.ssm, chunk=ssm_chunk))
+    if seq_parallel:
+        cfg = cfg.replace(seq_parallel=True)
+    return cfg
+
+
+def build_fcfg(cfg, mesh, local_steps: int = 4) -> FedStepConfig:
+    import numpy as np
+    n_nodes = int(np.prod([mesh.shape[a] for a in dp_axes_for(mesh)]))
+    return FedStepConfig(n_nodes=n_nodes, local_steps=local_steps,
+                         lr=1e-2, alpha=0.5, clip_s=1.0, sigma=1e-3,
+                         detect=True, detect_s=80.0)
+
+
+def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+               step: str = "auto", local_steps: int = 4,
+               keep_hlo: bool = False, ssm_chunk: int = 0,
+               seq_parallel: bool = False) -> dict:
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "status": "ok"}
+    cfg = resolve_config(arch, shape_name, ssm_chunk, seq_parallel)
+    if cfg is None:
+        rec.update(status="skipped",
+                   reason="encoder-decoder: 500k autoregressive transcript "
+                          "decode has no serving analogue (DESIGN.md §5)")
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    shape = SHAPES[shape_name]
+
+    fcfg = build_fcfg(cfg, mesh, local_steps) if shape.kind == "train" else None
+    spec = input_specs(cfg, shape_name, step=step, fcfg=fcfg)
+    kind, args = spec["kind"], spec["args"]
+    rec["step_kind"] = kind
+    dp = dp_axes_for(mesh)
+    pspecs = arg_pspecs(cfg, kind, mesh, args)
+    in_shardings = shardings_for(mesh, pspecs)
+    step_fn = make_step(cfg, kind, fcfg=fcfg,
+                        spmd_axes=dp if kind == "fed_train" else None,
+                        param_shardings=(in_shardings[0]
+                                         if kind == "plain_train" else None))
+
+    from ..sharding.ctx import mesh_context
+    t0 = time.time()
+    with mesh_context(mesh, dp):
+        jitted = jax.jit(step_fn, in_shardings=in_shardings)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    rec["timings"] = {"lower_s": round(t_lower, 2),
+                      "compile_s": round(t_compile, 2)}
+
+    # ---- memory ----
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+        tot = (rec["memory"].get("argument_size_in_bytes", 0)
+               + rec["memory"].get("temp_size_in_bytes", 0))
+        rec["memory"]["per_device_total_gib"] = round(tot / n_dev / 2**30, 3)
+    except Exception as e:                                   # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    # ---- XLA's own cost analysis (counts while bodies ONCE — raw ref) ----
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and
+                k in ("flops", "bytes accessed", "transcendentals",
+                      "optimal_seconds", "utilization")}
+    except Exception as e:                                   # pragma: no cover
+        cost = {"error": str(e)}
+    rec["cost_xla_raw"] = cost
+
+    # ---- trip-count-corrected per-device cost from partitioned HLO ----
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    hc = analyze_hlo_text(hlo)
+    rec["cost"] = {"flops": hc.flops, "bytes": hc.bytes,
+                   "unknown_trip_counts": hc.unknown_trip_counts}
+    rec["collectives"] = {"bytes_by_type": hc.coll_bytes,
+                          "count_by_type": hc.coll_counts,
+                          "total_bytes_per_device": int(hc.total_coll_bytes)}
+    if keep_hlo:
+        rec["hlo_lines"] = hlo.count("\n")
+
+    # ---- roofline ----
+    flops_dev = hc.flops
+    bytes_dev = hc.bytes
+    terms = rl.roofline_terms(flops_dev, bytes_dev, hc.total_coll_bytes)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = rl.model_flops(cfg, kind, tokens)
+    rec["roofline"] = terms
+    rec["roofline"]["model_flops_global"] = mf
+    rec["roofline"]["attention_flops_global"] = rl.attention_flops(
+        cfg, kind, shape.global_batch, shape.seq_len)
+    hlo_flops_global = flops_dev * n_dev
+    rec["roofline"]["hlo_flops_global"] = hlo_flops_global
+    rec["roofline"]["useful_flops_ratio"] = (
+        round(mf / hlo_flops_global, 4) if hlo_flops_global else None)
+
+    # analytic HBM lower bound (TPU-fusion optimistic; XLA-CPU "bytes
+    # accessed" above is the pessimistic upper bound)
+    def _tree_bytes(t):
+        return float(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t)))
+    pb = _tree_bytes(args[0])
+    cb = _tree_bytes(args[2]) if kind in ("prefill", "decode") else 0.0
+    s_eff = shape.seq_len if kind != "decode" else 1
+    act = (cfg.n_layers * shape.global_batch * s_eff * cfg.d_model * 2.0)
+    logits_b = shape.global_batch * s_eff * cfg.vocab * 4.0
+    frac = 1.0
+    if cfg.family == "moe" and kind == "decode":
+        frac = min(1.0, shape.global_batch * cfg.moe.top_k / cfg.moe.n_experts)
+    mem_lb = rl.analytic_memory_bytes(
+        kind, params_bytes=pb, cache_bytes=cb, act_ckpt_bytes=act,
+        logits_bytes=logits_b, n_dev=n_dev, moe_expert_frac=frac)
+    rec["roofline"]["memory_lb_s"] = mem_lb / rl.HBM_BW
+    rec["roofline"]["params_bytes_global"] = pb
+    rec["roofline"]["cache_bytes_global"] = cb
+    dom_lb = {"compute_s": terms["compute_s"],
+              "memory_s": rec["roofline"]["memory_lb_s"],
+              "collective_s": terms["collective_s"]}
+    rec["roofline"]["dominant_lb"] = max(dom_lb, key=dom_lb.get)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--step", default="auto", choices=("auto", "fed", "plain"))
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    try:
+        rec = run_dryrun(args.arch, args.shape, multi_pod=args.multi_pod,
+                         step=args.step, local_steps=args.local_steps,
+                         ssm_chunk=args.ssm_chunk,
+                         seq_parallel=args.seq_parallel)
+    except Exception as e:
+        rec = {"arch": args.arch, "shape": args.shape,
+               "mesh": "2x16x16" if args.multi_pod else "16x16",
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-3000:]}
+    out = json.dumps(rec, indent=2, default=str)
+    print(out)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(out)
+    if rec.get("status") == "error":
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

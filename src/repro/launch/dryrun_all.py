@@ -1,0 +1,85 @@
+"""Run the full dry-run sweep: every (arch × shape × mesh) as a subprocess
+(fresh jax per combo — the forced 512-device init must precede jax import).
+
+  PYTHONPATH=src python -m repro.launch.dryrun_all --out results/dryrun [--multi-pod-too]
+
+Resumable: combos with an existing JSON are skipped.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = ("smollm-360m", "olmo-1b", "qwen1.5-0.5b", "codeqwen1.5-7b",
+         "falcon-mamba-7b", "zamba2-1.2b", "whisper-large-v3",
+         "qwen2-vl-72b", "llama4-scout-17b-a16e", "kimi-k2-1t-a32b")
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, out_dir: str,
+            step: str = "auto", timeout: int = 3600) -> dict:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}.{shape}.{mesh}" + ("" if step == "auto" else f".{step}")
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--step", step, "--out", path]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    t0 = time.time()
+    env = dict(os.environ)
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=timeout, env=env)
+        ok = r.returncode == 0
+    except subprocess.TimeoutExpired:
+        ok = False
+        r = None
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+    else:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh, "status": "error",
+               "error": (r.stdout[-2000:] + r.stderr[-2000:]) if r else
+               f"timeout after {timeout}s"}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+    rec["_wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--multi-pod-too", action="store_true")
+    ap.add_argument("--archs", default=",".join(ARCHS))
+    ap.add_argument("--shapes", default=",".join(SHAPES))
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False] + ([True] if args.multi_pod_too else [])
+    total = ok = 0
+    for multi in meshes:
+        for arch in args.archs.split(","):
+            for shape in args.shapes.split(","):
+                rec = run_one(arch, shape, multi, args.out,
+                              timeout=args.timeout)
+                total += 1
+                status = rec.get("status")
+                ok += status in ("ok", "skipped")
+                dom = rec.get("roofline", {}).get("dominant", "-")
+                print(f"[{ok}/{total}] {arch:24s} {shape:12s} "
+                      f"{'2x16x16' if multi else '16x16':8s} {status:8s} "
+                      f"dom={dom} wall={rec.get('_wall_s', '-')}s",
+                      flush=True)
+    print(f"done: {ok}/{total} ok")
+
+
+if __name__ == "__main__":
+    main()

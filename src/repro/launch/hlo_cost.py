@@ -1,0 +1,346 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE, which
+under-counts scanned layer stacks / local-step loops by the trip count — and
+the printed HLO does not annotate operand types inline, so naive regexes
+cannot size collectives either. This module parses the HLO text properly:
+
+  * builds a per-computation symbol table (instruction -> result shape(s));
+  * walks the call graph from ENTRY, multiplying while bodies by their
+    ``backend_config known_trip_count`` (and falling back to 1 with a
+    warning flag when unknown);
+  * FLOPs: dot (2·prod(result)·prod(contracting)) and convolution
+    (2·prod(result)·prod(kernel)/out_features) — the MXU work. Elementwise
+    flops are not counted (they ride the memory term);
+  * bytes: Σ over instructions of operand + result bytes (XLA's own
+    "bytes accessed" convention), fusion boundaries only;
+  * collective bytes: Σ operand bytes per collective op, by type.
+
+All numbers are PER DEVICE (the input is the per-device partitioned module).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\](?:\{[^}]*\})?")
+
+
+def _shapes_in(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    tot = 0
+    for dt, shape in _shapes_in(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        tot += n * _DTYPE_BYTES[dt]
+    return tot
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    table: Dict[str, str] = field(default_factory=dict)   # name -> result type
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+    unknown_trip_counts: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * mult
+        self.unknown_trip_counts += other.unknown_trip_counts
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_NAME_EQ = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE = re.compile(r"\s*([\w\-]+)\(")
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+
+def _parse_instr(line: str) -> Optional[Tuple[str, str, str, str]]:
+    """-> (name, result_type, opcode, rest-after-opcode-paren) or None.
+
+    Handles tuple result types with arbitrary nesting, e.g.
+      %w = (s32[], (bf16[2,3]{1,0}, f32[4])) while(%t), ...
+    """
+    m = _NAME_EQ.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":            # tuple type: balanced scan
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        rtype = line[i:j + 1]
+        i = j + 1
+    else:                                    # scalar/array type token
+        tm = re.match(r"[a-z]\w*\[[^\]]*\](?:\{[^}]*\})?", line[i:])
+        if not tm:
+            return None
+        rtype = tm.group(0)
+        i += tm.end()
+    om = _OPCODE.match(line[i:])
+    if not om:
+        return None
+    opcode = om.group(1)
+    rest = line[i + om.end():]
+    return name, rtype, opcode, rest
+_CALLS = re.compile(r'(?:body|calls|to_apply)=%?([\w.\-]+)')
+_COND = re.compile(r'condition=%?([\w.\-]+)')
+_OPERAND = re.compile(r'%([\w.\-]+)')
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line or line.lstrip().startswith(("//", "#")):
+            continue
+        if not line.startswith((" ", "\t")) and ("->" in line) and ("{" in line):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_instr(line)
+        if not parsed:
+            continue
+        name, rtype, opcode, rest = parsed
+        # operand names: up to the closing paren at depth 0
+        depth, i = 1, 0
+        while i < len(rest) and depth > 0:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str, attrs = rest[:i - 1], rest[i:]
+        operands = _OPERAND.findall(operand_str)
+        ins = Instr(name, rtype, opcode, operands, attrs, line)
+        cur.instrs.append(ins)
+        cur.table[name] = rtype
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = 1
+    for _, shape in _shapes_in(ins.result_type):
+        for d in shape:
+            out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    if not m or not ins.operands:
+        return 2.0 * out_elems   # fallback
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs_type = comp.table.get(ins.operands[0], "")
+    shapes = _shapes_in(lhs_type)
+    if not shapes:
+        return 2.0 * out_elems
+    lhs_shape = shapes[0][1]
+    k = 1
+    for cd in cdims:
+        if cd < len(lhs_shape):
+            k *= lhs_shape[cd]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = 1
+    for _, shape in _shapes_in(ins.result_type):
+        for d in shape:
+            out_elems *= d
+    if len(ins.operands) >= 2:
+        rhs = _shapes_in(comp.table.get(ins.operands[1], ""))
+        if rhs:
+            kshape = rhs[0][1]
+            kprod = 1
+            for d in kshape:
+                kprod *= d
+            # kernel flops per output element ≈ prod(kernel)/out_features
+            of = kshape[-1] if kshape else 1
+            return 2.0 * out_elems * max(kprod // max(of, 1), 1)
+    return 2.0 * out_elems
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    return sum(_bytes_of(comp.table.get(op, "")) for op in ins.operands)
+
+
+_PARAM_NUM = re.compile(r"parameter\((\d+)\)")
+_SLICING = ("dynamic-slice", "slice", "gather")
+
+
+def _fusion_operand_bytes(ins: Instr, comp: Computation,
+                          comps: Dict[str, "Computation"]) -> int:
+    """Bytes read by a fusion: operands that are only SLICED inside the fused
+    computation contribute their sliced size, not the full array (otherwise
+    scan loops that dynamic-slice their stacked xs every iteration get
+    charged O(trip²) traffic)."""
+    m = _CALLS.search(ins.attrs)
+    inner = comps.get(m.group(1)) if m else None
+    if inner is None:
+        return _operand_bytes(ins, comp)
+    param_by_idx = {}
+    for i2 in inner.instrs:
+        if i2.opcode == "parameter":
+            pm = _PARAM_NUM.search(i2.line)
+            if pm:
+                param_by_idx[int(pm.group(1))] = i2.name
+    total = 0
+    for idx, opname in enumerate(ins.operands):
+        full = _bytes_of(comp.table.get(opname, ""))
+        pname = param_by_idx.get(idx)
+        if pname is None:
+            total += full
+            continue
+        uses = [u for u in inner.instrs if pname in u.operands]
+        if uses and all(u.opcode in _SLICING for u in uses):
+            sliced = sum(_bytes_of(u.result_type) for u in uses)
+            total += min(full, sliced)
+        else:
+            total += full
+    return total
+
+
+def analyze(comps: Dict[str, Computation], name: str,
+            memo: Dict[str, Cost], *, inside_fusion: bool = False) -> Cost:
+    key = name + ("@f" if inside_fusion else "")
+    if key in memo:
+        return memo[key]
+    comp = comps.get(name)
+    cost = Cost()
+    if comp is None:
+        memo[key] = cost
+        return cost
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "after-all"):
+            continue
+        if op == "while":
+            m = _TRIP.search(ins.attrs)
+            trips = int(m.group(1)) if m else 1
+            body = _CALLS.search(ins.attrs)
+            cond = _COND.search(ins.attrs)
+            if not m:
+                cost.unknown_trip_counts += 1
+            if body:
+                cost.add(analyze(comps, body.group(1), memo), trips)
+            if cond:
+                cost.add(analyze(comps, cond.group(1), memo), trips)
+            continue
+        if op in ("call", "conditional"):
+            for target in _CALLS.findall(ins.attrs):
+                cost.add(analyze(comps, target, memo))
+            continue
+        if op == "fusion":
+            m = _CALLS.search(ins.attrs)
+            if m:
+                inner = analyze(comps, m.group(1), memo, inside_fusion=True)
+                cost.flops += inner.flops
+            if not inside_fusion:
+                cost.bytes += (_fusion_operand_bytes(ins, comp, comps)
+                               + _bytes_of(ins.result_type))
+            continue
+        base = None
+        for c in COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base:
+            nb = _operand_bytes(ins, comp)
+            cost.coll_bytes[base] = cost.coll_bytes.get(base, 0.0) + nb
+            cost.coll_counts[base] = cost.coll_counts.get(base, 0.0) + 1
+            cost.bytes += nb + _bytes_of(ins.result_type)
+            continue
+        if op.endswith("-done") or op in ("send", "recv", "send-done",
+                                          "recv-done", "partition-id",
+                                          "replica-id"):
+            continue
+        if op == "dot":
+            cost.flops += _dot_flops(ins, comp)
+        elif op == "convolution":
+            cost.flops += _conv_flops(ins, comp)
+        if not inside_fusion:
+            # Slicing/indexing ops only touch the sliced region, not the full
+            # operand — counting whole operands would inflate scan loops
+            # (which dynamic-slice their stacked xs every iteration) by
+            # O(trip_count). Matches XLA's own bytes-accessed convention.
+            if op in ("dynamic-slice", "slice", "gather"):
+                cost.bytes += 2.0 * _bytes_of(ins.result_type)
+            elif op in ("dynamic-update-slice", "scatter", "scatter-add"):
+                upd = (_bytes_of(comp.table.get(ins.operands[-1], ""))
+                       if ins.operands else 0)
+                cost.bytes += 2.0 * upd
+            else:
+                cost.bytes += _operand_bytes(ins, comp) + _bytes_of(ins.result_type)
+    memo[key] = cost
+    return cost
+
+
+def analyze_hlo_text(text: str) -> Cost:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return Cost()
+    return analyze(comps, entry, {})

@@ -1,0 +1,33 @@
+"""Production meshes. Importing this module never touches jax device state;
+meshes are built inside functions only."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — run "
+            "under launch/dryrun.py which forces 512 host devices")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests/examples)."""
+    import jax
+    from jax.sharding import Mesh
+    n = data * model
+    devices = jax.devices()
+    assert len(devices) >= n, (len(devices), n)
+    return Mesh(np.asarray(devices[:n]).reshape(data, model), ("data", "model"))

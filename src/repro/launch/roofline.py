@@ -1,0 +1,138 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e):
+  peak   = 197 TFLOP/s bf16 per chip
+  hbm_bw = 819 GB/s per chip
+  ici_bw = ~50 GB/s per link
+
+  compute    = HLO_FLOPs / (chips × peak)
+  memory     = HLO_bytes / (chips × hbm_bw)
+  collective = collective_bytes / (chips × ici_bw)
+
+XLA's `cost_analysis()` and the partitioned HLO are *per-device*; we scale by
+the device count so the three terms use the spec's global-numerator form
+(numerically identical to per-device / per-chip-bandwidth).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# e.g.  bf16[16,4096,7168]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> Tuple[Dict[str, int], Dict[str, int]]:
+    """Sums operand bytes of every collective op in (per-device) HLO text.
+
+    Returns (bytes_by_type, count_by_type).
+    """
+    by_type: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(?:\([^)]*\)|\S+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        op = m.group(1)
+        base = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                base = c
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        # operand shapes: everything inside the op's argument parens
+        paren = ls.find("(", ls.find(op))
+        if paren == -1:
+            continue
+        args = ls[paren:ls.find(")", paren) + 1]
+        nbytes = sum(_shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RE.findall(args))
+        by_type[base] = by_type.get(base, 0) + nbytes
+        counts[base] = counts.get(base, 0) + 1
+    return by_type, counts
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, float]:
+    """Seconds per step for each roofline term (per-device form)."""
+    t_compute = flops_per_dev / PEAK_FLOPS
+    t_memory = bytes_per_dev / HBM_BW
+    t_coll = coll_bytes_per_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    total = max(t_compute, t_memory, t_coll)
+    terms["bound_fraction"] = (t_compute / total) if total > 0 else 0.0
+    return terms
+
+
+def model_flops(cfg, shape_kind: str, tokens: int) -> float:
+    """6·N_active·D for training, 2·N_active·D forward-only."""
+    n_active = cfg.active_params()
+    mult = 6.0 if shape_kind in ("train", "fed_train", "plain_train") else 2.0
+    return mult * n_active * tokens
+
+
+def attention_flops(cfg, shape_kind: str, batch: int, seq: int) -> float:
+    """Quadratic attention matmul flops (qkᵀ + pv), global, forward; ×3 for
+    training. Sliding windows cap the effective context."""
+    if cfg.family == "ssm":
+        return 0.0
+    hd = cfg.derived_head_dim()
+    d_att = cfg.n_heads * hd
+    ctx = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    n_attn_layers = cfg.n_layers
+    if cfg.family == "hybrid":
+        n_attn_layers = (cfg.n_layers // cfg.attn_every) if cfg.attn_every else 0
+    # causal-optimal: half the full S×ctx rectangle
+    f = 2.0 * 2.0 * batch * seq * ctx * d_att * n_attn_layers * 0.5
+    if shape_kind in ("train", "fed_train", "plain_train"):
+        f *= 3.0
+    return f
+
+
+def analytic_memory_bytes(kind: str, *, params_bytes: float,
+                          cache_bytes: float, act_ckpt_bytes: float,
+                          logits_bytes: float, n_dev: int,
+                          moe_expert_frac: float = 1.0) -> float:
+    """Per-device HBM-traffic LOWER BOUND (perfect fusion assumption).
+
+    XLA's "bytes accessed" counts every instruction boundary, which grossly
+    overstates HBM traffic relative to a fusing TPU compiler; this bound
+    counts only the irreducible traffic: parameter reads (+grad writes for
+    training), KV/state cache read+write, activation checkpoints, logits.
+    """
+    pb = params_bytes * moe_expert_frac
+    if kind in ("fed_train", "plain_train", "train"):
+        total = 3.0 * params_bytes + 2.0 * act_ckpt_bytes + logits_bytes
+    elif kind == "prefill":
+        total = pb + cache_bytes + act_ckpt_bytes + logits_bytes
+    else:  # decode
+        total = pb + 2.0 * cache_bytes + logits_bytes
+    return total / n_dev

@@ -1,0 +1,114 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for every model input.
+
+``input_specs(cfg, shape_name, ...)`` returns the exact argument pytrees the
+corresponding step function is lowered with — weak-type-correct, shardable,
+and never allocated (ShapeDtypeStruct only).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.fed_step import FedStepConfig
+from ..models import init_cache, init_params
+from ..models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+# long_500k decode for pure full-attention archs uses the sliding-window
+# variant (see configs.registry.long_context_variant); whisper skips it.
+LONG_SKIP = ("whisper-large-v3",)
+
+
+def _lm_batch(cfg: ModelConfig, batch: int, seq: int, *, targets: bool,
+              lead: Tuple[int, ...] = ()) -> dict:
+    """Token batch structs with family extras (patch/frame stubs)."""
+    s_text = seq
+    out: dict = {}
+    if cfg.family == "vlm":
+        s_text = seq - cfg.n_patches
+        out["patches"] = SDS(lead + (batch, cfg.n_patches, cfg.d_model),
+                             jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "audio":
+        out["frames"] = SDS(lead + (batch, cfg.n_audio_frames, cfg.d_model),
+                            jnp.dtype(cfg.compute_dtype))
+    out["tokens"] = SDS(lead + (batch, s_text), jnp.int32)
+    if targets:
+        out["targets"] = SDS(lead + (batch, s_text), jnp.int32)
+    return out
+
+
+def fed_layout(shape: InputShape, n_nodes: int,
+               local_steps: int) -> Tuple[int, int, int]:
+    """(nodes, local_steps, per_node_batch) factorisation of global_batch."""
+    per = shape.global_batch // (n_nodes * local_steps)
+    assert per >= 1, (shape.global_batch, n_nodes, local_steps)
+    return n_nodes, local_steps, per
+
+
+def params_struct(cfg: ModelConfig, key=None):
+    k = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda kk: init_params(cfg, kk), k)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, cache_len: int):
+    C = cache_len
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, C, dtype=jnp.bfloat16))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, *,
+                step: str = "auto", fcfg: Optional[FedStepConfig] = None
+                ) -> dict:
+    """Returns {"args": tuple_of_structs, "kind": str} for the step function.
+
+    step: 'fed' | 'plain' (train shapes), 'auto' picks by shape kind.
+    """
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        if step in ("auto", "fed"):
+            assert fcfg is not None
+            n, h, per = fed_layout(shape, fcfg.n_nodes, fcfg.local_steps)
+            node_batches = _lm_batch(cfg, per, shape.seq_len, targets=True,
+                                     lead=(n, h))
+            eval_batch = _lm_batch(cfg, 2, min(shape.seq_len, 4096),
+                                   targets=True)
+            key = SDS((2,), jnp.uint32)
+            return {"kind": "fed_train",
+                    "args": (params_struct(cfg), node_batches, eval_batch, key)}
+        batch = _lm_batch(cfg, shape.global_batch, shape.seq_len, targets=True)
+        return {"kind": "plain_train",
+                "args": (params_struct(cfg), batch)}
+    if shape.kind == "prefill":
+        batch = _lm_batch(cfg, shape.global_batch, shape.seq_len, targets=False)
+        cache_len = min(shape.seq_len, cfg.sliding_window) \
+            if cfg.sliding_window else shape.seq_len
+        cache = cache_struct(cfg, shape.global_batch, cache_len)
+        return {"kind": "prefill",
+                "args": (params_struct(cfg), batch, cache)}
+    # decode
+    cache_len = min(shape.seq_len, cfg.sliding_window) \
+        if cfg.sliding_window else shape.seq_len
+    cache = cache_struct(cfg, shape.global_batch, cache_len)
+    tokens = SDS((shape.global_batch, 1), jnp.int32)
+    return {"kind": "decode",
+            "args": (params_struct(cfg), tokens, cache)}

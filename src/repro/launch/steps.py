@@ -1,0 +1,96 @@
+"""Step functions (train / fed-train / prefill / decode) bound to a config,
+plus the sharding assignment used by both the dry-run and real launchers."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.fed_step import FedStepConfig, fed_train_step
+from ..models import decode_step, loss_fn, prefill
+from ..models.config import ModelConfig
+from ..optim import SGD
+from ..sharding import (batch_pspec, cache_pspecs, fed_batch_pspec,
+                        param_pspecs)
+
+BIG_ARCHS = ("kimi-k2-1t-a32b", "qwen2-vl-72b")   # FSDP over (pod, data)
+
+
+def fsdp_axes_for(cfg: ModelConfig, mesh) -> tuple:
+    axes = ("pod", "data") if (cfg.name in BIG_ARCHS and "pod" in mesh.shape) \
+        else ("data",)
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def dp_axes_for(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def make_step(cfg: ModelConfig, kind: str, *,
+              fcfg: Optional[FedStepConfig] = None, lr: float = 1e-2,
+              spmd_axes=None, param_shardings=None):
+    """Returns step_fn(*args) matching launch.shapes.input_specs(kind)."""
+    model_loss = lambda p, b: loss_fn(p, cfg, b)
+
+    if kind == "fed_train":
+        acc_fn = lambda p, b: loss_fn(p, cfg, b)[1]["accuracy"]
+
+        def step(params, node_batches, eval_batch, key):
+            return fed_train_step(params, node_batches, eval_batch, key,
+                                  loss_fn=model_loss, acc_fn=acc_fn,
+                                  fcfg=fcfg, spmd_axes=spmd_axes)
+        return step
+
+    if kind == "plain_train":
+        opt = SGD(lr=lr)
+
+        def step(params, batch):
+            (l, aux), g = jax.value_and_grad(model_loss, has_aux=True)(params, batch)
+            if param_shardings is not None:
+                # pin grads to the param sharding => one reduce-scatter-class
+                # sync per tensor instead of repeated in-loop all-reduces
+                g = jax.lax.with_sharding_constraint(g, param_shardings)
+            params, _ = opt.update(params, g, ())
+            return params, l
+        return step
+
+    if kind == "prefill":
+        def step(params, batch, cache):
+            return prefill(params, cfg, batch, cache)
+        return step
+
+    if kind == "decode":
+        def step(params, tokens, cache):
+            return decode_step(params, cfg, tokens, cache)
+        return step
+
+    raise ValueError(kind)
+
+
+def arg_pspecs(cfg: ModelConfig, kind: str, mesh, args) -> Tuple:
+    """PartitionSpecs for the step args (same structure as args)."""
+    fsdp = fsdp_axes_for(cfg, mesh)
+    dp = dp_axes_for(mesh)
+    if kind == "fed_train":
+        params, node_batches, eval_batch, key = args
+        return (param_pspecs(mesh, params, fsdp),
+                fed_batch_pspec(mesh, node_batches, dp),
+                jax.tree.map(lambda _: jax.sharding.PartitionSpec(), eval_batch),
+                jax.sharding.PartitionSpec())
+    if kind == "plain_train":
+        params, batch = args
+        return (param_pspecs(mesh, params, fsdp),
+                batch_pspec(mesh, batch, dp))
+    if kind == "prefill":
+        params, batch, cache = args
+        return (param_pspecs(mesh, params, fsdp),
+                batch_pspec(mesh, batch, dp),
+                cache_pspecs(mesh, cache, dp))
+    if kind == "decode":
+        params, tokens, cache = args
+        return (param_pspecs(mesh, params, fsdp),
+                batch_pspec(mesh, tokens, dp),
+                cache_pspecs(mesh, cache, dp))
+    raise ValueError(kind)

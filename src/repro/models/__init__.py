@@ -1,0 +1,4 @@
+"""Model zoo: unified functional model builder over six architecture families."""
+from .config import ModelConfig, MoEConfig, SSMConfig          # noqa: F401
+from .model import (decode_step, forward, init_cache, init_params,  # noqa: F401
+                    loss_fn, prefill)

@@ -1,0 +1,178 @@
+"""GQA attention: blocked (q-chunked) softmax for long sequences, KV-cache decode.
+
+The pure-jnp path never materialises the full (Sq, Sk) score matrix for the
+whole sequence at once — it scans over query chunks, which keeps peak memory
+at ``B * H * chunk * Sk`` per layer and lowers cleanly under pjit on any
+backend. The Pallas flash-attention kernel (repro.kernels.flash_attention) is
+an opt-in drop-in for real TPU runs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.ctx import constrain_batch
+from .layers import init_linear, linear_fwd
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, qkv_bias: bool = False,
+                   dtype: str = "float32") -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(kq, d_model, n_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wk": init_linear(kk, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wv": init_linear(kv, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wo": init_linear(ko, n_heads * head_dim, d_model, dtype=dtype),
+    }
+
+
+def qkv(p: dict, x: jnp.ndarray, n_heads: int, n_kv_heads: int, head_dim: int
+        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B, S, _ = x.shape
+    q = linear_fwd(p["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = linear_fwd(p["wk"], x).reshape(B, S, n_kv_heads, head_dim)
+    v = linear_fwd(p["wv"], x).reshape(B, S, n_kv_heads, head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Blocked multi-query attention core
+# ---------------------------------------------------------------------------
+
+def _attend_chunk(qc: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  qpos: jnp.ndarray, kpos: jnp.ndarray,
+                  causal: bool, window: int) -> jnp.ndarray:
+    """qc (B, C, H, D); k,v (B, Sk, KV, D); qpos (C,), kpos (Sk,)."""
+    B, C, H, D = qc.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = qc.reshape(B, C, KV, G, D)
+    scores = jnp.einsum("bckgd,bskd->bkgcs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(D))
+    mask = jnp.ones((C, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(qc.dtype)
+    out = jnp.einsum("bkgcs,bskd->bckgd", probs, v)
+    return out.reshape(B, C, H, D)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: int = 0, q_offset: int = 0,
+              chunk: int = 512, causal_skip: bool = True) -> jnp.ndarray:
+    """Full attention over (possibly long) sequences, q-chunked.
+
+    q (B, Sq, H, D); k, v (B, Sk, KV, D) with H % KV == 0. Returns (B, Sq, H, D).
+
+    When ``causal_skip`` (and the shapes allow it), q-chunks run as an
+    UNROLLED loop where chunk i only reads keys [0 : (i+1)·chunk] — a static
+    slice per chunk, so fully-masked key blocks are never computed. This
+    halves attention flops vs the scan path, which must use the full key
+    length every iteration (lax.scan cannot carry dynamic shapes). The scan
+    path remains for windowed / offset cases.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    kpos = jnp.arange(Sk)
+    if Sq <= chunk:
+        qpos = q_offset + jnp.arange(Sq)
+        return _attend_chunk(q, k, v, qpos, kpos, causal, window)
+    n = -(-Sq // chunk)
+    pad = n * chunk - Sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    # keep batch sharded across the loop boundary (XLA propagation can drop
+    # the batch sharding of loop-carried operands — see sharding/ctx.py)
+    k = constrain_batch(k, 0)
+    v = constrain_batch(v, 0)
+
+    if causal and causal_skip and window == 0 and q_offset == 0 and Sq == Sk:
+        # causal block skipping: chunk i attends keys [0:(i+1)·chunk] only.
+        # Cap the unroll at 16 blocks so the HLO stays compact.
+        chunk_u = chunk
+        while -(-Sq // chunk_u) > 16:
+            chunk_u *= 2
+        n_u = -(-Sq // chunk_u)
+        pad_u = n_u * chunk_u - Sq
+        qp = jnp.pad(q, ((0, 0), (0, pad_u), (0, 0), (0, 0))) if pad_u else q
+        qp4 = qp.reshape(B, n_u, chunk_u, H, D)
+        outs = []
+        for i in range(n_u):
+            hi = min((i + 1) * chunk_u, Sk)
+            qpos = i * chunk_u + jnp.arange(chunk_u)
+            o = _attend_chunk(qp4[:, i], k[:, :hi], v[:, :hi], qpos,
+                              kpos[:hi], True, 0)
+            outs.append(constrain_batch(o, 0))
+        out = jnp.concatenate(outs, axis=1)
+        return out[:, :Sq]
+
+    qp = qp.reshape(B, n, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    qp = constrain_batch(qp, 1)
+
+    def body(carry, inp):
+        i, qc = inp
+        qpos = q_offset + i * chunk + jnp.arange(chunk)
+        o = constrain_batch(_attend_chunk(qc, k, v, qpos, kpos, causal, window), 0)
+        return carry, o
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n), qp))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n * chunk, H, D)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# KV cache (supports ring-buffer sliding window)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, cache_len: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), dtype=dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), dtype=dtype),
+        # number of tokens written so far (scalar int32)
+        "idx": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def cache_write(cache: dict, k_new: jnp.ndarray, v_new: jnp.ndarray) -> dict:
+    """Append S_new tokens; ring-buffer wraps when the cache is full."""
+    C = cache["k"].shape[1]
+    S_new = k_new.shape[1]
+    start = jnp.mod(cache["idx"], C)
+    idxs = jnp.mod(start + jnp.arange(S_new), C)
+    k = cache["k"].at[:, idxs].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[:, idxs].set(v_new.astype(cache["v"].dtype))
+    return {"k": k, "v": v, "idx": cache["idx"] + S_new}
+
+
+def decode_attend(q: jnp.ndarray, cache: dict, *, window: int = 0) -> jnp.ndarray:
+    """One-token attention against the cache. q (B, 1, H, D) -> (B, 1, H, D).
+
+    All cached entries are in the past, so no ordering mask is needed beyond
+    validity; sliding windows are enforced by the ring buffer size itself
+    (cache_len == window) plus the validity mask.
+    """
+    B, one, H, D = q.shape
+    k, v, idx = cache["k"], cache["v"], cache["idx"]
+    C = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(D))
+    valid = jnp.arange(C) < jnp.minimum(idx, C)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v)
+    return out.reshape(B, 1, H, D)

@@ -1,0 +1,65 @@
+"""The paper's edge model: CNN with 2 convolutional layers + 1 FC layer.
+
+Used for the MNIST/CIFAR-style federated experiments (paper §6.1: "a simple
+deep learning model (i.e., CNN with 2 convolutional layers followed by 1
+fully connected layer)"). Pure JAX; params are a pytree so every core
+mechanism (ALDP, detection, async mixing) applies unchanged.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_cnn(key, in_hw: Tuple[int, int] = (28, 28), in_ch: int = 1,
+             n_classes: int = 10, c1: int = 16, c2: int = 32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    h, w = in_hw
+    # two stride-2 3x3 convs (SAME) halve each spatial dim twice
+    fh, fw = -(-h // 4), -(-w // 4)
+    return {
+        "conv1": {"w": jax.random.normal(k1, (3, 3, in_ch, c1)) * (1.0 / np.sqrt(9 * in_ch)),
+                  "b": jnp.zeros((c1,))},
+        "conv2": {"w": jax.random.normal(k2, (3, 3, c1, c2)) * (1.0 / np.sqrt(9 * c1)),
+                  "b": jnp.zeros((c2,))},
+        "fc": {"w": jax.random.normal(k3, (fh * fw * c2, n_classes)) * (1.0 / np.sqrt(fh * fw * c2)),
+               "b": jnp.zeros((n_classes,))},
+    }
+
+
+def cnn_forward(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x (B, H, W, C) -> logits (B, n_classes)."""
+    def conv(p, h, stride):
+        out = jax.lax.conv_general_dilated(
+            h, p["w"].astype(h.dtype), window_strides=(stride, stride),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return out + p["b"].astype(h.dtype)
+
+    h = jax.nn.relu(conv(params["conv1"], x, 2))
+    h = jax.nn.relu(conv(params["conv2"], h, 2))
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["fc"]["w"].astype(h.dtype) + params["fc"]["b"].astype(h.dtype)
+
+
+def cnn_loss(params: dict, batch: dict) -> Tuple[jnp.ndarray, dict]:
+    logits = cnn_forward(params, batch["x"])
+    labels = batch["y"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return nll, {"accuracy": acc}
+
+
+def cnn_accuracy(params: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return (cnn_forward(params, x).argmax(-1) == y).mean()
+
+
+def per_class_accuracy(params: dict, x: jnp.ndarray, y: jnp.ndarray,
+                       cls: int) -> jnp.ndarray:
+    """Accuracy restricted to one class (the paper's 'special task')."""
+    pred = cnn_forward(params, x).argmax(-1)
+    sel = (y == cls)
+    return jnp.where(sel, pred == y, 0).sum() / jnp.maximum(sel.sum(), 1)

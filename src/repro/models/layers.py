@@ -1,0 +1,160 @@
+"""Primitive layers: linear, norms, rotary embeddings, MLPs.
+
+All layers are functional: ``init_*`` returns a param pytree (nested dict of
+jnp arrays), ``*_fwd`` applies it. Params are created in ``param_dtype`` and
+cast to ``compute_dtype`` inside forward functions by the caller.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False,
+                dtype: str = "float32", scale: Optional[float] = None) -> dict:
+    if scale is None:
+        scale = 1.0 / np.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    p = {"w": w.astype(_dtype(dtype))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=_dtype(dtype))
+    return p
+
+
+def linear_fwd(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int, dtype: str = "float32") -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype=_dtype(dtype))}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype=_dtype(dtype)),
+                "bias": jnp.zeros((d,), dtype=_dtype(dtype))}
+    if kind == "nonparam_ln":   # OLMo-style non-parametric LayerNorm
+        return {}
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+def norm_fwd(kind: str, p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim//2,)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> jnp.ndarray:
+    """positions (..., S) -> angles (..., S, head_dim//2)."""
+    inv = rope_freqs(head_dim, theta)
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def mrope_angles(positions3: jnp.ndarray, head_dim: int, theta: float,
+                 sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """M-RoPE: positions3 (3, B, S) (t, h, w ids) -> (B, S, head_dim//2).
+
+    The half-dim is split into contiguous sections rotated by the t/h/w
+    position ids respectively (Qwen2-VL §2.1).
+    """
+    half = head_dim // 2
+    tot = sum(sections)
+    sizes = [half * s // tot for s in sections]
+    sizes[0] += half - sum(sizes)
+    inv = rope_freqs(head_dim, theta)
+    ang_t = positions3[0][..., None].astype(jnp.float32) * inv
+    ang_h = positions3[1][..., None].astype(jnp.float32) * inv
+    ang_w = positions3[2][..., None].astype(jnp.float32) * inv
+    s0, s1, s2 = sizes
+    return jnp.concatenate(
+        [ang_t[..., :s0], ang_h[..., s0:s0 + s1], ang_w[..., s0 + s1:]], axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x (B, S, H, D), angles (B, S, D//2) or (S, D//2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    if angles.ndim == 2:
+        angles = angles[None]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, kind: str = "swiglu",
+             dtype: str = "float32") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": init_linear(k1, d, d_ff, dtype=dtype),
+            "w_up": init_linear(k2, d, d_ff, dtype=dtype),
+            "w_down": init_linear(k3, d_ff, d, dtype=dtype),
+        }
+    return {
+        "w_up": init_linear(k1, d, d_ff, dtype=dtype),
+        "w_down": init_linear(k2, d_ff, d, dtype=dtype),
+    }
+
+
+def mlp_fwd(kind: str, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if kind == "swiglu":
+        g = linear_fwd(p["w_gate"], x)
+        u = linear_fwd(p["w_up"], x)
+        return linear_fwd(p["w_down"], jax.nn.silu(g) * u)
+    h = jax.nn.gelu(linear_fwd(p["w_up"], x))
+    return linear_fwd(p["w_down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype: str = "float32") -> dict:
+    w = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+    return {"w": w.astype(_dtype(dtype))}
+
+
+def embed_fwd(p: dict, tokens: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return jnp.take(p["w"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed_fwd(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"].astype(x.dtype).T

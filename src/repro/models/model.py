@@ -1,0 +1,600 @@
+"""Unified model builder for all six architecture families.
+
+Public API (all functional, params are pytrees):
+
+  init_params(cfg, key)                      -> params
+  forward(params, cfg, batch)                -> (logits, aux_loss)
+  loss_fn(params, cfg, batch)                -> (loss, metrics)
+  init_cache(cfg, batch, cache_len, dtype)   -> cache
+  prefill(params, cfg, batch, cache)         -> (logits, cache)
+  decode_step(params, cfg, tokens, cache)    -> (logits, cache)
+
+`batch` is a dict: tokens (B,S) int32, targets (B,S) int32 (optional for
+inference), plus family extras: patches (B,P,d) for vlm, frames (B,F,d) for
+audio. Layer stacks are scanned (stacked params) for compact HLO; blocks are
+rematerialised in training when cfg.remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import ctx
+from . import attention as attn
+from . import ssm
+from .config import ModelConfig
+from .layers import (apply_rope, embed_fwd, init_embedding, init_mlp,
+                     init_norm, linear_fwd, mlp_fwd, mrope_angles, norm_fwd,
+                     rope_angles, unembed_fwd)
+from .moe import init_moe, moe_fwd
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _init_transformer_block(key, cfg: ModelConfig, kind: str) -> dict:
+    """kind: 'dense' | 'moe' | 'enc' | 'dec_cross'."""
+    hd = cfg.derived_head_dim()
+    keys = jax.random.split(key, 6)
+    p = {
+        "norm1": init_norm(cfg.norm, cfg.d_model, cfg.param_dtype),
+        "attn": attn.init_attention(keys[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, hd, cfg.qkv_bias,
+                                    cfg.param_dtype),
+        "norm2": init_norm(cfg.norm, cfg.d_model, cfg.param_dtype),
+    }
+    if kind == "moe":
+        p["moe"] = init_moe(keys[1], cfg, cfg.param_dtype)
+    else:
+        p["mlp"] = init_mlp(keys[1], cfg.d_model, cfg.d_ff, cfg.mlp,
+                            cfg.param_dtype)
+    if kind == "dec_cross":
+        p["norm_x"] = init_norm(cfg.norm, cfg.d_model, cfg.param_dtype)
+        p["cross"] = attn.init_attention(keys[2], cfg.d_model, cfg.n_heads,
+                                         cfg.n_kv_heads, hd, cfg.qkv_bias,
+                                         cfg.param_dtype)
+    return p
+
+
+def _init_mamba_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    init = ssm.init_mamba1 if cfg.ssm.kind == "mamba1" else ssm.init_mamba2
+    return {"norm": init_norm(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "mixer": init(k1, cfg, cfg.param_dtype)}
+
+
+def _ffn(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if "moe" in p:
+        return moe_fwd(p["moe"], cfg, x)
+    return mlp_fwd(cfg.mlp, p["mlp"], x), jnp.zeros((), jnp.float32)
+
+
+def _transformer_block_fwd(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                           angles: Optional[jnp.ndarray], *, causal: bool,
+                           window: int, enc_out: Optional[jnp.ndarray] = None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    hd = cfg.derived_head_dim()
+    h = norm_fwd(cfg.norm, p["norm1"], x, cfg.norm_eps)
+    q, k, v = attn.qkv(p["attn"], h, cfg.n_heads, cfg.n_kv_heads, hd)
+    if angles is not None:
+        q, k = apply_rope(q, angles), apply_rope(k, angles)
+    if cfg.use_flash and causal:
+        from ..kernels.flash_attention import flash_attention
+        o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=True,
+                            window=window).transpose(0, 2, 1, 3)
+    else:
+        o = attn.attention(q, k, v, causal=causal, window=window,
+                           chunk=cfg.attn_chunk)
+    B, S = x.shape[:2]
+    x = x + linear_fwd(p["attn"]["wo"], o.reshape(B, S, -1))
+    if enc_out is not None:
+        h = norm_fwd(cfg.norm, p["norm_x"], x, cfg.norm_eps)
+        q2, _, _ = attn.qkv(p["cross"], h, cfg.n_heads, cfg.n_kv_heads, hd)
+        _, k2, v2 = attn.qkv(p["cross"], enc_out, cfg.n_heads, cfg.n_kv_heads, hd)
+        o2 = attn.attention(q2, k2, v2, causal=False, window=0,
+                            chunk=cfg.attn_chunk)
+        x = x + linear_fwd(p["cross"]["wo"], o2.reshape(B, S, -1))
+    h = norm_fwd(cfg.norm, p["norm2"], x, cfg.norm_eps)
+    y, aux = _ffn(p, cfg, h)
+    return x + y, aux
+
+
+def _mamba_block_fwd(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                     state: Optional[dict] = None) -> Tuple[jnp.ndarray, dict]:
+    h = norm_fwd(cfg.norm, p["norm"], x, cfg.norm_eps)
+    fwd = ssm.mamba1_fwd if cfg.ssm.kind == "mamba1" else ssm.mamba2_fwd
+    y, new_state = fwd(p["mixer"], cfg, h, state)
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Param init
+# ---------------------------------------------------------------------------
+
+def _stacked_init(fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(keys[1], cfg.vocab, cfg.d_model,
+                                           cfg.param_dtype)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["blocks"] = _stacked_init(
+            lambda k: _init_transformer_block(k, cfg, "dense"), keys[2], cfg.n_layers)
+    elif fam == "moe":
+        params["blocks"] = _stacked_init(
+            lambda k: _init_transformer_block(k, cfg, "moe"), keys[2], cfg.n_layers)
+    elif fam == "ssm":
+        params["blocks"] = _stacked_init(
+            lambda k: _init_mamba_block(k, cfg), keys[2], cfg.n_layers)
+    elif fam == "hybrid":
+        params["blocks"] = _stacked_init(
+            lambda k: _init_mamba_block(k, cfg), keys[2], cfg.n_layers)
+        params["shared_attn"] = _init_transformer_block(keys[3], cfg, "dense")
+    elif fam == "audio":
+        params["blocks"] = _stacked_init(
+            lambda k: _init_transformer_block(k, cfg, "dec_cross"), keys[2],
+            cfg.n_layers)
+        params["encoder"] = {
+            "blocks": _stacked_init(
+                lambda k: _init_transformer_block(k, cfg, "enc"), keys[4],
+                cfg.encoder_layers),
+            "final_norm": init_norm(cfg.norm, cfg.d_model, cfg.param_dtype),
+        }
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Position / rope helpers
+# ---------------------------------------------------------------------------
+
+def _angles_for(cfg: ModelConfig, positions: jnp.ndarray) -> Optional[jnp.ndarray]:
+    if cfg.rope_mode == "none":
+        return None
+    hd = cfg.derived_head_dim()
+    if cfg.rope_mode == "mrope":
+        # positions (B, S) text-style -> identical t/h/w sections
+        p3 = jnp.stack([positions, positions, positions])
+        return mrope_angles(p3, hd, cfg.rope_theta, cfg.mrope_sections)
+    return rope_angles(positions, hd, cfg.rope_theta)
+
+
+def _vlm_angles(cfg: ModelConfig, B: int, P: int, S_text: int) -> jnp.ndarray:
+    """M-RoPE ids: patches at t=0 on an (gh, gw) grid, then text linear."""
+    gh, gw = cfg.patch_grid
+    hd = cfg.derived_head_dim()
+    rows = jnp.arange(P) // gw
+    cols = jnp.arange(P) % gw
+    t_p = jnp.zeros((P,), jnp.int32)
+    base = int(max(cfg.patch_grid))
+    t_t = base + jnp.arange(S_text)
+    pos_t = jnp.concatenate([t_p, t_t])
+    pos_h = jnp.concatenate([rows, t_t])
+    pos_w = jnp.concatenate([cols, t_t])
+    p3 = jnp.stack([pos_t, pos_h, pos_w])[:, None, :].repeat(B, axis=1)
+    return mrope_angles(p3, hd, cfg.rope_theta, cfg.mrope_sections)
+
+
+# ---------------------------------------------------------------------------
+# Forward (teacher-forcing / training)
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(blocks, body, x, aux0=None, seq_parallel: bool = False):
+    aux0 = jnp.zeros((), jnp.float32) if aux0 is None else aux0
+
+    def pin(h):
+        h = ctx.constrain_batch(h, 0)
+        if seq_parallel:
+            h = ctx.constrain_axis(h, 1, "model")
+        return h
+
+    def f(carry, p_layer):
+        x, aux = carry
+        x, a = body(p_layer, x)
+        return (pin(x), aux + a), None
+
+    (x, aux), _ = jax.lax.scan(f, (pin(x), aux0), blocks)
+    return x, aux
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    x = embed_fwd(params["embed"], tokens, cdt)
+    fam = cfg.family
+    window = cfg.sliding_window
+    enc_out = None
+    angles = None
+
+    if fam == "vlm":
+        patches = batch["patches"].astype(cdt)
+        P = patches.shape[1]
+        x = jnp.concatenate([patches, x], axis=1)
+        angles = _vlm_angles(cfg, B, P, S_text)
+    elif fam == "audio":
+        frames = batch["frames"].astype(cdt)
+        Fa = frames.shape[1]
+        enc_angles = _angles_for(cfg, jnp.arange(Fa)[None].repeat(B, 0))
+        enc_body = lambda p, h: _transformer_block_fwd(
+            p, cfg, h, enc_angles, causal=False, window=0)
+        if cfg.remat:
+            enc_body = jax.checkpoint(enc_body)
+        enc_out, _ = _scan_blocks(params["encoder"]["blocks"], enc_body, frames)
+        enc_out = norm_fwd(cfg.norm, params["encoder"]["final_norm"], enc_out,
+                           cfg.norm_eps)
+        angles = _angles_for(cfg, jnp.arange(S_text)[None].repeat(B, 0))
+    elif fam in ("dense", "moe"):
+        angles = _angles_for(cfg, jnp.arange(S_text)[None].repeat(B, 0))
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        body = lambda p, h: _transformer_block_fwd(
+            p, cfg, h, angles, causal=True, window=window, enc_out=enc_out)
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, aux = _scan_blocks(params["blocks"], body, x,
+                              seq_parallel=cfg.seq_parallel)
+    elif fam == "ssm":
+        body = lambda p, h: (_mamba_block_fwd(p, cfg, h)[0], jnp.zeros((), jnp.float32))
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, aux = _scan_blocks(params["blocks"], body, x)
+    elif fam == "hybrid":
+        x, aux = _hybrid_forward(params, cfg, x)
+    else:
+        raise ValueError(fam)
+
+    if fam == "vlm":
+        x = x[:, -S_text:]
+    x = norm_fwd(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed_fwd(head, x)
+    return logits, aux
+
+
+def _hybrid_groups(cfg: ModelConfig):
+    """[(start, size), ...] with shared attention after every full group."""
+    per = cfg.attn_every if cfg.attn_every else cfg.n_layers
+    groups = []
+    i = 0
+    while i < cfg.n_layers:
+        size = min(per, cfg.n_layers - i)
+        groups.append((i, size))
+        i += size
+    return groups
+
+
+def _slice_stack(stack, start: int, size: int):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + size, axis=0),
+                        stack)
+
+
+def _hybrid_forward(params: dict, cfg: ModelConfig, x: jnp.ndarray):
+    B, S = x.shape[:2]
+    angles = _angles_for(cfg, jnp.arange(S)[None].repeat(B, 0))
+    body = lambda p, h: (_mamba_block_fwd(p, cfg, h)[0], jnp.zeros((), jnp.float32))
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    aux = jnp.zeros((), jnp.float32)
+    for gi, (start, size) in enumerate(_hybrid_groups(cfg)):
+        blocks = _slice_stack(params["blocks"], start, size)
+        x, a = _scan_blocks(blocks, body, x)
+        aux = aux + a
+        if cfg.attn_every and (start + size) % cfg.attn_every == 0:
+            x, a2 = _transformer_block_fwd(params["shared_attn"], cfg, x,
+                                           angles, causal=True,
+                                           window=cfg.sliding_window)
+            aux = aux + a2
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict
+            ) -> Tuple[jnp.ndarray, dict]:
+    logits, aux = forward(params, cfg, batch)
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = nll.size
+    ce = nll.sum() / denom
+    aux_w = cfg.moe.aux_loss_weight if cfg.moe else 0.0
+    loss = ce + aux_w * aux / max(cfg.n_layers, 1)
+    acc = (logits.argmax(-1) == targets)
+    if mask is not None:
+        acc = (acc * mask).sum() / denom
+    else:
+        acc = acc.mean()
+    return loss, {"ce": ce, "aux": aux, "accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    hd = cfg.derived_head_dim()
+    fam = cfg.family
+    C = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+
+    def kv_stack(n, length):
+        return {
+            "k": jnp.zeros((n, batch, length, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((n, batch, length, cfg.n_kv_heads, hd), dtype),
+            "idx": jnp.zeros((n,), jnp.int32),
+        }
+
+    if fam in ("dense", "moe", "vlm"):
+        cache["kv"] = kv_stack(cfg.n_layers, C)
+    elif fam == "audio":
+        cache["kv"] = kv_stack(cfg.n_layers, C)
+        cache["cross"] = {
+            "k": jnp.zeros((cfg.n_layers, batch, cfg.n_audio_frames,
+                            cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, cfg.n_audio_frames,
+                            cfg.n_kv_heads, hd), dtype),
+        }
+    elif fam == "ssm":
+        st = ssm.init_mamba1_state(cfg, batch)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), st)
+    elif fam == "hybrid":
+        st = ssm.init_mamba2_state(cfg, batch)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), st)
+        n_attn = sum(1 for (s, z) in _hybrid_groups(cfg)
+                     if cfg.attn_every and (s + z) % cfg.attn_every == 0)
+        cache["attn"] = kv_stack(max(n_attn, 1), C)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def _attn_block_with_cache(p, cfg: ModelConfig, x, angles, cache_layer,
+                           enc_out=None, cross_cache=None, decode=False):
+    """Runs one transformer block, reading/writing the layer KV cache."""
+    hd = cfg.derived_head_dim()
+    B, S = x.shape[:2]
+    h = norm_fwd(cfg.norm, p["norm1"], x, cfg.norm_eps)
+    q, k, v = attn.qkv(p["attn"], h, cfg.n_heads, cfg.n_kv_heads, hd)
+    if angles is not None:
+        q, k = apply_rope(q, angles), apply_rope(k, angles)
+    cache_layer = attn.cache_write(cache_layer, k, v)
+    if decode:
+        o = attn.decode_attend(q, cache_layer, window=cfg.sliding_window)
+    else:
+        o = attn.attention(q, k, v, causal=True, window=cfg.sliding_window,
+                           chunk=cfg.attn_chunk)
+    x = x + linear_fwd(p["attn"]["wo"], o.reshape(B, S, -1))
+    if cross_cache is not None:
+        h = norm_fwd(cfg.norm, p["norm_x"], x, cfg.norm_eps)
+        q2 = linear_fwd(p["cross"]["wq"], h).reshape(B, S, cfg.n_heads, hd)
+        kc, vc = cross_cache["k"], cross_cache["v"]
+        o2 = attn.decode_attend(
+            q2, {"k": kc, "v": vc,
+                 "idx": jnp.asarray(kc.shape[1], jnp.int32)}) if decode else \
+            attn.attention(q2, kc.astype(x.dtype), vc.astype(x.dtype),
+                           causal=False, chunk=cfg.attn_chunk)
+        x = x + linear_fwd(p["cross"]["wo"], o2.reshape(B, S, -1))
+    h = norm_fwd(cfg.norm, p["norm2"], x, cfg.norm_eps)
+    y, _ = _ffn(p, cfg, h)
+    return x + y, cache_layer
+
+
+def _encode_audio(params, cfg: ModelConfig, frames):
+    B, Fa = frames.shape[:2]
+    enc_angles = _angles_for(cfg, jnp.arange(Fa)[None].repeat(B, 0))
+    enc_body = lambda p, h: _transformer_block_fwd(
+        p, cfg, h, enc_angles, causal=False, window=0)
+    enc_out, _ = _scan_blocks(params["encoder"]["blocks"], enc_body, frames)
+    return norm_fwd(cfg.norm, params["encoder"]["final_norm"], enc_out,
+                    cfg.norm_eps)
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict
+            ) -> Tuple[jnp.ndarray, dict]:
+    """Consume the prompt, fill caches, return last-position logits."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    x = embed_fwd(params["embed"], tokens, cdt)
+    fam = cfg.family
+    angles = None
+
+    if fam == "vlm":
+        patches = batch["patches"].astype(cdt)
+        P = patches.shape[1]
+        x = jnp.concatenate([patches, x], axis=1)
+        angles = _vlm_angles(cfg, B, P, S_text)
+    elif fam in ("dense", "moe"):
+        angles = _angles_for(cfg, jnp.arange(S_text)[None].repeat(B, 0))
+    elif fam == "audio":
+        enc_out = _encode_audio(params, cfg, batch["frames"].astype(cdt))
+        hd = cfg.derived_head_dim()
+        def cross_kv(p_layer):
+            _, k2, v2 = attn.qkv(p_layer["cross"], enc_out, cfg.n_heads,
+                                 cfg.n_kv_heads, hd)
+            return k2, v2
+        ks, vs = jax.lax.map(cross_kv, params["blocks"])
+        cache["cross"] = {"k": ks.astype(cache["cross"]["k"].dtype),
+                          "v": vs.astype(cache["cross"]["v"].dtype)}
+        angles = _angles_for(cfg, jnp.arange(S_text)[None].repeat(B, 0))
+
+    S_total = x.shape[1]
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        if fam == "audio":
+            def body(h, xs):
+                p_layer, kv_layer, cr = xs
+                h, kv_layer = _attn_block_with_cache(
+                    p_layer, cfg, h, angles, kv_layer,
+                    cross_cache=cr, decode=False)
+                return h, kv_layer
+            x, new_kv = jax.lax.scan(
+                body, x, (params["blocks"], cache["kv"], cache["cross"]))
+        else:
+            def body2(h, xs):
+                p_layer, kv_layer = xs
+                h, kv_layer = _attn_block_with_cache(
+                    p_layer, cfg, h, angles, kv_layer, decode=False)
+                return h, kv_layer
+            x, new_kv = jax.lax.scan(body2, x, (params["blocks"], cache["kv"]))
+        cache["kv"] = new_kv
+    elif fam == "ssm":
+        def body(h, xs):
+            p_layer, st = xs
+            h, st = _mamba_block_fwd(p_layer, cfg, h, st)
+            return h, st
+        x, new_st = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+        cache["ssm"] = new_st
+    elif fam == "hybrid":
+        x, cache = _hybrid_prefill(params, cfg, x, cache)
+
+    cache["pos"] = cache["pos"] + S_total
+    x = norm_fwd(cfg.norm, params["final_norm"], x[:, -1:], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_fwd(head, x), cache
+
+
+def _hybrid_prefill(params, cfg: ModelConfig, x, cache):
+    B, S = x.shape[:2]
+    angles = _angles_for(cfg, jnp.arange(S)[None].repeat(B, 0))
+
+    def body(h, xs):
+        p_layer, st = xs
+        h, st = _mamba_block_fwd(p_layer, cfg, h, st)
+        return h, st
+
+    new_ssm = []
+    attn_caches = cache["attn"]
+    new_attn = []
+    ai = 0
+    for (start, size) in _hybrid_groups(cfg):
+        blocks = _slice_stack(params["blocks"], start, size)
+        states = _slice_stack(cache["ssm"], start, size)
+        x, st = jax.lax.scan(body, x, (blocks, states))
+        new_ssm.append(st)
+        if cfg.attn_every and (start + size) % cfg.attn_every == 0:
+            kv_layer = jax.tree.map(lambda a: a[ai], attn_caches)
+            x, kv_layer = _attn_block_with_cache(
+                params["shared_attn"], cfg, x, angles, kv_layer, decode=False)
+            new_attn.append(kv_layer)
+            ai += 1
+    cache["ssm"] = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_ssm)
+    if new_attn:
+        cache["attn"] = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_attn)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: dict) -> Tuple[jnp.ndarray, dict]:
+    """tokens (B, 1) -> (logits (B, 1, V), cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_fwd(params["embed"], tokens, cdt)
+    B = x.shape[0]
+    fam = cfg.family
+    pos = cache["pos"][None].repeat(B, 0)[:, None]                # (B,1)
+    if fam == "vlm":
+        # text rope position: patches occupy grid positions, text restarts at
+        # max(patch_grid) (M-RoPE); cache["pos"] counts patches + text.
+        pos = pos - cfg.n_patches + int(max(cfg.patch_grid))
+    angles = _angles_for(cfg, pos)
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        cross = cache.get("cross")
+
+        if fam == "audio":
+            def body(h, xs):
+                p_layer, kv_layer, cr = xs
+                h, kv_layer = _attn_block_with_cache(
+                    p_layer, cfg, h, angles, kv_layer, cross_cache=cr,
+                    decode=True)
+                return h, kv_layer
+            x, new_kv = jax.lax.scan(body, x,
+                                     (params["blocks"], cache["kv"], cross))
+        else:
+            def body(h, xs):
+                p_layer, kv_layer = xs
+                h, kv_layer = _attn_block_with_cache(
+                    p_layer, cfg, h, angles, kv_layer, decode=True)
+                return h, kv_layer
+            x, new_kv = jax.lax.scan(body, x, (params["blocks"], cache["kv"]))
+        cache["kv"] = new_kv
+    elif fam == "ssm":
+        def body(h, xs):
+            p_layer, st = xs
+            h, st = _mamba_decode_block(p_layer, cfg, h, st)
+            return h, st
+        x, new_st = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+        cache["ssm"] = new_st
+    elif fam == "hybrid":
+        x, cache = _hybrid_decode(params, cfg, x, cache, angles)
+
+    cache["pos"] = cache["pos"] + 1
+    x = norm_fwd(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_fwd(head, x), cache
+
+
+def _mamba_decode_block(p, cfg: ModelConfig, x, state):
+    h = norm_fwd(cfg.norm, p["norm"], x, cfg.norm_eps)
+    dec = ssm.mamba1_decode if cfg.ssm.kind == "mamba1" else ssm.mamba2_decode
+    y, new_state = dec(p["mixer"], cfg, h, state)
+    return x + y, new_state
+
+
+def _hybrid_decode(params, cfg: ModelConfig, x, cache, angles):
+    def body(h, xs):
+        p_layer, st = xs
+        h, st = _mamba_decode_block(p_layer, cfg, h, st)
+        return h, st
+
+    new_ssm = []
+    new_attn = []
+    ai = 0
+    for (start, size) in _hybrid_groups(cfg):
+        blocks = _slice_stack(params["blocks"], start, size)
+        states = _slice_stack(cache["ssm"], start, size)
+        x, st = jax.lax.scan(body, x, (blocks, states))
+        new_ssm.append(st)
+        if cfg.attn_every and (start + size) % cfg.attn_every == 0:
+            kv_layer = jax.tree.map(lambda a: a[ai], cache["attn"])
+            x, kv_layer = _attn_block_with_cache(
+                params["shared_attn"], cfg, x, angles, kv_layer, decode=True)
+            new_attn.append(kv_layer)
+            ai += 1
+    cache["ssm"] = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_ssm)
+    if new_attn:
+        cache["attn"] = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_attn)
+    return x, cache

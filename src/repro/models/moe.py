@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (expert parallel).
+
+Dispatch strategy (pjit-friendly, no shard_map so it composes with the
+nodes-vmap federated step):
+
+  1. top-k routing over softmax(router logits);
+  2. position-in-expert via a sort-based rank computation (O(T·k log) memory,
+     never materialising a (T, E, C) one-hot);
+  3. scatter tokens into an (E, C, d) buffer (`mode="drop"` implements
+     capacity overflow dropping);
+  4. grouped expert einsum 'ecd,edf->ecf' — the expert dim is sharded on the
+     "model" mesh axis via the weight shardings, so XLA SPMD turns the
+     buffer reshard into all-to-all-class collectives (expert parallelism);
+  5. gather back + combine with the top-k gate weights.
+
+A load-balance auxiliary loss (Switch-style) is returned alongside.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import ctx as shard_ctx
+from .config import ModelConfig, MoEConfig
+from .layers import init_linear, init_mlp, linear_fwd, mlp_fwd
+
+
+def init_moe(key, cfg: ModelConfig, dtype: str = "float32") -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    k_router, k_e, k_s = jax.random.split(key, 3)
+    ke = jax.random.split(k_e, 3)
+    E, f = m.n_experts, m.d_expert
+
+    def ew(k, a, b):
+        return (jax.random.normal(k, (E, a, b)) / jnp.sqrt(a)).astype(jnp.dtype(dtype))
+
+    p = {
+        "router": init_linear(k_router, d, E, dtype=dtype, scale=0.02),
+        "w_gate": ew(ke[0], d, f),
+        "w_up": ew(ke[1], d, f),
+        "w_down": ew(ke[2], f, d),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(k_s, d, f * m.n_shared, kind=cfg.mlp, dtype=dtype)
+    return p
+
+
+def _positions_in_expert(flat_e: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Rank of each assignment within its expert (sort-based, O(T·k))."""
+    Tk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    ranks_sorted = jnp.arange(Tk, dtype=jnp.int32) - starts[sorted_e]
+    return jnp.zeros((Tk,), jnp.int32).at[order].set(ranks_sorted)
+
+
+def moe_fwd(p: dict, cfg: ModelConfig, x: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    xf = x.reshape(T, d)
+
+    logits = linear_fwd(p["router"], xf).astype(jnp.float32)     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                          # (T, K)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+    gate = gate.astype(x.dtype)
+
+    # Switch load-balance loss: E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    C = max(1, int(T * K / E * m.capacity_factor))
+    flat_e = idx.reshape(T * K)
+    pos = _positions_in_expert(flat_e, E)                         # (T*K,)
+
+    xrep = jnp.repeat(xf, K, axis=0)                              # (T*K, d)
+    buf = jnp.zeros((E, C, d), dtype=x.dtype).at[flat_e, pos].add(
+        xrep, mode="drop")
+
+    # Pin the scatter output d-sharded FIRST: its backward (a gather from the
+    # buf cotangent) then runs shard-locally instead of all-reducing a full
+    # (T·K, d) f32 buffer over "model" (§Perf kimi iteration D). The E-shard
+    # reshard below is a separate all-to-all-class move.
+    buf = shard_ctx.constrain_axis(buf, 2, "model")
+    # grouped expert FFN (expert dim sharded on "model" via weight sharding)
+    buf = shard_ctx.constrain_axis(buf, 0, "model")
+    h_g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    h_u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    y_buf = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h_g) * h_u,
+                       p["w_down"].astype(x.dtype))
+    # reshard expert-major -> d-sharded BEFORE the combine gather: the
+    # reshard is an all-to-all-class move of the (E,C,d) buffer; the gather
+    # then runs shard-locally. Without this, XLA lowers the combine as a
+    # full (T·K, d) all-reduce over "model" — measured ~36% of the round's
+    # collective bytes on kimi-k2 (EXPERIMENTS.md §Perf iteration B).
+    y_buf = shard_ctx.constrain_axis(y_buf, 2, "model")
+
+    # gather back; dropped tokens contribute 0. (Constraining out_rep's d to
+    # "model" here was tried and REFUTED: no collective change, 2x XLA bytes
+    # — see EXPERIMENTS.md §Perf kimi iteration C.)
+    keep = (pos < C).astype(x.dtype)
+    out_rep = y_buf[flat_e, jnp.minimum(pos, C - 1)] * keep[:, None]
+    out = (out_rep.reshape(T, K, d) * gate[..., None]).sum(axis=1)
+    out = out.reshape(B, S, d)
+
+    if "shared" in p:
+        out = out + mlp_fwd(cfg.mlp, p["shared"], x)
+    return out, aux

@@ -1,0 +1,343 @@
+"""State-space sequence mixers: Mamba1 (selective scan) and Mamba2 (SSD).
+
+Both use a *chunked* scan: the sequence is split into chunks of
+``cfg.ssm.chunk``; an outer ``lax.scan`` carries the SSM state between chunks
+and the within-chunk recurrence is computed with an associative scan (Mamba1)
+or the SSD matmul form (Mamba2). This never materialises the full
+(L, d_inner, d_state) tensor, which is what makes 500k-token contexts and
+TPU-sized batches lower with bounded memory.
+
+Decode paths maintain a conv ring state and the SSM state — O(1) per token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.ctx import constrain_batch
+from .config import ModelConfig
+from .layers import init_linear, linear_fwd, norm_fwd
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+def causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                          init_state: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x (B, L, D); w (K, D); b (D). Causal depthwise conv along L."""
+    K = w.shape[0]
+    if init_state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _chunk(x: jnp.ndarray, c: int) -> Tuple[jnp.ndarray, int]:
+    """(B, L, ...) -> (n, B, c, ...) with zero padding; returns (chunked, L)."""
+    B, L = x.shape[:2]
+    n = -(-L // c)
+    pad = n * c - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    x = x.reshape((B, n, c) + x.shape[2:])
+    return jnp.moveaxis(x, 1, 0), L
+
+
+def _unchunk(y: jnp.ndarray, L: int) -> jnp.ndarray:
+    """(n, B, c, ...) -> (B, L, ...)."""
+    y = jnp.moveaxis(y, 0, 1)
+    B, n, c = y.shape[:3]
+    return y.reshape((B, n * c) + y.shape[3:])[:, :L]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (falcon-mamba-7b): per-(channel,state) selective scan
+# ---------------------------------------------------------------------------
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def init_mamba1(key, cfg: ModelConfig, dtype: str = "float32") -> dict:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm.d_state
+    K = cfg.ssm.d_conv
+    r = dt_rank(cfg)
+    keys = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (di, 1))
+    dt_init = jax.random.uniform(keys[4], (di,), minval=math.log(1e-3), maxval=math.log(1e-1))
+    return {
+        "in_proj": init_linear(keys[0], d, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(keys[1], (K, di)) / math.sqrt(K)).astype(jnp.dtype(dtype)),
+        "conv_b": jnp.zeros((di,), dtype=jnp.dtype(dtype)),
+        "x_proj": init_linear(keys[2], di, r + 2 * N, dtype=dtype),
+        "dt_proj": {"w": (jax.random.normal(keys[3], (r, di)) * r ** -0.5).astype(jnp.dtype(dtype)),
+                    "b": dt_init.astype(jnp.dtype(dtype))},
+        "A_log": jnp.log(A).astype(jnp.dtype(dtype)),
+        "D": jnp.ones((di,), dtype=jnp.dtype(dtype)),
+        "out_proj": init_linear(keys[5], di, d, dtype=dtype),
+    }
+
+
+def _m1_scan_chunk(h0, la, bx):
+    """Within-chunk recurrence via associative scan.
+
+    la (B, c, D, N) log decay; bx (B, c, D, N) input term.
+    h_t = exp(la_t) * h_{t-1} + bx_t. Returns (h_all (B,c,D,N), h_last).
+    """
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, b2 + jnp.exp(a2) * b1
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (la, bx), axis=1)
+    h_all = b_cum + jnp.exp(a_cum) * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba1_fwd(p: dict, cfg: ModelConfig, u: jnp.ndarray,
+               init_state: dict | None = None):
+    """u (B, L, d_model) -> (y (B, L, d_model), final_state)."""
+    B, L, _ = u.shape
+    di, N = cfg.d_inner, cfg.ssm.d_state
+    r = dt_rank(cfg)
+    c = cfg.ssm.chunk
+
+    xz = linear_fwd(p["in_proj"], u)
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    conv_init = init_state["conv"] if init_state is not None else None
+    x = causal_depthwise_conv(x_raw, p["conv_w"], p["conv_b"], conv_init)
+    x = jax.nn.silu(x)
+
+    dbc = linear_fwd(p["x_proj"], x)
+    dt, Bm, Cm = dbc[..., :r], dbc[..., r:r + N], dbc[..., r + N:]
+    dt = jax.nn.softplus(dt @ p["dt_proj"]["w"].astype(dt.dtype)
+                         + p["dt_proj"]["b"].astype(dt.dtype))          # (B,L,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                          # (di,N)
+
+    xs, _ = _chunk(x, c)
+    dts, _ = _chunk(dt, c)
+    Bs, _ = _chunk(Bm, c)
+    Cs, _ = _chunk(Cm, c)
+
+    h0 = (init_state["h"] if init_state is not None
+          else jnp.zeros((B, di, N), dtype=jnp.float32))
+
+    sdt = jnp.dtype(cfg.ssm.scan_dtype)
+
+    def body(h, inp):
+        xc, dtc, Bc, Cc = inp
+        dtf = dtc.astype(jnp.float32)
+        la = (dtf[..., None] * A).astype(sdt)                    # (B,c,di,N)
+        bx = ((dtf * xc.astype(jnp.float32))[..., None]
+              * Bc.astype(jnp.float32)[:, :, None, :]).astype(sdt)
+        h_all, h_last = _m1_scan_chunk(h.astype(sdt), la, bx)
+        yc = jnp.einsum("bcdn,bcn->bcd", h_all, Cc.astype(sdt))
+        return constrain_batch(h_last.astype(jnp.float32), 0), yc.astype(u.dtype)
+
+    xs = constrain_batch(xs, 1)
+    dts = constrain_batch(dts, 1)
+    Bs = constrain_batch(Bs, 1)
+    Cs = constrain_batch(Cs, 1)
+    h_last, ys = jax.lax.scan(body, constrain_batch(h0, 0), (xs, dts, Bs, Cs))
+    y = _unchunk(ys, L) + x * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = linear_fwd(p["out_proj"], y)
+    if conv_init is not None:
+        x_hist = jnp.concatenate([conv_init.astype(x_raw.dtype), x_raw], axis=1)
+    else:
+        x_hist = jnp.pad(x_raw, ((0, 0), (cfg.ssm.d_conv - 1, 0), (0, 0)))
+    state = {"h": h_last, "conv": x_hist[:, -(cfg.ssm.d_conv - 1):]}
+    return out, state
+
+
+def mamba1_decode(p: dict, cfg: ModelConfig, u: jnp.ndarray, state: dict):
+    """u (B, 1, d_model) one token; state {'h': (B,di,N), 'conv': (B,K-1,di)}."""
+    di, N = cfg.d_inner, cfg.ssm.d_state
+    r = dt_rank(cfg)
+    xz = linear_fwd(p["in_proj"], u)
+    x, z = jnp.split(xz, 2, axis=-1)                              # (B,1,di)
+    conv_in = jnp.concatenate([state["conv"].astype(x.dtype), x], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    xc = jnp.einsum("bkd,kd->bd", conv_in, w)[:, None] + p["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+    dbc = linear_fwd(p["x_proj"], xc)
+    dt, Bm, Cm = dbc[..., :r], dbc[..., r:r + N], dbc[..., r + N:]
+    dt = jax.nn.softplus(dt @ p["dt_proj"]["w"].astype(dt.dtype)
+                         + p["dt_proj"]["b"].astype(dt.dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtf = dt[:, 0].astype(jnp.float32)                            # (B,di)
+    a = jnp.exp(dtf[..., None] * A)                               # (B,di,N)
+    bx = (dtf * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0].astype(jnp.float32)[:, None, :]
+    h = a * state["h"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))[:, None].astype(u.dtype)
+    y = y + xc * p["D"].astype(xc.dtype)
+    y = y * jax.nn.silu(z)
+    out = linear_fwd(p["out_proj"], y)
+    return out, {"h": h, "conv": conv_in[:, 1:]}
+
+
+def init_mamba1_state(cfg: ModelConfig, batch: int) -> dict:
+    return {"h": jnp.zeros((batch, cfg.d_inner, cfg.ssm.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, cfg.d_inner), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (zamba2): scalar-per-head decay, SSD chunked matmul form
+# ---------------------------------------------------------------------------
+
+def m2_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    di = cfg.d_inner
+    P = cfg.ssm.head_dim
+    H = di // P
+    return di, P, H, cfg.ssm.d_state
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype: str = "float32") -> dict:
+    d = cfg.d_model
+    di, P, H, N = m2_dims(cfg)
+    G = cfg.ssm.n_groups
+    K = cfg.ssm.d_conv
+    conv_dim = di + 2 * G * N
+    keys = jax.random.split(key, 4)
+    dt_init = jax.random.uniform(keys[2], (H,), minval=math.log(1e-3), maxval=math.log(1e-1))
+    return {
+        "in_proj": init_linear(keys[0], d, 2 * di + 2 * G * N + H, dtype=dtype),
+        "conv_w": (jax.random.normal(keys[1], (K, conv_dim)) / math.sqrt(K)).astype(jnp.dtype(dtype)),
+        "conv_b": jnp.zeros((conv_dim,), dtype=jnp.dtype(dtype)),
+        "A_log": jnp.zeros((H,), dtype=jnp.dtype(dtype)),
+        "D": jnp.ones((H,), dtype=jnp.dtype(dtype)),
+        "dt_bias": dt_init.astype(jnp.dtype(dtype)),
+        "norm_scale": jnp.ones((di,), dtype=jnp.dtype(dtype)),
+        "out_proj": init_linear(keys[3], di, d, dtype=dtype),
+    }
+
+
+def _m2_split(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, P, H, N = m2_dims(cfg)
+    G = cfg.ssm.n_groups
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * G * N]
+    dt = zxbcdt[..., di + di + 2 * G * N:]
+    return z, xbc, dt
+
+
+def mamba2_fwd(p: dict, cfg: ModelConfig, u: jnp.ndarray,
+               init_state: dict | None = None):
+    """u (B, L, d_model) -> (y, final_state). SSD chunked algorithm."""
+    Bsz, L, _ = u.shape
+    di, P, H, N = m2_dims(cfg)
+    G = cfg.ssm.n_groups
+    c = cfg.ssm.chunk
+
+    zxbcdt = linear_fwd(p["in_proj"], u)
+    z, xbc_raw, dt = _m2_split(cfg, zxbcdt)
+    conv_init = init_state["conv"] if init_state is not None else None
+    xbc = jax.nn.silu(causal_depthwise_conv(xbc_raw, p["conv_w"], p["conv_b"], conv_init))
+    x = xbc[..., :di].reshape(Bsz, L, H, P)
+    Bm = xbc[..., di:di + G * N].reshape(Bsz, L, G, N)
+    Cm = xbc[..., di + G * N:].reshape(Bsz, L, G, N)
+    # broadcast groups to heads
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)                              # (B,L,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(dt.dtype))      # (B,L,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (H,)
+
+    xs, _ = _chunk(x, c)
+    dts, _ = _chunk(dt, c)
+    Bs, _ = _chunk(Bh, c)
+    Cs, _ = _chunk(Ch, c)
+
+    h0 = (init_state["h"] if init_state is not None
+          else jnp.zeros((Bsz, H, P, N), dtype=jnp.float32))
+
+    tri = jnp.tril(jnp.ones((c, c), dtype=bool))
+
+    def body(h, inp):
+        xc, dtc, Bc, Cc = inp                                     # (B,c,H,P),(B,c,H),(B,c,H,N)
+        dtf = dtc.astype(jnp.float32)
+        la = dtf * A                                              # (B,c,H) log-decay per step
+        Lcum = jnp.cumsum(la, axis=1)                             # (B,c,H)
+        # intra-chunk (diagonal) term
+        decay = jnp.exp(Lcum[:, :, None] - Lcum[:, None, :])      # (B,c,c,H) t,s
+        scores = jnp.einsum("bthn,bshn->btsh", Cc.astype(jnp.float32),
+                            Bc.astype(jnp.float32))
+        M = jnp.where(tri[None, :, :, None], decay * scores, 0.0)
+        dx = dtf[..., None] * xc.astype(jnp.float32)              # (B,c,H,P)
+        y_diag = jnp.einsum("btsh,bshp->bthp", M, dx)
+        # inter-chunk: contribution of carried state
+        y_prev = jnp.einsum("bthn,bhpn->bthp", Cc.astype(jnp.float32) *
+                            jnp.exp(Lcum)[..., None], h)
+        # state update
+        tail = jnp.exp(Lcum[:, -1:, :] - Lcum)                    # (B,c,H)
+        h_new = jnp.exp(Lcum[:, -1])[..., None, None] * h + \
+            jnp.einsum("bshn,bshp->bhpn", Bc.astype(jnp.float32) * tail[..., None], dx)
+        return constrain_batch(h_new, 0), (y_diag + y_prev).astype(u.dtype)
+
+    xs = constrain_batch(xs, 1)
+    dts = constrain_batch(dts, 1)
+    Bs = constrain_batch(Bs, 1)
+    Cs = constrain_batch(Cs, 1)
+    h_last, ys = jax.lax.scan(body, constrain_batch(h0, 0), (xs, dts, Bs, Cs))
+    y = _unchunk(ys, L)                                           # (B,L,H,P)
+    y = y + x * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, L, di)
+    # gated RMSNorm
+    y = y * jax.nn.silu(z)
+    y = norm_fwd("rmsnorm", {"scale": p["norm_scale"]}, y, cfg.norm_eps)
+    out = linear_fwd(p["out_proj"], y)
+    # conv state tail (pre-activation xbc)
+    if conv_init is not None:
+        xbc_hist = jnp.concatenate([conv_init.astype(xbc_raw.dtype), xbc_raw], axis=1)
+    else:
+        xbc_hist = jnp.pad(xbc_raw, ((0, 0), (cfg.ssm.d_conv - 1, 0), (0, 0)))
+    state = {"h": h_last, "conv": xbc_hist[:, -(cfg.ssm.d_conv - 1):]}
+    return out, state
+
+
+def mamba2_decode(p: dict, cfg: ModelConfig, u: jnp.ndarray, state: dict):
+    """One-token decode. u (B,1,d); state {'h': (B,H,P,N), 'conv': (B,K-1,conv_dim)}."""
+    Bsz = u.shape[0]
+    di, P, H, N = m2_dims(cfg)
+    G = cfg.ssm.n_groups
+    zxbcdt = linear_fwd(p["in_proj"], u)
+    z, xbc, dt = _m2_split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
+    w = p["conv_w"].astype(xbc.dtype)
+    xbc = jnp.einsum("bkd,kd->bd", conv_in, w)[:, None] + p["conv_b"].astype(xbc.dtype)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :di].reshape(Bsz, H, P)
+    Bm = xbc[..., di:di + G * N].reshape(Bsz, G, N)
+    Cm = xbc[..., di + G * N:].reshape(Bsz, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)          # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0] + p["dt_bias"].astype(dt.dtype)).astype(jnp.float32)  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                           # (B,H)
+    dx = dt[..., None] * x.astype(jnp.float32)                    # (B,H,P)
+    h = a[..., None, None] * state["h"] + jnp.einsum("bhn,bhp->bhpn", Bh, dx)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, 1, di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = norm_fwd("rmsnorm", {"scale": p["norm_scale"]}, y, cfg.norm_eps)
+    out = linear_fwd(p["out_proj"], y)
+    return out, {"h": h, "conv": conv_in[:, 1:]}
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int) -> dict:
+    di, P, H, N = m2_dims(cfg)
+    G = cfg.ssm.n_groups
+    conv_dim = di + 2 * G * N
+    return {"h": jnp.zeros((batch, H, P, N), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, conv_dim), jnp.float32)}

@@ -1,0 +1,1 @@
+from .optimizers import SGD, AdamW, Momentum, make_optimizer   # noqa: F401

@@ -1,0 +1,86 @@
+"""Pure-JAX optimizers (no optax in the container).
+
+Each optimizer has ``init(params) -> state`` and
+``update(params, grads, state) -> (params, state)``; states are pytrees so
+they shard/checkpoint like params. SGD is the paper's FedSGD (stateless —
+which is also what makes trillion-param FSDP training fit, see DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SGD:
+    lr: float = 1e-2
+
+    def init(self, params):
+        return ()
+
+    def update(self, params, grads, state) -> Tuple[object, object]:
+        new = jax.tree.map(
+            lambda p, g: (p - self.lr * g.astype(p.dtype)).astype(p.dtype),
+            params, grads)
+        return new, state
+
+
+@dataclass(frozen=True)
+class Momentum:
+    lr: float = 1e-2
+    beta: float = 0.9
+
+    def init(self, params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(self, params, grads, state):
+        m = jax.tree.map(lambda m_, g: self.beta * m_ + g.astype(jnp.float32),
+                         state["m"], grads)
+        new = jax.tree.map(lambda p, m_: (p - self.lr * m_).astype(p.dtype),
+                           params, m)
+        return new, {"m": m}
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, grads, state):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: self.b1 * m_ + (1 - self.b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: self.b2 * v_ + (1 - self.b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - self.b1 ** t.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = self.lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + self.eps)
+            if self.weight_decay:
+                step = step + self.lr * self.weight_decay * p.astype(jnp.float32)
+            return (p - step).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+
+def make_optimizer(name: str, lr: float, **kw):
+    name = name.lower()
+    if name == "sgd":
+        return SGD(lr=lr)
+    if name == "momentum":
+        return Momentum(lr=lr, **kw)
+    if name == "adamw":
+        return AdamW(lr=lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,2 @@
+from .rules import (batch_pspec, cache_pspecs, fed_batch_pspec,   # noqa: F401
+                    param_pspecs, shardings_for)

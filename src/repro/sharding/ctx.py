@@ -1,0 +1,88 @@
+"""Mesh context for in-model sharding constraints.
+
+XLA's sharding propagation can drop the batch sharding of while-loop carried
+tensors (observed: the q-chunk attention scan replicated (B, ...) operands
+across the whole mesh, inflating per-device flops ~200×). The launchers
+install the active mesh + logical axis mapping here; model code pins batch
+dims at scan boundaries with :func:`constrain`. Outside a mesh context (unit
+tests, single-device runs) every call is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _get() -> Tuple[Optional[Mesh], Tuple[str, ...]]:
+    return (getattr(_state, "mesh", None), getattr(_state, "dp", ()))
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, dp_axes: Sequence[str]):
+    """Install `mesh` and the data-parallel axis names (("data",) or
+    ("pod","data")) for the duration of a lowering/call."""
+    old = _get()
+    _state.mesh, _state.dp = mesh, tuple(a for a in dp_axes if a in mesh.shape)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.dp = old
+
+
+@contextlib.contextmanager
+def suspended():
+    """Disable *data-parallel* constraints inside a scope — used by the fed
+    step's nodes-vmap, where the node axis is handled by
+    vmap(spmd_axis_name=...) and an inner P(dp, ...) constraint would
+    conflict. Model-axis constraints (constrain_axis) stay active: the
+    "model" axis is never a vmap spmd axis."""
+    old_dp = getattr(_state, "dp", ())
+    _state.dp = ()
+    try:
+        yield
+    finally:
+        _state.dp = old_dp
+
+
+def constrain_axis(x, dim: int, axis: str = "model"):
+    """Pin dimension `dim` of x to mesh axis `axis` (replicate other dims as
+    far as the partitioner wants). No-op outside a mesh context or when the
+    dim does not divide. Used to steer reshards (e.g. the MoE combine) toward
+    all-to-all-class layouts instead of full-buffer all-reduces."""
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None or axis not in mesh.shape:
+        return x
+    n = mesh.shape[axis]
+    if not hasattr(x, "ndim") or x.ndim <= dim or x.shape[dim] % n != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = axis
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Pin dimension `batch_dim` of x (or of every leaf of a pytree) to the
+    data-parallel axes; other dims left to the partitioner."""
+    mesh, dp = _get()
+    if mesh is None or not dp:
+        return x
+    import numpy as np
+    n = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def one(leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim <= batch_dim:
+            return leaf
+        if leaf.shape[batch_dim] % n != 0:
+            return leaf
+        spec = [None] * leaf.ndim
+        spec[batch_dim] = dp
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, P(*spec)))
+
+    return jax.tree.map(one, x)

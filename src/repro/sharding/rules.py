@@ -1,0 +1,171 @@
+"""PartitionSpec rules: FSDP over ("pod","data"), tensor/expert over "model".
+
+Rules are name-based over the param-tree paths produced by
+``repro.models.init_params``. Every rule respects divisibility: a dim is only
+sharded on an axis whose size divides it (XLA supports uneven shards but even
+shards keep memory_analysis honest); otherwise we fall back to the next
+candidate axis or replicate.
+
+Stacked (scanned) block params carry a leading layer dim which is never
+sharded.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(mesh: Mesh, dim: int, axes) -> Optional[object]:
+    """Return `axes` if dim divides evenly over them, else None."""
+    return axes if axes is not None and dim % _axis_size(mesh, axes) == 0 else None
+
+
+def _key_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(mesh: Mesh, key: str, shape: Tuple[int, ...], fsdp,
+               stacked: bool) -> P:
+    """Choose a PartitionSpec for one parameter leaf."""
+    lead = ("_L",) if stacked else ()          # placeholder, stripped below
+    nd = len(shape) - len(lead)
+    dims = shape[len(lead):]
+
+    def spec(*entries):
+        return P(*( (None,) * len(lead) + entries ))
+
+    model = _fit(mesh, dims[-1] if nd else 1, "model")
+
+    if nd == 0 or re.search(r"norm|bias|/b$|A_log|^D$|/D$|dt_bias|idx", key):
+        return spec(*(None,) * nd)
+
+    if re.search(r"(embed|unembed)/w$", key):
+        return spec(_fit(mesh, dims[0], "model"), _fit(mesh, dims[1], fsdp))
+
+    if re.search(r"router/w$", key):
+        return spec(_fit(mesh, dims[0], fsdp), None)
+
+    if re.search(r"(w_gate|w_up)$", key) and nd == 3:   # experts (E, d, f)
+        return spec(_fit(mesh, dims[0], "model"), _fit(mesh, dims[1], fsdp), None)
+    if re.search(r"w_down$", key) and nd == 3:          # experts (E, f, d)
+        return spec(_fit(mesh, dims[0], "model"), None, _fit(mesh, dims[2], fsdp))
+
+    if re.search(r"(wq|wk|wv|w_gate|w_up|in_proj|x_proj|dt_proj)/w$", key) and nd == 2:
+        return spec(_fit(mesh, dims[0], fsdp), _fit(mesh, dims[1], "model"))
+    if re.search(r"(wo|w_down|out_proj)/w$", key) and nd == 2:
+        return spec(_fit(mesh, dims[0], "model"), _fit(mesh, dims[1], fsdp))
+    if re.search(r"conv_w$", key):
+        return spec(None, _fit(mesh, dims[1], "model"))
+    if re.search(r"A_log|norm_scale", key):
+        return spec(*(None,) * nd)
+    if re.search(r"conv1|conv2|fc", key):               # paper CNN: replicate
+        return spec(*(None,) * nd)
+
+    # default: shard last dim on model, first on fsdp when divisible
+    if nd >= 2:
+        return spec(_fit(mesh, dims[0], fsdp),
+                    *(None,) * (nd - 2), model)
+    return spec(_fit(mesh, dims[0], "model"))
+
+
+_STACKED_RE = re.compile(r"^(blocks|encoder/blocks)/")
+
+
+def param_pspecs(mesh: Mesh, params_shape, fsdp=("data",)):
+    """Pytree of PartitionSpec matching a params(-shape) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        key = _key_str(path)
+        stacked = bool(_STACKED_RE.match(key))
+        specs.append(_leaf_spec(mesh, key, tuple(leaf.shape), fsdp, stacked))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh: Mesh, batch_shape, dp=("data",)):
+    """Plain step: leading batch dim over the data(+pod) axes."""
+    dp_axes = tuple(a for a in (dp if not isinstance(dp, str) else (dp,))
+                    if a in mesh.shape)
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        if leaf.shape[0] % _axis_size(mesh, dp_axes) == 0:
+            return P(dp_axes, *(None,) * (nd - 1))
+        return P(*(None,) * nd)
+
+    return jax.tree.map(one, batch_shape)
+
+
+def fed_batch_pspec(mesh: Mesh, batch_shape, node_axes=("pod", "data")):
+    """Fed step: leading NODE dim over (pod, data)."""
+    axes = tuple(a for a in node_axes if a in mesh.shape)
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        return P(axes, *(None,) * (nd - 1))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_pspecs(mesh: Mesh, cache_shape, dp=("data",)):
+    """KV/SSM caches: batch dim over data(+pod); kv-heads on model when they
+    divide, otherwise the cache length; ssm states shard d_inner on model."""
+    dp_axes = tuple(a for a in (dp if not isinstance(dp, str) else (dp,))
+                    if a in mesh.shape)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = []
+    for path, leaf in flat:
+        key = _key_str(path)
+        shp = tuple(leaf.shape)
+        nd = len(shp)
+        if nd == 0 or key.endswith("idx") or key == "pos":
+            specs.append(P(*(None,) * nd))
+            continue
+        if re.search(r"(kv|cross|attn)/(k|v)$", key):
+            # (L, B, C, KV, hd)
+            b = dp_axes if shp[1] % _axis_size(mesh, dp_axes) == 0 else None
+            kv_m = _fit(mesh, shp[3], "model")
+            c_m = _fit(mesh, shp[2], "model") if kv_m is None else None
+            specs.append(P(None, b, c_m, kv_m, None))
+        elif re.search(r"ssm/h$", key):
+            # mamba1 (L,B,di,N) / mamba2 (L,B,H,P,N)
+            b = dp_axes if shp[1] % _axis_size(mesh, dp_axes) == 0 else None
+            m = _fit(mesh, shp[2], "model")
+            specs.append(P(None, b, m, *(None,) * (nd - 3)))
+        elif re.search(r"ssm/conv$", key):
+            # (L,B,K-1,conv_dim)
+            b = dp_axes if shp[1] % _axis_size(mesh, dp_axes) == 0 else None
+            m = _fit(mesh, shp[3], "model")
+            specs.append(P(None, b, None, m))
+        else:
+            specs.append(P(*(None,) * nd))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def shardings_for(mesh: Mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,219 @@
+"""Unit + property tests for the paper's core mechanisms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MomentsAccountant, aldp_perturb, clip_by_global_norm,
+                        detect, detection_threshold, epsilon_for_sigma,
+                        global_norm, masked_mean, mix, mix_stale,
+                        sigma_for_epsilon, staleness_alpha)
+from repro.core import accumulator as accum
+from repro.core.async_update import communication_efficiency
+
+
+# ---------------------------------------------------------------------------
+# ALDP (Eq. 8)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=25)
+@given(st.floats(0.1, 10.0), st.integers(0, 2**31 - 1))
+def test_clip_invariant(clip_s, seed):
+    """Property: after clipping at S, the global norm is ≤ S (+eps)."""
+    key = jax.random.PRNGKey(seed)
+    tree = {"a": jax.random.normal(key, (13, 7)) * 10,
+            "b": {"c": jax.random.normal(key, (5,)) * 10}}
+    clipped, nrm = clip_by_global_norm(tree, clip_s)
+    assert float(global_norm(clipped)) <= clip_s * (1 + 1e-4)
+    # no-op when already within the ball
+    small = jax.tree.map(lambda x: x * 1e-6, tree)
+    same, _ = clip_by_global_norm(small, clip_s)
+    np.testing.assert_allclose(np.asarray(same["a"]), np.asarray(small["a"]),
+                               rtol=1e-6)
+
+
+def test_sigma_epsilon_roundtrip():
+    for eps in (0.5, 1.0, 8.0):
+        sigma = sigma_for_epsilon(eps, 1e-3)
+        assert abs(epsilon_for_sigma(sigma, 1e-3) - eps) < 1e-9
+    # paper's operating point: eps=8, delta=1e-3
+    assert sigma_for_epsilon(8.0, 1e-3) == pytest.approx(0.4716, abs=1e-3)
+
+
+def test_aldp_noise_magnitude():
+    key = jax.random.PRNGKey(0)
+    tree = {"w": jnp.zeros((2000,))}
+    sigma, clip_s = 0.5, 2.0
+    pert, _ = aldp_perturb(tree, key, sigma, clip_s)
+    std = float(jnp.std(pert["w"]))
+    assert abs(std - sigma * clip_s) / (sigma * clip_s) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# Moments accountant
+# ---------------------------------------------------------------------------
+
+def test_accountant_monotonic_in_steps():
+    acc = MomentsAccountant(sigma=1.0, sampling_rate=1.0)
+    eps = []
+    for _ in range(5):
+        acc.step(10)
+        eps.append(acc.epsilon(1e-5))
+    assert all(b > a for a, b in zip(eps, eps[1:]))
+
+
+def test_accountant_decreasing_in_sigma():
+    out = []
+    for sigma in (0.5, 1.0, 2.0, 4.0):
+        acc = MomentsAccountant(sigma=sigma)
+        acc.step(100)
+        out.append(acc.epsilon(1e-5))
+    assert all(a > b for a, b in zip(out, out[1:]))
+
+
+def test_accountant_subsampling_amplifies():
+    a1 = MomentsAccountant(sigma=1.0, sampling_rate=1.0)
+    a2 = MomentsAccountant(sigma=1.0, sampling_rate=0.1)
+    a1.step(50)
+    a2.step(50)
+    assert a2.epsilon(1e-5) < a1.epsilon(1e-5)
+
+
+def test_accountant_single_gaussian_close_to_classic():
+    """One release, q=1: RDP ε should be within ~2x of the classic bound."""
+    sigma = 2.0
+    acc = MomentsAccountant(sigma=sigma)
+    acc.step(1)
+    classic = epsilon_for_sigma(sigma, 1e-5)
+    got = acc.epsilon(1e-5)
+    assert 0.3 * classic < got < 2.0 * classic
+
+
+# ---------------------------------------------------------------------------
+# Async mixing (Eq. 6) + staleness
+# ---------------------------------------------------------------------------
+
+def test_mix_algebra():
+    g = {"w": jnp.ones((4,))}
+    n = {"w": jnp.full((4,), 3.0)}
+    out = mix(g, n, alpha=0.5)
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.0)
+    # alpha=1 keeps global; alpha=0 takes new
+    np.testing.assert_allclose(np.asarray(mix(g, n, 1.0)["w"]), 1.0)
+    np.testing.assert_allclose(np.asarray(mix(g, n, 0.0)["w"]), 3.0)
+
+
+def test_staleness_weight_decreases():
+    w0 = float(staleness_alpha(0.5, 0))
+    w5 = float(staleness_alpha(0.5, 5))
+    assert w0 == pytest.approx(0.5)
+    assert w5 < w0
+
+
+def test_mix_stale_fresh_equals_mix():
+    g = {"w": jnp.arange(4.0)}
+    n = {"w": jnp.arange(4.0) + 2}
+    np.testing.assert_allclose(np.asarray(mix_stale(g, n, 0.5, 0)["w"]),
+                               np.asarray(mix(g, n, 0.5)["w"]), rtol=1e-6)
+
+
+def test_kappa():
+    assert communication_efficiency(1.0, 3.0) == pytest.approx(0.25)
+    assert communication_efficiency(0.0, 0.0) == 0.0
+
+
+def test_async_mix_converges_on_quadratic():
+    """Theorem 6 sanity: α-mixing of noisy local SGD on a strongly-convex
+    quadratic converges to a neighbourhood of the optimum."""
+    key = jax.random.PRNGKey(0)
+    target = jnp.array([1.0, -2.0, 3.0])
+    w = {"w": jnp.zeros(3)}
+    for t in range(300):
+        key, k1, k2 = jax.random.split(key, 3)
+        # local SGD from the current global model (2 steps)
+        local = w
+        for _ in range(2):
+            g = jax.tree.map(lambda x: x - target, local)
+            local = jax.tree.map(lambda x, gg: x - 0.2 * gg, local, g)
+        delta = jax.tree.map(lambda a, b: a - b, local, w)
+        pert, _ = aldp_perturb(delta, k2, sigma=0.01, clip_s=1.0)
+        w_new = jax.tree.map(lambda a, b: a + b, w, pert)
+        w = mix(w, w_new, alpha=0.5)
+    err = float(jnp.linalg.norm(w["w"] - target))
+    assert err < 0.2, err
+
+
+# ---------------------------------------------------------------------------
+# Detection (Alg. 2)
+# ---------------------------------------------------------------------------
+
+def test_detect_flags_low_accuracy():
+    accs = jnp.array([0.9, 0.92, 0.91, 0.88, 0.3, 0.25, 0.93, 0.89, 0.9, 0.87])
+    mask, thr = detect(accs, s=30.0)
+    assert not bool(mask[4]) and not bool(mask[5])
+    assert bool(mask[1]) and bool(mask[6])
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(st.floats(0.0, 1.0), min_size=4, max_size=32),
+       st.floats(10.0, 90.0))
+def test_detect_threshold_within_range(accs, s):
+    a = jnp.asarray(accs, jnp.float32)
+    thr = detection_threshold(a, s)
+    assert float(a.min()) - 1e-6 <= float(thr) <= float(a.max()) + 1e-6
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 1000))
+def test_detect_never_empty(seed):
+    """Guard property: detection always keeps at least one node."""
+    key = jax.random.PRNGKey(seed)
+    accs = jax.random.uniform(key, (10,))
+    mask, _ = detect(accs, s=80.0)
+    assert int(mask.sum()) >= 1
+
+
+def test_masked_mean():
+    trees = {"w": jnp.array([[1.0, 1.0], [3.0, 3.0], [100.0, 100.0]])}
+    mask = jnp.array([True, True, False])
+    out = masked_mean(trees, mask)
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# Gradient accumulation container (DGC)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2**31 - 1), st.floats(0.05, 1.0))
+def test_accumulator_conservation(seed, ratio):
+    """Property: upload + residual == residual_in + grad exactly."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    g = {"a": jax.random.normal(k1, (40,)), "b": jax.random.normal(k2, (9, 3))}
+    r0 = accum.init_residual(g)
+    up, r1, frac = accum.accumulate_and_sparsify(r0, g, ratio)
+    tot_in = jax.tree.map(lambda a, b: a + b, r0, g)
+    tot_out = jax.tree.map(lambda a, b: a + b, up, r1)
+    for x, y in zip(jax.tree.leaves(tot_in), jax.tree.leaves(tot_out)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+    assert 0.0 <= float(frac) <= 1.0
+
+
+def test_accumulator_small_values_accumulate_then_upload():
+    g = {"w": jnp.array([1.0, 0.01, 0.01, 0.01])}
+    r = accum.init_residual(g)
+    up, r, _ = accum.accumulate_and_sparsify(r, g, 0.25)
+    assert float(up["w"][0]) == pytest.approx(1.0)
+    # after enough rounds the residual for index>0 grows and gets uploaded
+    for _ in range(200):
+        up, r, _ = accum.accumulate_and_sparsify(
+            r, {"w": jnp.array([0.0, 0.01, 0.01, 0.01])}, 0.25)
+    assert float(jnp.abs(up["w"][1:]).max()) > 0.0
+
+
+def test_upload_bytes():
+    tree = {"w": jnp.zeros((1000,))}
+    assert accum.upload_bytes(tree, 1.0) == 4000
+    assert accum.upload_bytes(tree, 0.1) == 100 * 8

@@ -1,0 +1,221 @@
+"""Integration tests: the four schemes, attacks, detection, fed_step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import FedConfig, FederatedTrainer, FedStepConfig
+from repro.core.attacks import (attack_success_rate, dlg_attack, flip_labels,
+                                reconstruction_mse)
+from repro.core.fed_step import fed_train_step
+from repro.data import make_federated_image_data
+from repro.models import loss_fn as model_loss_fn
+from repro.models import init_params
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+
+
+def small_fed_setup(mode, n_malicious=0, detect=False, rounds=4, seed=0,
+                    sparsify=1.0, sigma=0.05):
+    """sigma=0.05 keeps a workable SNR at this tiny scale; the paper's own
+    calibration (ε=8, δ=1e-3 ⇒ σ≈0.47) collapses accuracy — a finding we
+    assert explicitly in test_paper_calibrated_sigma_hurts (EXPERIMENTS.md)."""
+    node_data, test, cloud, _ = make_federated_image_data(
+        seed, n_nodes=5, n_malicious=n_malicious, n_train=800, n_test=300,
+        n_cloud_test=200, hw=(14, 14))
+    cfg = FedConfig(mode=mode, n_nodes=5, rounds=rounds, local_steps=15,
+                    batch_size=32, lr=0.1, detect=detect, sigma=sigma,
+                    sparsify_ratio=sparsify, seed=seed)
+    params = init_cnn(jax.random.PRNGKey(seed), in_hw=(14, 14))
+    return FederatedTrainer(params, cnn_loss, cnn_accuracy, node_data, test,
+                            cloud, cfg)
+
+
+def test_sfl_learns():
+    tr = small_fed_setup("sfl", rounds=5)
+    hist = tr.run()
+    assert hist[-1].accuracy > 0.5, hist[-1].accuracy
+
+
+def test_afl_learns_and_is_faster_than_sfl():
+    tr_a = small_fed_setup("afl", rounds=4)
+    ha = tr_a.run()
+    tr_s = small_fed_setup("sfl", rounds=4)
+    hs = tr_s.run()
+    assert ha[-1].accuracy > 0.4
+    # async: no barrier on the slowest node => lower simulated wall clock
+    assert ha[-1].t < hs[-1].t
+
+
+def test_aldpfl_close_to_afl():
+    """Paper Fig. 7a: LDP costs only a little accuracy."""
+    acc_afl = small_fed_setup("afl", rounds=4).run()[-1].accuracy
+    acc_aldp = small_fed_setup("aldpfl", rounds=4).run()[-1].accuracy
+    assert acc_aldp > acc_afl - 0.25
+
+
+def test_detection_mitigates_label_flipping():
+    """Paper Fig. 8(b) special task: 2/5 nodes flip labels 1->7; the attack
+    craters class-1 accuracy, and detection rejects poisoned updates. (The
+    general task moves much less — exactly the paper's observation.)"""
+    from repro.models.cnn import per_class_accuracy
+    t_attack = small_fed_setup("aldpfl", n_malicious=2, detect=False,
+                               rounds=5)
+    t_attack.run()
+    cls1_attacked = float(per_class_accuracy(t_attack.params,
+                                             *t_attack.test_data, 1))
+    t_def = small_fed_setup("aldpfl", n_malicious=2, detect=True, rounds=5)
+    t_def.run()
+    cls1_defended = float(per_class_accuracy(t_def.params,
+                                             *t_def.test_data, 1))
+    rejected = sum(r.n_rejected for r in t_def.history)
+    assert rejected > 0
+    assert cls1_defended >= cls1_attacked - 0.05
+
+
+def test_staleness_adaptive_async_runs():
+    """FedAsync polynomial staleness weighting path (beyond-paper option)."""
+    node_data, test, cloud, _ = make_federated_image_data(
+        0, n_nodes=4, n_malicious=0, n_train=400, n_test=150,
+        n_cloud_test=100, hw=(14, 14))
+    cfg = FedConfig(mode="aldpfl", n_nodes=4, rounds=2, local_steps=8,
+                    batch_size=32, lr=0.1, detect=False, sigma=0.05,
+                    staleness_adaptive=True, heterogeneity=1.0)
+    tr = FederatedTrainer(init_cnn(jax.random.PRNGKey(0), in_hw=(14, 14)),
+                          cnn_loss, cnn_accuracy, node_data, test, cloud, cfg)
+    hist = tr.run()
+    assert hist[-1].accuracy > 0.1
+
+
+def test_noniid_dirichlet_trains():
+    node_data, test, cloud, _ = make_federated_image_data(
+        0, n_nodes=5, n_malicious=0, n_train=800, n_test=200,
+        n_cloud_test=100, hw=(14, 14), iid=False, dirichlet_alpha=0.3)
+    cfg = FedConfig(mode="afl", n_nodes=5, rounds=4, local_steps=12,
+                    batch_size=32, lr=0.1, detect=False)
+    tr = FederatedTrainer(init_cnn(jax.random.PRNGKey(0), in_hw=(14, 14)),
+                          cnn_loss, cnn_accuracy, node_data, test, cloud, cfg)
+    hist = tr.run()
+    assert hist[-1].accuracy > 0.3
+
+
+def test_privacy_accountant_tracks():
+    tr = small_fed_setup("aldpfl", rounds=2)
+    tr.run()
+    assert tr.epsilon_spent() > 0
+
+
+def test_paper_calibrated_sigma_hurts():
+    """Honest finding: at the paper's ε=8/δ=1e-3 calibration (σ≈0.47 on the
+    whole-delta L2 ball), per-coordinate SNR is far below 1 and accuracy
+    degrades vs the low-noise run — the paper's 'negligible accuracy loss'
+    claim does not survive honest Eq.-8 calibration at this scale."""
+    noisy = small_fed_setup("aldpfl", rounds=3, sigma=None)  # ε=8 calibrated
+    acc_paper = noisy.run()[-1].accuracy
+    mild = small_fed_setup("aldpfl", rounds=3, sigma=0.02)
+    acc_mild = mild.run()[-1].accuracy
+    assert noisy.sigma > 0.4
+    assert acc_mild > acc_paper - 0.05   # low-noise at least as good
+
+
+def test_sparsified_uploads_smaller():
+    tr = small_fed_setup("aldpfl", rounds=2, sparsify=0.1)
+    hist = tr.run()
+    tr_full = small_fed_setup("aldpfl", rounds=2, sparsify=1.0)
+    hist_full = tr_full.run()
+    assert hist[-1].comm_bytes < hist_full[-1].comm_bytes
+
+
+# ---------------------------------------------------------------------------
+# attacks
+# ---------------------------------------------------------------------------
+
+def test_flip_labels():
+    y = jnp.array([0, 1, 2, 1, 7])
+    out = flip_labels(y, 1, 7)
+    np.testing.assert_array_equal(np.asarray(out), [0, 7, 2, 7, 7])
+
+
+def test_dlg_attack_and_ldp_defence():
+    """DLG reconstructs data from clean gradients; LDP noise breaks it."""
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (16, 4)) * 0.3
+
+    def loss(params, x, y_soft):
+        logits = x @ params
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * y_soft, -1))
+
+    x_true = jax.random.normal(jax.random.PRNGKey(1), (1, 16)) * 0.5
+    y_true = jax.nn.one_hot(jnp.array([2]), 4)
+    g_clean = jax.grad(loss)(W, x_true, y_true)
+
+    x_rec, hist = dlg_attack(lambda p, x, y: loss(p, x, y), W, g_clean,
+                             (1, 16), 4, jax.random.PRNGKey(2), steps=300,
+                             lr=0.1)
+    assert float(hist[-1]) < float(hist[0]) * 0.1
+    mse_clean = float(reconstruction_mse(x_true, x_rec))
+
+    from repro.core.aldp import add_gaussian_noise
+    g_noisy = add_gaussian_noise(g_clean, jax.random.PRNGKey(3), 0.5, 1.0)
+    x_rec_n, _ = dlg_attack(lambda p, x, y: loss(p, x, y), W, g_noisy,
+                            (1, 16), 4, jax.random.PRNGKey(2), steps=300,
+                            lr=0.1)
+    mse_noisy = float(reconstruction_mse(x_true, x_rec_n))
+    assert mse_noisy > mse_clean
+
+
+def test_asr_metric():
+    x = jnp.zeros((4, 8))
+    rec = x.at[0].set(1.0)
+    asr = attack_success_rate(x, rec, mse_threshold=0.5)
+    assert float(asr) == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# datacenter fed_train_step
+# ---------------------------------------------------------------------------
+
+def test_fed_step_learns_lm():
+    cfg = get_smoke_config("qwen1.5-0.5b").replace(
+        n_layers=2, d_model=64, d_ff=128, vocab=64, attn_chunk=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fcfg = FedStepConfig(n_nodes=4, local_steps=2, lr=0.1, sigma=1e-4,
+                         detect=True)
+    lfn = lambda p, b: model_loss_fn(p, cfg, b)
+    afn = lambda p, b: model_loss_fn(p, cfg, b)[1]["accuracy"]
+
+    from repro.data.synthetic import make_token_dataset
+    data = make_token_dataset(0, 128, 16, cfg.vocab)
+    rng = np.random.default_rng(0)
+
+    def batch(lead):
+        n = int(np.prod(lead))
+        idx = rng.integers(0, data.shape[0], n)
+        return {"tokens": jnp.asarray(data[idx, :16].reshape(lead + (16,))),
+                "targets": jnp.asarray(data[idx, 1:17].reshape(lead + (16,)))}
+
+    step = jax.jit(lambda p, nb, eb, k: fed_train_step(
+        p, nb, eb, k, loss_fn=lfn, acc_fn=afn, fcfg=fcfg))
+    key = jax.random.PRNGKey(1)
+    losses = []
+    for r in range(6):
+        key, k = jax.random.split(key)
+        params, m = step(params, batch((4, 2, 4)), batch((2,)), k)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+    assert int(m["n_normal"]) >= 1
+
+
+def test_fed_step_alpha_zero_keeps_global():
+    cfg = get_smoke_config("olmo-1b").replace(n_layers=1, d_model=32,
+                                              d_ff=64, vocab=32, attn_chunk=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fcfg = FedStepConfig(n_nodes=2, local_steps=1, lr=0.1, sigma=0.0,
+                         alpha=1.0, detect=False)
+    lfn = lambda p, b: model_loss_fn(p, cfg, b)
+    toks = jnp.zeros((2, 1, 2, 8), jnp.int32)
+    nb = {"tokens": toks, "targets": toks}
+    new, _ = fed_train_step(params, nb, None, jax.random.PRNGKey(1),
+                            loss_fn=lfn, acc_fn=None, fcfg=fcfg)
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

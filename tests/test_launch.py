@@ -1,0 +1,152 @@
+"""Launch-layer tests: shapes, specs, config resolution, cost analyzer,
+sharding context."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, \
+    long_context_variant
+from repro.core.fed_step import FedStepConfig
+from repro.launch.shapes import SHAPES, fed_layout, input_specs
+from repro.launch.roofline import (analytic_memory_bytes, attention_flops,
+                                   model_flops, roofline_terms)
+
+
+def test_shapes_match_assignment():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_fed_layout_factorisation():
+    n, h, per = fed_layout(SHAPES["train_4k"], 16, 4)
+    assert n * h * per == 256
+    n, h, per = fed_layout(SHAPES["train_4k"], 32, 4)
+    assert n * h * per == 256
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_structures(arch):
+    """Every (arch × shape) produces weak-type-correct structs (no alloc)."""
+    cfg = get_smoke_config(arch)
+    fcfg = FedStepConfig(n_nodes=4, local_steps=2)
+    for shape_name in ("train_4k", "prefill_32k", "decode_32k"):
+        spec = input_specs(cfg, shape_name, fcfg=fcfg)
+        assert spec["kind"] in ("fed_train", "prefill", "decode")
+        leaves = jax.tree.leaves(spec["args"])
+        assert all(isinstance(x, jax.ShapeDtypeStruct) for x in leaves)
+        if spec["kind"] == "fed_train":
+            toks = spec["args"][1]["tokens"]
+            assert toks.shape[:2] == (4, 2)
+
+
+def test_long_context_variant():
+    dense = get_config("codeqwen1.5-7b")
+    assert long_context_variant(dense).sliding_window == 8192
+    ssm = get_config("falcon-mamba-7b")
+    assert long_context_variant(ssm).sliding_window == 0  # already O(1) state
+
+
+def test_all_archs_have_full_and_smoke():
+    assert len(ARCH_IDS) == 10
+    for arch in ARCH_IDS:
+        full = get_config(arch)
+        smoke = get_smoke_config(arch)
+        assert full.family == smoke.family
+        assert smoke.n_layers <= 4 and smoke.d_model <= 512
+        if smoke.moe:
+            assert smoke.moe.n_experts <= 4
+
+
+def test_assigned_dims_exact():
+    spec = {
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 163840),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 152064),
+        "zamba2-1.2b": (38, 2048, 32, 32, 32000),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 151936),
+        "whisper-large-v3": (32, 1280, 20, 20, 51866),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 92416),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 202048),
+        "falcon-mamba-7b": (64, 4096, 1, 1, 65024),
+        "olmo-1b": (16, 2048, 16, 16, 50304),
+        "smollm-360m": (32, 960, 15, 5, 49152),
+    }
+    for arch, (L, d, H, KV, V) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.vocab) == (L, d, H, KV, V), arch
+
+
+# ---------------------------------------------------------------------------
+# cost analyzer details
+# ---------------------------------------------------------------------------
+
+def test_hlo_cost_slicing_not_quadratic():
+    """Scan loops dynamic-slice their stacked xs each iteration; bytes must
+    scale ~linearly with trip count, not quadratically."""
+    from repro.launch.hlo_cost import analyze_hlo_text
+
+    def make(n):
+        def f(xs):
+            def body(c, x):
+                return c + jnp.tanh(x).sum(), None
+            c, _ = jax.lax.scan(body, jnp.zeros(()), xs)
+            return c
+        xs = jnp.ones((n, 256, 64))
+        compiled = jax.jit(f).lower(xs).compile()
+        return analyze_hlo_text(compiled.as_text()).bytes
+
+    b8, b16 = make(8), make(16)
+    assert b16 / b8 < 2.6, (b8, b16)
+
+
+def test_roofline_model_flops_moe_active():
+    kimi = get_config("kimi-k2-1t-a32b")
+    dense_equiv = kimi.n_params()
+    active = kimi.active_params()
+    assert active < dense_equiv / 10          # top-8 of 384 experts
+    assert model_flops(kimi, "fed_train", 1000) == 6.0 * active * 1000
+
+
+def test_attention_flops_windowed_smaller():
+    cfg = get_config("codeqwen1.5-7b")
+    full = attention_flops(cfg, "decode", 1, 524288)
+    win = attention_flops(long_context_variant(cfg), "decode", 1, 524288)
+    assert win < full / 10
+
+
+def test_analytic_memory_decode_cache_dominated():
+    b = analytic_memory_bytes("decode", params_bytes=1e9, cache_bytes=1e12,
+                              act_ckpt_bytes=0, logits_bytes=1e6, n_dev=256)
+    assert b > 2 * 1e12 / 256 * 0.99
+
+
+# ---------------------------------------------------------------------------
+# sharding ctx
+# ---------------------------------------------------------------------------
+
+def test_constrain_noop_outside_mesh():
+    from repro.sharding.ctx import constrain_batch, constrain_axis
+    x = jnp.ones((4, 4))
+    assert constrain_batch(x) is x
+    assert constrain_axis(x, 0) is x
+
+
+def test_constrain_inside_trivial_mesh():
+    from jax.sharding import Mesh
+    from repro.sharding.ctx import (constrain_axis, constrain_batch,
+                                    mesh_context, suspended)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    with mesh_context(mesh, ("data",)):
+        y = constrain_batch(jnp.ones((4, 4)))
+        assert y.shape == (4, 4)
+        with suspended():
+            z = constrain_batch(jnp.ones((4, 4)))    # dp suspended -> no-op
+            w = constrain_axis(jnp.ones((4, 4)), 1)  # model stays active
+            assert z.shape == w.shape == (4, 4)

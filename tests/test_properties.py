@@ -1,0 +1,107 @@
+"""Additional hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.core.detection import detect, masked_mean
+from repro.models import forward, init_params
+from repro.models.layers import apply_rope, rope_angles
+
+
+# ---------------------------------------------------------------------------
+# RoPE: relative-position property — dot(q_m, k_n) depends only on m − n
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 40), st.integers(0, 40), st.integers(1, 30))
+def test_rope_relative_position_invariance(m, n, shift):
+    D = 32
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+
+    def dot_at(pm, pn):
+        am = rope_angles(jnp.array([[pm]]), D, 1e4)
+        an = rope_angles(jnp.array([[pn]]), D, 1e4)
+        return float((apply_rope(q, am) * apply_rope(k, an)).sum())
+
+    d1 = dot_at(m, n)
+    d2 = dot_at(m + shift, n + shift)
+    assert abs(d1 - d2) < 1e-3 * max(1.0, abs(d1))
+
+
+# ---------------------------------------------------------------------------
+# Detection: permutation equivariance and mask size monotonicity in s
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10_000))
+def test_detection_permutation_equivariant(seed):
+    key = jax.random.PRNGKey(seed)
+    accs = jax.random.uniform(key, (12,))
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), 12)
+    m1, _ = detect(accs, 70.0)
+    m2, _ = detect(accs[perm], 70.0)
+    np.testing.assert_array_equal(np.asarray(m1)[np.asarray(perm)],
+                                  np.asarray(m2))
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10_000))
+def test_detection_stricter_s_fewer_nodes(seed):
+    key = jax.random.PRNGKey(seed)
+    accs = jax.random.uniform(key, (16,))
+    sizes = [int(detect(accs, s)[0].sum()) for s in (10, 50, 90)]
+    assert sizes[0] >= sizes[1] >= sizes[2] >= 1
+
+
+# ---------------------------------------------------------------------------
+# masked_mean: convexity — result stays inside the per-node value range
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10_000))
+def test_masked_mean_within_hull(seed):
+    key = jax.random.PRNGKey(seed)
+    vals = jax.random.normal(key, (6, 5))
+    mask = jax.random.bernoulli(jax.random.PRNGKey(seed + 1), 0.6, (6,))
+    mask = mask.at[0].set(True)
+    out = masked_mean({"w": vals}, mask)["w"]
+    sel = np.asarray(vals)[np.asarray(mask)]
+    assert (np.asarray(out) <= sel.max(0) + 1e-6).all()
+    assert (np.asarray(out) >= sel.min(0) - 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# Flash attention wired into the model path (use_flash)
+# ---------------------------------------------------------------------------
+
+def test_model_use_flash_matches_jnp_path():
+    cfg = get_smoke_config("qwen1.5-0.5b").replace(attn_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    batch = {"tokens": toks, "targets": toks}
+    l_jnp, _ = forward(params, cfg, batch)
+    l_flash, _ = forward(params, cfg.replace(use_flash=True), batch)
+    np.testing.assert_allclose(np.asarray(l_flash), np.asarray(l_jnp),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# α-mix is a contraction toward the new model (Theorem 6 structure)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(st.floats(0.05, 0.95), st.integers(0, 1000))
+def test_mix_contraction(alpha, seed):
+    from repro.core.async_update import mix
+    key = jax.random.PRNGKey(seed)
+    g = {"w": jax.random.normal(key, (8,))}
+    n = {"w": jax.random.normal(jax.random.PRNGKey(seed + 1), (8,))}
+    out = mix(g, n, alpha)
+    d_before = float(jnp.linalg.norm(g["w"] - n["w"]))
+    d_after = float(jnp.linalg.norm(out["w"] - n["w"]))
+    assert d_after <= alpha * d_before + 1e-5

@@ -1,0 +1,170 @@
+"""Substrate tests: data, optimizers, checkpointing, sharding rules, HLO cost."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpointing import load_checkpoint, save_checkpoint
+from repro.data.synthetic import (make_image_dataset, make_token_dataset,
+                                  partition_dirichlet, partition_iid)
+from repro.optim import SGD, AdamW, Momentum, make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_image_dataset_learnable_structure():
+    x, y = make_image_dataset(0, 400, hw=(14, 14))
+    assert x.shape == (400, 14, 14, 1) and x.min() >= 0 and x.max() <= 1
+    # same-class samples are closer than cross-class on average
+    d_same, d_diff = [], []
+    for c in range(3):
+        xi = x[y == c][:10].reshape(-1, 196)
+        xo = x[y != c][:10].reshape(-1, 196)
+        d_same.append(np.linalg.norm(xi[0] - xi[1:], axis=1).mean())
+        d_diff.append(np.linalg.norm(xi[0] - xo, axis=1).mean())
+    assert np.mean(d_same) < np.mean(d_diff)
+
+
+def test_partition_iid_covers_all():
+    parts = partition_iid(100, 7, 0)
+    allidx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(allidx, np.arange(100))
+
+
+def test_partition_dirichlet_nonuniform():
+    y = np.random.default_rng(0).integers(0, 10, 2000)
+    parts = partition_dirichlet(y, 5, alpha=0.1, seed=0)
+    assert sum(len(p) for p in parts) == 2000
+    # non-IID: per-node class distributions differ a lot
+    dists = []
+    for p in parts:
+        h = np.bincount(y[p], minlength=10) / max(len(p), 1)
+        dists.append(h)
+    spread = np.std(np.stack(dists), axis=0).mean()
+    assert spread > 0.05
+
+
+def test_token_dataset_markov():
+    seqs = make_token_dataset(0, 50, 32, vocab=64)
+    assert seqs.shape == (50, 33)
+    assert seqs.max() < 64 and seqs.min() >= 0
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adamw"])
+def test_optimizers_descend_quadratic(name):
+    opt = make_optimizer(name, lr=0.1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.tree.map(lambda w: 2 * w, params)
+        params, state = opt.update(params, g, state)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_state_shapes():
+    opt = AdamW(lr=1e-3)
+    params = {"a": jnp.ones((3, 4)), "b": {"c": jnp.ones(2)}}
+    state = opt.init(params)
+    assert state["m"]["a"].shape == (3, 4)
+    g = jax.tree.map(jnp.ones_like, params)
+    p2, s2 = opt.update(params, g, state)
+    assert int(s2["t"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones(4, jnp.bfloat16)}}
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, tree, step=7)
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    restored, step = load_checkpoint(path, like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (AbstractMesh — no devices needed)
+# ---------------------------------------------------------------------------
+
+def _abstract_mesh(shape=(("data", 4), ("model", 2))):
+    from jax.sharding import AbstractMesh
+    names = tuple(n for n, _ in shape)
+    sizes = tuple(s for _, s in shape)
+    return AbstractMesh(sizes, names)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "kimi-k2-1t-a32b",
+                                  "falcon-mamba-7b", "whisper-large-v3"])
+def test_param_pspecs_divisible(arch):
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.sharding import param_pspecs
+    cfg = get_smoke_config(arch)
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    mesh = _abstract_mesh()
+    specs = param_pspecs(mesh, params)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "_normalized_spec") or
+                             x.__class__.__name__ == "PartitionSpec")
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else entry
+            n = int(np.prod([dict(data=4, model=2)[a] for a in axes]))
+            assert dim % n == 0, (arch, leaf.shape, spec)
+
+
+# ---------------------------------------------------------------------------
+# HLO cost analyzer
+# ---------------------------------------------------------------------------
+
+def test_hlo_cost_counts_loop_trips():
+    from repro.launch.hlo_cost import analyze_hlo_text
+    M = 64
+
+    def f(a, b):
+        def body(c, _):
+            return jnp.tanh(c @ b), None
+        c, _ = jax.lax.scan(body, a, None, length=7)
+        return c
+
+    a = jnp.ones((M, M))
+    b = jnp.ones((M, M))
+    compiled = jax.jit(f).lower(a, b).compile()
+    cost = analyze_hlo_text(compiled.as_text())
+    assert cost.flops == pytest.approx(7 * 2 * M ** 3, rel=0.01)
+    assert cost.unknown_trip_counts == 0
+
+
+def test_hlo_cost_single_dot():
+    from repro.launch.hlo_cost import analyze_hlo_text
+    a = jnp.ones((32, 48))
+    b = jnp.ones((48, 16))
+    compiled = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    cost = analyze_hlo_text(compiled.as_text())
+    assert cost.flops == pytest.approx(2 * 32 * 48 * 16, rel=0.01)
+
+
+def test_roofline_terms():
+    from repro.launch.roofline import roofline_terms, PEAK_FLOPS
+    t = roofline_terms(PEAK_FLOPS, 0.0, 0.0)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["dominant"] == "compute_s"

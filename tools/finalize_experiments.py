@@ -1,0 +1,32 @@
+"""Inject the generated §Dry-run / §Roofline tables into EXPERIMENTS.md."""
+import io
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, "tools")
+import gen_tables  # noqa: E402
+
+
+def capture(fn, recs):
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        fn(recs)
+    return buf.getvalue()
+
+
+def main():
+    recs = gen_tables.load("results/dryrun")
+    dry = capture(gen_tables.dryrun_table, recs)
+    roof = capture(gen_tables.roofline_table, recs)
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    text = text.replace("<!-- DRYRUN_TABLE -->", dry)
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roof)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("tables injected:", len(dry.splitlines()) - 2, "dry-run rows,",
+          len(roof.splitlines()) - 2, "roofline rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ARCH_ORDER = ["smollm-360m", "olmo-1b", "qwen1.5-0.5b", "codeqwen1.5-7b",
+              "falcon-mamba-7b", "zamba2-1.2b", "whisper-large-v3",
+              "qwen2-vl-72b", "llama4-scout-17b-a16e", "kimi-k2-1t-a32b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+HINTS = {
+    ("collective_s", "moe"): "shard experts deeper / overlap a2a with expert einsum",
+    ("collective_s", "dense"): "sequence-parallel reduce-scatter for the TP activation ARs",
+    ("collective_s", "vlm"): "sequence-parallel reduce-scatter for the TP activation ARs",
+    ("collective_s", "audio"): "sequence-parallel reduce-scatter for the TP activation ARs",
+    ("collective_s", "ssm"): "batch-only sharding of scan states (avoid d_inner resharding)",
+    ("collective_s", "hybrid"): "batch-only sharding of scan states",
+    ("compute_s", "dense"): "flash-attention kernel + fp8 matmuls",
+    ("compute_s", "moe"): "drop expert capacity factor / flash attention",
+    ("memory_s", "ssm"): "fused Pallas scan (keep h in VMEM, never materialise h_all)",
+    ("memory_s", "hybrid"): "fused SSD kernel; keep chunk states in VMEM",
+    ("memory_s", "dense"): "Pallas flash attention (no score materialisation)",
+    ("memory_s", "moe"): "Pallas flash attention; bf16 dispatch buffers",
+    ("memory_s", "vlm"): "Pallas flash attention (no score materialisation)",
+    ("memory_s", "audio"): "Pallas flash attention (no score materialisation)",
+}
+
+FAMILY = {"smollm-360m": "dense", "olmo-1b": "dense", "qwen1.5-0.5b": "dense",
+          "codeqwen1.5-7b": "dense", "falcon-mamba-7b": "ssm",
+          "zamba2-1.2b": "hybrid", "whisper-large-v3": "audio",
+          "qwen2-vl-72b": "vlm", "llama4-scout-17b-a16e": "moe",
+          "kimi-k2-1t-a32b": "moe"}
+
+
+def load(results_dir):
+    recs = {}
+    for p in glob.glob(os.path.join(results_dir, "*.json")):
+        d = json.load(open(p))
+        recs[(d.get("arch"), d.get("shape"), d.get("mesh"))] = d
+    return recs
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    if x < 1e-3 or x >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.{digits}g}"
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | status | step | compile s | args GiB/dev |"
+          " temp GiB/dev | AG | AR | A2A | CP |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for mesh in ("16x16", "2x16x16"):
+        for a in ARCH_ORDER:
+            for s in SHAPE_ORDER:
+                d = recs.get((a, s, mesh))
+                if d is None:
+                    continue
+                if d.get("status") != "ok":
+                    print(f"| {a} | {s} | {mesh} | {d.get('status')} |  |  |  |  |  |  |  |  |")
+                    continue
+                m = d["memory"]
+                n_dev = 512 if mesh == "2x16x16" else 256
+                cc = d["collectives"]["count_by_type"]
+                print(f"| {a} | {s} | {mesh} | ok | {d['step_kind']} "
+                      f"| {d['timings']['compile_s']:.0f} "
+                      f"| {m['argument_size_in_bytes']/n_dev/2**30:.2f} "
+                      f"| {m['temp_size_in_bytes']/n_dev/2**30:.2f} "
+                      f"| {int(cc.get('all-gather',0))} | {int(cc.get('all-reduce',0))} "
+                      f"| {int(cc.get('all-to-all',0))} | {int(cc.get('collective-permute',0))} |")
+
+
+def roofline_table(recs):
+    print("| arch | shape | compute s | memory s (xla) | memory s (lb) |"
+          " collective s | dominant (lb) | MODEL_FLOPS | useful ratio | lever for dominant term |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = recs.get((a, s, "16x16"))
+            if d is None or d.get("status") != "ok":
+                if d is not None:
+                    print(f"| {a} | {s} | {d.get('status')} |  |  |  |  |  |  | {d.get('reason','')[:60]} |")
+                continue
+            r = d["roofline"]
+            dom3 = {"compute_s": r["compute_s"], "memory_s": r["memory_lb_s"],
+                    "collective_s": r["collective_s"]}
+            dom = max(dom3, key=dom3.get)
+            hint = HINTS.get((dom, FAMILY[a]), "")
+            print(f"| {a} | {s} | {fmt(r['compute_s'])} | {fmt(r['memory_s'])} "
+                  f"| {fmt(r['memory_lb_s'])} | {fmt(r['collective_s'])} "
+                  f"| {dom.replace('_s','')} | {fmt(r['model_flops_global'])} "
+                  f"| {r['useful_flops_ratio']} | {hint} |")
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[2] if len(sys.argv) > 2 else "results/dryrun")
+    if sys.argv[1] == "dryrun":
+        dryrun_table(recs)
+    else:
+        roofline_table(recs)
