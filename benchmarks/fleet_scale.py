@@ -1,0 +1,134 @@
+"""Fleet-scale micro-benchmark: sequential trainer vs. batched FleetEngine.
+
+Sweeps n_nodes ∈ {10, 100, 1000} on the `honest` synthetic-MLP scenario and
+reports per-round wall-clock for (a) the sequential per-node loop
+(`FederatedTrainer(use_fleet=False)`) and (b) the cohort-batched
+`FleetEngine`. The sequential loop is O(n_nodes) Python dispatches per round,
+so it is *measured* up to 100 nodes and linearly *extrapolated* (flagged) at
+1000 — running it for real there takes minutes and measures nothing new.
+
+Each invocation appends one record per swept size to the JSON trajectory at
+``results/fleet_scale.json`` so speedups are tracked across commits.
+
+  PYTHONPATH=src python -m benchmarks.fleet_scale            # the sweep
+  PYTHONPATH=src python -m benchmarks.fleet_scale --smoke    # 2-round CI run
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from .common import emit
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "fleet_scale.json")
+SWEEP = (10, 100, 1000)
+SEQ_MEASURE_MAX = 100      # sequential dispatch loop: extrapolate beyond this
+TIMED_ROUNDS = 3
+
+
+def _scenario(n_nodes: int):
+    from repro.fleet import get_scenario
+    return get_scenario("honest").with_nodes(n_nodes)
+
+
+def _build_fleet(n_nodes: int):
+    from repro.fleet import build_engine
+    return build_engine(_scenario(n_nodes), seed=0)
+
+
+def _build_sequential(n_nodes: int):
+    from repro.core import FedConfig, FederatedTrainer
+    from repro.data import make_federated_image_data
+    from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+    sc = _scenario(n_nodes)
+    node_data, test, cloud, _ = make_federated_image_data(
+        0, n_nodes=n_nodes, n_malicious=0,
+        n_train=sc.samples_per_node * n_nodes, n_test=sc.n_test,
+        n_cloud_test=sc.n_cloud_test, hw=sc.hw)
+    cfg = FedConfig(mode="sfl", n_nodes=n_nodes, rounds=1,
+                    local_steps=sc.local_steps, batch_size=sc.batch_size,
+                    lr=sc.lr, detect=False, seed=0, use_fleet=False)
+    params = init_mlp(jax.random.PRNGKey(0), sc.hw[0] * sc.hw[1])
+    return FederatedTrainer(params, mlp_loss, mlp_accuracy, node_data, test,
+                            cloud, cfg)
+
+
+def _time_fleet_round(n_nodes: int) -> float:
+    eng = _build_fleet(n_nodes)
+    eng.run_round()                          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(TIMED_ROUNDS):
+        eng.run_round()
+    return (time.perf_counter() - t0) / TIMED_ROUNDS
+
+
+def _time_sequential_round(n_nodes: int) -> float:
+    tr = _build_sequential(n_nodes)
+    tr.run()                                 # compile + warm (1 round)
+    t0 = time.perf_counter()
+    for _ in range(TIMED_ROUNDS):
+        tr.run()                             # rounds=1 per call
+    return (time.perf_counter() - t0) / TIMED_ROUNDS
+
+
+def _append_trajectory(records) -> None:
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    traj = []
+    if os.path.exists(RESULTS_PATH):
+        with open(RESULTS_PATH) as f:
+            traj = json.load(f)
+    traj.extend(records)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(traj, f, indent=1)
+
+
+def run() -> None:
+    stamp = time.strftime("%Y-%m-%dT%H:%M:%S")
+    records = []
+    seq_per_node = None
+    for n in SWEEP:
+        fleet_s = _time_fleet_round(n)
+        if n <= SEQ_MEASURE_MAX:
+            seq_s = _time_sequential_round(n)
+            seq_per_node = seq_s / n
+            estimated = False
+        else:
+            seq_s = seq_per_node * n         # linear in dispatch count
+            estimated = True
+        speedup = seq_s / fleet_s
+        emit(f"fleet_round_n{n}", fleet_s * 1e6,
+             f"seq_s={seq_s:.4f}{'(est)' if estimated else ''};"
+             f"speedup={speedup:.1f}x")
+        records.append({
+            "ts": stamp, "n_nodes": n, "fleet_s_per_round": fleet_s,
+            "seq_s_per_round": seq_s, "seq_estimated": estimated,
+            "speedup": speedup,
+        })
+    _append_trajectory(records)
+
+
+def smoke() -> None:
+    """2-round fleet run on synthetic data — the CI liveness check."""
+    eng = _build_fleet(32)
+    recs = eng.run(2)
+    for r in recs:
+        print(f"round={r.round} acc={r.accuracy:.3f} "
+              f"participants={r.n_participating} t={r.t:.2f}s")
+    assert len(recs) == 2
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="2-round 32-node fleet run (CI)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        run()

@@ -18,6 +18,7 @@ MODULES = {
     "privacy": "privacy_tradeoff",
     "ablations": "ablations",
     "comm": "comm_efficiency",
+    "fleet": "fleet_scale",
     "kernels": "kernels_micro",
     "roofline": "roofline_table",
 }

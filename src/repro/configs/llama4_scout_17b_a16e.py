@@ -20,7 +20,10 @@ def smoke_config() -> ModelConfig:
     return ModelConfig(
         name=ARCH_ID + "-smoke", family="moe", n_layers=2, d_model=256,
         n_heads=8, n_kv_heads=2, d_ff=256, vocab=512,
+        # capacity_factor 8: at smoke scale (T=32, E=4) a factor-2 capacity
+        # sits at the dropping edge, and capacity drops are batch-context
+        # dependent — they break prefill/decode vs full-forward equivalence
         moe=MoEConfig(n_experts=4, top_k=1, d_expert=256, n_shared=1,
-                      capacity_factor=2.0),
+                      capacity_factor=8.0),
         remat=False,
     )

@@ -60,6 +60,11 @@ class MomentsAccountant:
 
     def __init__(self, sigma: float, sampling_rate: float = 1.0,
                  orders: Iterable[int] = DEFAULT_ORDERS):
+        if sigma <= 0:
+            raise ValueError(
+                f"MomentsAccountant needs sigma > 0 (got {sigma}); a "
+                "zero-noise run spends no privacy budget — don't construct "
+                "an accountant for it.")
         self.sigma = float(sigma)
         self.q = float(sampling_rate)
         self.orders = tuple(orders)

@@ -22,13 +22,23 @@ def init_residual(params):
     return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
 
 
+def leaf_threshold(combined: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    """The DGC magnitude cutoff for one leaf: |value| quantile at 1−ratio.
+
+    Single source of the threshold rule — the batched Pallas backend
+    (`repro.fleet.engine`) uses the same cutoff with a `>=` keep test, so
+    both paths stay in lockstep by construction.
+    """
+    flat = jnp.abs(combined.reshape(-1)).astype(jnp.float32)
+    return jnp.quantile(flat, 1.0 - ratio)
+
+
 def sparsify_leaf(combined: jnp.ndarray, ratio: float
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Keep the top-`ratio` fraction by |value|; rest becomes the residual."""
     if ratio >= 1.0:
         return combined, jnp.zeros_like(combined)
-    flat = jnp.abs(combined.reshape(-1)).astype(jnp.float32)
-    thr = jnp.quantile(flat, 1.0 - ratio)
+    thr = leaf_threshold(combined, ratio)
     mask = jnp.abs(combined) >= thr
     upload = jnp.where(mask, combined, 0)
     residual = jnp.where(mask, 0, combined)

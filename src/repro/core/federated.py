@@ -9,6 +9,11 @@ model version it last received and its update arrives after its (heterogeneous)
 compute time; the cloud mixes it immediately (Eq. 6) without waiting for other
 nodes. The simulated clock gives the paper's running-time comparison (Fig. 7b)
 and κ = Comm/(Comp+Comm) (Eq. 5); training math runs in JAX (jitted local SGD).
+
+The synchronous schemes (sfl/sldpfl) route through the cohort-batched
+`repro.fleet.FleetEngine` by default — one device dispatch per round instead
+of K — with a per-node PRNG chain identical to the sequential reference loop
+(kept under `cfg.use_fleet=False` and tested equivalent in tests/test_fleet.py).
 """
 from __future__ import annotations
 
@@ -50,9 +55,14 @@ class FedConfig:
     bandwidth_bytes_per_s: float = 12.5e6   # 100 Mbit/s edge uplink
     base_compute_s: float = 1.0
     heterogeneity: float = 0.5      # lognormal sigma of node speeds
+    use_fleet: bool = True          # sync path: batched FleetEngine vs
+                                    # the sequential per-node reference loop
     seed: int = 0
 
     def noise_multiplier(self) -> float:
+        """σ for the configured mode; explicitly 0.0 for the no-noise
+        modes (sfl/afl) — callers must not construct privacy accountants
+        for a zero-noise run."""
         if self.mode in ("sfl", "afl"):
             return 0.0
         return self.sigma if self.sigma is not None else \
@@ -90,6 +100,7 @@ class FederatedTrainer:
         self.cfg = cfg
         self.params = init_params
         self.loss_fn = loss_fn
+        self._acc_fn_raw = acc_fn
         self.acc_fn = jax.jit(acc_fn)
         self.node_data = [(jnp.asarray(x), jnp.asarray(y)) for x, y in node_data]
         self.test_data = (jnp.asarray(test_data[0]), jnp.asarray(test_data[1]))
@@ -98,7 +109,10 @@ class FederatedTrainer:
         self.key = jax.random.PRNGKey(cfg.seed)
         self.sigma = cfg.noise_multiplier()
         self.n_params = sum(x.size for x in jax.tree.leaves(init_params))
-        self.accountant = MomentsAccountant(self.sigma or 1e9, 1.0)
+        # no-noise runs spend no privacy budget: no accountant at all (the
+        # old sentinel `sigma or 1e9` made epsilon_spent depend on a bogus σ)
+        self.accountant = (MomentsAccountant(self.sigma, 1.0)
+                           if self.sigma > 0 else None)
         self.history: List[RoundRecord] = []
         self.residuals = [accum.init_residual(init_params)
                           for _ in range(cfg.n_nodes)]
@@ -147,7 +161,7 @@ class FederatedTrainer:
 
         if self.sigma > 0:
             delta, _ = aldp.aldp_perturb(delta, k2, self.sigma, cfg.clip_s)
-            self.accountant.step()
+            self.accountant.step()  # accountant exists whenever sigma > 0
 
         omega_new = jax.tree.map(lambda a, b: a + b, start_params, delta)
         acc = float(self.acc_fn(omega_new, *self.cloud_test))
@@ -166,7 +180,57 @@ class FederatedTrainer:
         return nbytes / self.cfg.bandwidth_bytes_per_s
 
     def _run_sync(self) -> List[RoundRecord]:
-        """Synchronous FedAvg (barrier per round)."""
+        """Synchronous FedAvg (barrier per round).
+
+        Default path is the cohort-batched `repro.fleet.FleetEngine` (one
+        device dispatch per round); `cfg.use_fleet=False` keeps the original
+        per-node reference loop, which the engine is tested against.
+        """
+        if self.cfg.use_fleet:
+            return self._run_sync_fleet()
+        return self._run_sync_sequential()
+
+    def _fleet_engine(self):
+        """Build a FleetEngine faithful to this trainer: same per-node PRNG
+        chain (key_mode="sequential"), same residual/clock state."""
+        from .. import fleet  # deferred: fleet depends on repro.core
+        cfg = self.cfg
+        fcfg = fleet.FleetConfig(
+            local_steps=cfg.local_steps, batch_size=cfg.batch_size,
+            lr=cfg.lr, alpha=cfg.alpha, clip_s=cfg.clip_s, sigma=self.sigma,
+            detect=cfg.detect, detect_s=cfg.detect_s,
+            sparsify_ratio=cfg.sparsify_ratio, key_mode="sequential",
+            backend="reference", seed=cfg.seed)
+        profile = fleet.NodeProfile(
+            compute_s=self.node_time,
+            bandwidth_bps=np.full(cfg.n_nodes, cfg.bandwidth_bytes_per_s))
+        eng = fleet.FleetEngine(
+            self.params, self.loss_fn, self._acc_fn_raw, self.node_data,
+            self.test_data, self.cloud_test, fcfg, profile=profile,
+            sampler=fleet.FullParticipation())
+        eng.state = fleet.FleetState(
+            residuals=fleet.stack_trees(self.residuals),
+            chain_key=self.key, round=0)
+        return eng
+
+    def _run_sync_fleet(self) -> List[RoundRecord]:
+        cfg = self.cfg
+        eng = self._fleet_engine()
+        for r in range(cfg.rounds):
+            rec = eng.run_round()
+            if self.accountant is not None:
+                self.accountant.step(cfg.n_nodes)
+            self.params = eng.params
+            self.history.append(RoundRecord(
+                rec.t, r, rec.accuracy, rec.comm_bytes, rec.comp_time,
+                rec.comm_time, rec.n_rejected))
+        # hand node-local state back so follow-on runs stay faithful
+        self.key = eng.state.chain_key
+        from ..fleet import unstack_tree
+        self.residuals = unstack_tree(eng.state.residuals, cfg.n_nodes)
+        return self.history
+
+    def _run_sync_sequential(self) -> List[RoundRecord]:
         cfg = self.cfg
         clock = 0.0
         for r in range(cfg.rounds):
@@ -246,4 +310,7 @@ class FederatedTrainer:
         return async_update.communication_efficiency(comm, comp)
 
     def epsilon_spent(self) -> float:
-        return self.accountant.epsilon(self.cfg.delta) if self.sigma > 0 else 0.0
+        """Privacy spent so far; exactly 0 for no-noise runs (no accountant)."""
+        if self.accountant is None:
+            return 0.0
+        return self.accountant.epsilon(self.cfg.delta)

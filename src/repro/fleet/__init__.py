@@ -1,0 +1,16 @@
+"""Vectorized node-fleet simulation engine.
+
+Runs an entire cohort's federated round — local SGD, DGC sparsify, ALDP
+perturbation, cloud-side detection, Eq. (6) mixing — as one device dispatch,
+instead of the sequential trainer's K-dispatch Python loop. See
+`engine.FleetEngine` (the batched round), `state` (stacked pytree state and
+gather/scatter), and `scenarios` (declarative node populations).
+"""
+from .engine import (AvailabilityTrace, ClientSampler, FleetConfig,  # noqa: F401
+                     FleetEngine, FleetRoundRecord, FullParticipation,
+                     NodeProfile, UniformSampler, detect_masked)
+from .scenarios import SCENARIOS, Scenario, build_engine, get_scenario  # noqa: F401
+from .state import (FleetData, FleetState, broadcast_tree,  # noqa: F401
+                    chain_node_keys, gather_nodes, init_fleet_state,
+                    parallel_node_keys, scatter_nodes, stack_trees,
+                    unstack_tree)

@@ -1,0 +1,430 @@
+"""FleetEngine: cohort-batched federated rounds — one dispatch per round.
+
+The sequential `FederatedTrainer` calls `_node_update` K times per round, so
+wall-clock at fleet scale is dominated by Python dispatch, not math. The
+engine stacks the whole cohort along a leading node axis and runs
+
+  local SGD -> delta -> [DGC sparsify] -> [ALDP clip+noise]
+            -> cloud detection (Alg. 2) -> masked aggregate -> Eq. (6) mix
+
+as a single jitted program per round: `jax.vmap` over nodes of a
+`lax.scan`-ed local-SGD body, with cohort gather/scatter of the stacked
+residual state folded into the same program.
+
+Pluggable pieces:
+  * client sampling — `FullParticipation`, `UniformSampler` (paper's
+    "m of K nodes"), `AvailabilityTrace` (availability/churn traces);
+  * per-node compute/bandwidth via `NodeProfile` (replaces the trainer's
+    scalar `node_time` array);
+  * upload-pipeline backend — "reference" (pure-jnp `accumulator`/`aldp`,
+    bit-compatible with the sequential trainer) or "pallas" (the fused
+    `sparsify`/`ldp_noise` kernels in node-batched form).
+
+With `key_mode="sequential"` the engine reproduces the sequential trainer's
+per-node PRNG chain exactly (see `state.chain_node_keys`), which is how the
+rewired `FederatedTrainer` sync path stays numerically faithful to the seed
+implementation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import accumulator as accum
+from ..core import aldp, async_update, detection
+from .state import (FleetData, FleetState, chain_node_keys, gather_nodes,
+                    init_fleet_state, parallel_node_keys)
+
+
+# ---------------------------------------------------------------------------
+# client sampling
+# ---------------------------------------------------------------------------
+
+class ClientSampler:
+    """Selects each round's cohort.
+
+    `cohort(round_idx, n_nodes)` returns (idx (C,), valid (C,)) with a
+    *static* C so every round reuses one compiled program; padded slots are
+    marked invalid and contribute nothing (their residual writes are
+    dropped, their accuracies are excluded from detection).
+    """
+
+    def cohort(self, round_idx: int, n_nodes: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+
+class FullParticipation(ClientSampler):
+    """Every node, every round (the paper's synchronous barrier)."""
+
+    def cohort(self, round_idx, n_nodes):
+        return np.arange(n_nodes), np.ones(n_nodes, bool)
+
+
+class UniformSampler(ClientSampler):
+    """Uniform-C sampling without replacement (FedAvg's 'm of K' cohorts)."""
+
+    def __init__(self, cohort_size: int, seed: int = 0):
+        self.cohort_size = int(cohort_size)
+        self.rng = np.random.default_rng(seed)
+
+    def cohort(self, round_idx, n_nodes):
+        c = min(self.cohort_size, n_nodes)
+        idx = self.rng.choice(n_nodes, size=c, replace=False)
+        return idx, np.ones(c, bool)
+
+
+class AvailabilityTrace(ClientSampler):
+    """Availability/churn model: node k answers round r with prob p_k (or
+    per an explicit (rounds, N) boolean trace). Unavailable slots are padded
+    so the compiled cohort size stays N."""
+
+    def __init__(self, probs: Optional[np.ndarray] = None,
+                 trace: Optional[np.ndarray] = None, seed: int = 0):
+        if (probs is None) == (trace is None):
+            raise ValueError("give exactly one of probs= or trace=")
+        self.probs = None if probs is None else np.asarray(probs, np.float64)
+        self.trace = None if trace is None else np.asarray(trace, bool)
+        self.rng = np.random.default_rng(seed)
+
+    def cohort(self, round_idx, n_nodes):
+        src = self.trace if self.trace is not None else self.probs
+        width = src.shape[-1]
+        if width < n_nodes:
+            raise ValueError(
+                f"availability {'trace' if self.trace is not None else 'probs'}"
+                f" covers {width} nodes but the fleet has {n_nodes}")
+        if self.trace is not None:
+            up = self.trace[round_idx % len(self.trace)][:n_nodes]
+        else:
+            up = self.rng.random(n_nodes) < self.probs[:n_nodes]
+        if not up.any():              # never let a round starve entirely
+            up = up.copy()
+            up[self.rng.integers(n_nodes)] = True
+        return np.arange(n_nodes), up
+
+
+# ---------------------------------------------------------------------------
+# per-node system model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class NodeProfile:
+    """Per-node compute time and uplink bandwidth (replaces the trainer's
+    scalar `node_time` array with an explicit, extensible system model)."""
+    compute_s: np.ndarray          # (N,) seconds per local round
+    bandwidth_bps: np.ndarray      # (N,) uplink bytes/s
+
+    @classmethod
+    def lognormal(cls, n_nodes: int, base_compute_s: float,
+                  heterogeneity: float, bandwidth_bps: float,
+                  seed: int = 0, straggler_frac: float = 0.0,
+                  straggler_slowdown: float = 10.0) -> "NodeProfile":
+        """The trainer's lognormal speed model + optional straggler tail."""
+        rng = np.random.default_rng(seed)
+        comp = base_compute_s * np.exp(rng.normal(0.0, heterogeneity, n_nodes))
+        n_strag = int(round(straggler_frac * n_nodes))
+        if n_strag:
+            comp[rng.choice(n_nodes, n_strag, replace=False)] *= \
+                straggler_slowdown
+        bw = np.full(n_nodes, float(bandwidth_bps))
+        return cls(compute_s=comp, bandwidth_bps=bw)
+
+    def round_times(self, idx: np.ndarray, valid: np.ndarray,
+                    bytes_per_node: float) -> Tuple[float, float]:
+        """(comp, comm) for a synchronous cohort round: the barrier waits on
+        the slowest participant; uplinks run in parallel."""
+        sel = idx[valid]
+        if sel.size == 0:
+            return 0.0, 0.0
+        comp = float(self.compute_s[sel].max())
+        comm = float((bytes_per_node / self.bandwidth_bps[sel]).max())
+        return comp, comm
+
+
+# ---------------------------------------------------------------------------
+# config + records
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FleetConfig:
+    local_steps: int = 10
+    batch_size: int = 64
+    lr: float = 0.05
+    alpha: float = 0.5              # Eq. (6)
+    clip_s: float = 1.0
+    sigma: float = 0.0              # noise multiplier (0 disables ALDP)
+    detect: bool = True
+    detect_s: float = 80.0
+    sparsify_ratio: float = 1.0
+    key_mode: str = "parallel"      # parallel | sequential (trainer-compat)
+    backend: str = "reference"      # reference (jnp) | pallas (fused kernels)
+    seed: int = 0
+
+
+@dataclass
+class FleetRoundRecord:
+    t: float                        # simulated wall clock
+    round: int
+    accuracy: float                 # global model on the test set
+    comm_bytes: float               # total cohort upload bytes
+    comp_time: float
+    comm_time: float
+    n_participating: int
+    n_rejected: int                 # participants rejected by detection
+
+
+# ---------------------------------------------------------------------------
+# masked detection (Alg. 2 over a partially-valid cohort)
+# ---------------------------------------------------------------------------
+
+def detect_masked(accs: jnp.ndarray, valid: jnp.ndarray, s: float
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Alg. 2 with padded slots excluded: threshold is the top-s percentile
+    of the *valid* accuracies; reduces to `detection.detect` when all slots
+    are valid."""
+    masked = jnp.where(valid, accs.astype(jnp.float32), jnp.nan)
+    thr = jnp.nanpercentile(masked, s)
+    mask = (accs > thr) & valid
+    mask = jnp.where(mask.any(), mask, (accs >= thr) & valid)
+    return mask, thr
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class FleetEngine:
+    """Cohort-batched synchronous FEL over a stacked node fleet.
+
+    Args:
+      init_params: global model pytree ω_0.
+      loss_fn: (params, batch{x,y}) -> (loss, aux).
+      acc_fn: (params, x, y) -> scalar accuracy.
+      node_data: per-node (x, y) shards (list) or a prebuilt `FleetData`.
+      test_data: (x, y) for global accuracy; cloud_test: detection set (§5.4).
+      cfg: `FleetConfig`.
+      profile: `NodeProfile` (defaults to a homogeneous 1 s / 100 Mbit fleet).
+      sampler: `ClientSampler` (defaults to `FullParticipation`).
+    """
+
+    def __init__(self, init_params, loss_fn: Callable, acc_fn: Callable,
+                 node_data, test_data, cloud_test, cfg: FleetConfig,
+                 profile: Optional[NodeProfile] = None,
+                 sampler: Optional[ClientSampler] = None):
+        self.cfg = cfg
+        self.params = init_params
+        self.loss_fn = loss_fn
+        self.acc_fn = jax.jit(acc_fn)
+        self.data = (node_data if isinstance(node_data, FleetData)
+                     else FleetData.from_node_data(node_data))
+        self.n_nodes = self.data.n_nodes
+        self.test_data = (jnp.asarray(test_data[0]), jnp.asarray(test_data[1]))
+        self.cloud_test = (jnp.asarray(cloud_test[0]),
+                           jnp.asarray(cloud_test[1]))
+        self.profile = profile or NodeProfile(
+            compute_s=np.ones(self.n_nodes),
+            bandwidth_bps=np.full(self.n_nodes, 12.5e6))
+        self.sampler = sampler or FullParticipation()
+        self.state = init_fleet_state(init_params, self.n_nodes,
+                                      jax.random.PRNGKey(cfg.seed))
+        self.n_params = sum(x.size for x in jax.tree.leaves(init_params))
+        self.history: List[FleetRoundRecord] = []
+        self._round_fn = jax.jit(self._build_round())
+
+    # -- per-node upload bytes (wire format: values, or values+indices) -----
+    def bytes_per_node(self) -> float:
+        r = self.cfg.sparsify_ratio
+        if r >= 1.0:
+            return self.n_params * 4
+        return int(self.n_params * r) * 8
+
+    # -- the single-dispatch round ------------------------------------------
+    def _build_round(self):
+        cfg = self.cfg
+        loss_fn = self.loss_fn
+        raw_acc_fn = self.acc_fn
+        cloud_x, cloud_y = self.cloud_test
+
+        def local_train(params, x, y, size, key):
+            """Node-local minibatch SGD; identical math/key-use to the
+            sequential trainer's `_local_train_impl` (bounds from `size`,
+            not the padded shard length)."""
+            def body(p, k):
+                idx = jax.random.randint(k, (cfg.batch_size,), 0, size)
+                batch = {"x": x[idx], "y": y[idx]}
+                g = jax.grad(lambda pp: loss_fn(pp, batch)[0])(p)
+                return jax.tree.map(lambda a, b: a - cfg.lr * b, p, g), None
+
+            keys = jax.random.split(key, cfg.local_steps)
+            p, _ = jax.lax.scan(body, params, keys)
+            return p
+
+        def upload_pipeline(deltas, residuals_c, k2s):
+            """[DGC accumulate+sparsify] -> [ALDP clip+noise], cohort-batched."""
+            if cfg.sparsify_ratio < 1.0:
+                if cfg.backend == "pallas":
+                    deltas, residuals_c = _sparsify_pallas_cohort(
+                        deltas, residuals_c, cfg.sparsify_ratio)
+                else:
+                    deltas, residuals_c, _ = jax.vmap(
+                        lambda r, d: accum.accumulate_and_sparsify(
+                            r, d, cfg.sparsify_ratio))(residuals_c, deltas)
+            if cfg.sigma > 0.0:
+                if cfg.backend == "pallas":
+                    deltas = _aldp_pallas_cohort(deltas, k2s, cfg.sigma,
+                                                 cfg.clip_s)
+                else:
+                    deltas = jax.vmap(
+                        lambda d, k: aldp.aldp_perturb(d, k, cfg.sigma,
+                                                       cfg.clip_s)[0]
+                    )(deltas, k2s)
+            return deltas, residuals_c
+
+        def round_fn(params, residuals, chain_key, x, y, sizes, idx, valid):
+            c = idx.shape[0]
+            xg = jnp.take(x, idx, axis=0)
+            yg = jnp.take(y, idx, axis=0)
+            sz = jnp.take(sizes, idx, axis=0)
+            res_c = gather_nodes(residuals, idx)
+
+            if cfg.key_mode == "sequential":
+                chain_key, k1s, k2s = chain_node_keys(chain_key, c)
+            else:
+                chain_key, k1s, k2s = parallel_node_keys(chain_key, c)
+
+            local = jax.vmap(local_train, in_axes=(None, 0, 0, 0, 0))(
+                params, xg, yg, sz, k1s)
+            deltas = jax.tree.map(lambda l, g: l - g[None].astype(l.dtype),
+                                  local, params)
+            deltas, res_c = upload_pipeline(deltas, res_c, k2s)
+
+            # cloud side: rebuild node models, test, detect, aggregate, mix
+            omegas = jax.tree.map(lambda g, d: g[None].astype(d.dtype) + d,
+                                  params, deltas)
+            accs = jax.vmap(lambda p: raw_acc_fn(p, cloud_x, cloud_y))(omegas)
+            if cfg.detect:
+                mask, thr = detect_masked(accs, valid, cfg.detect_s)
+            else:
+                mask, thr = valid, jnp.zeros((), jnp.float32)
+            omega_mean = detection.masked_mean(omegas, mask)
+            new_params = async_update.mix(params, omega_mean, cfg.alpha)
+
+            # write cohort residuals back; padded slots scatter out of bounds
+            # and are dropped
+            drop_idx = jnp.where(valid, idx, self.n_nodes)
+            residuals = jax.tree.map(
+                lambda full, part: full.at[drop_idx].set(part, mode="drop"),
+                residuals, res_c)
+            return new_params, residuals, chain_key, {
+                "accs": accs, "mask": mask, "thr": thr}
+
+        return round_fn
+
+    # -- host-side driver ---------------------------------------------------
+    def run_round(self) -> FleetRoundRecord:
+        cfg = self.cfg
+        r = self.state.round
+        idx, valid = self.sampler.cohort(r, self.n_nodes)
+        self.params, residuals, chain_key, m = self._round_fn(
+            self.params, self.state.residuals, self.state.chain_key,
+            self.data.x, self.data.y, self.data.sizes,
+            jnp.asarray(idx, jnp.int32), jnp.asarray(valid))
+        self.state = FleetState(residuals=residuals, chain_key=chain_key,
+                                round=r + 1)
+
+        n_part = int(valid.sum())
+        n_rejected = int((np.asarray(valid) & ~np.asarray(m["mask"])).sum())
+        bpn = self.bytes_per_node()
+        comp, comm = self.profile.round_times(np.asarray(idx),
+                                              np.asarray(valid), bpn)
+        t_prev = self.history[-1].t if self.history else 0.0
+        rec = FleetRoundRecord(
+            t=t_prev + comp + comm, round=r,
+            accuracy=self.global_accuracy(), comm_bytes=bpn * n_part,
+            comp_time=comp, comm_time=comm, n_participating=n_part,
+            n_rejected=n_rejected)
+        self.history.append(rec)
+        return rec
+
+    def run(self, rounds: int) -> List[FleetRoundRecord]:
+        for _ in range(rounds):
+            self.run_round()
+        return self.history
+
+    def global_accuracy(self) -> float:
+        return float(self.acc_fn(self.params, *self.test_data))
+
+    def kappa(self) -> float:
+        """Eq. (5) over the whole run."""
+        comm = sum(r.comm_time for r in self.history)
+        comp = sum(r.comp_time for r in self.history)
+        return async_update.communication_efficiency(comm, comp)
+
+
+# ---------------------------------------------------------------------------
+# pallas-backed cohort upload pipeline
+# ---------------------------------------------------------------------------
+
+def _flatten_cohort(tree):
+    """Stacked tree with leading cohort axis -> ((C, P) flat, unflatten)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape[1:] for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    flat = jnp.concatenate([l.reshape(l.shape[0], -1).astype(jnp.float32)
+                            for l in leaves], axis=1)
+
+    def unflatten(f):
+        out, off = [], 0
+        for shape, size, leaf in zip(shapes, sizes, leaves):
+            out.append(f[:, off:off + size].reshape((f.shape[0],) + shape)
+                       .astype(leaf.dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+def _sparsify_pallas_cohort(deltas, residuals, ratio: float):
+    """Per-leaf DGC split via the node-batched `sparsify_fleet` kernel —
+    same per-leaf quantile threshold rule as `accum.accumulate_and_sparsify`,
+    but one kernel launch per leaf for the whole cohort."""
+    from ..kernels.sparsify import sparsify_fleet
+
+    def one_leaf(d, r):
+        c = d.shape[0]
+        df = d.reshape(c, -1).astype(jnp.float32)
+        rf = r.reshape(c, -1).astype(jnp.float32)
+        comb = df + rf
+        thr = jax.vmap(lambda v: accum.leaf_threshold(v, ratio))(comb)
+        up, newr = sparsify_fleet(df, rf, thr)
+        return up.reshape(d.shape).astype(d.dtype), newr.reshape(r.shape)
+
+    pairs = jax.tree.map(one_leaf, deltas, residuals)
+    up = jax.tree.map(lambda p: p[0], pairs,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    newr = jax.tree.map(lambda p: p[1], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return up, newr
+
+
+def _aldp_pallas_cohort(deltas, k2s, sigma: float, clip_s: float):
+    """Cohort ALDP via the node-batched `ldp_perturb_fleet` kernel: whole-
+    delta clip scale per node, in-kernel Gaussian noise (node-distinct
+    seeds folded from the per-node PRNG keys)."""
+    from ..kernels.ldp_noise import ldp_perturb_fleet
+
+    flat, unflatten = _flatten_cohort(deltas)
+    norms = jnp.sqrt(jnp.sum(jnp.square(flat), axis=1))
+    scales = 1.0 / jnp.maximum(1.0, norms / clip_s)
+    raw = k2s
+    if jnp.issubdtype(k2s.dtype, jax.dtypes.prng_key):   # new-style typed keys
+        raw = jax.random.key_data(k2s)
+    seeds = (raw[:, 0] ^ raw[:, -1]).astype(jnp.int32)
+    out = ldp_perturb_fleet(flat, seeds, scales, sigma, clip_s)
+    return unflatten(out)

@@ -1,0 +1,118 @@
+"""Declarative fleet scenarios: enumerate node populations, don't hand-wire.
+
+A `Scenario` describes a whole population — size, adversary fraction,
+straggler tail, availability/churn, cohort sampling, privacy/communication
+knobs — and `build_engine` turns it into a ready-to-run `FleetEngine` on
+synthetic federated data. Benchmarks, examples and tests pick scenarios by
+name from `SCENARIOS` instead of re-assembling trainers by hand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..data import make_federated_image_data
+from ..models.cnn import cnn_accuracy, cnn_loss, init_cnn
+from ..models.mlp import init_mlp, mlp_accuracy, mlp_loss
+from .engine import (AvailabilityTrace, ClientSampler, FleetConfig,
+                     FleetEngine, FullParticipation, NodeProfile,
+                     UniformSampler)
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One node population + training regime, fully declarative."""
+    name: str
+    n_nodes: int = 10
+    # population composition
+    malicious_frac: float = 0.0         # label-flipping adversaries (1 -> 7)
+    straggler_frac: float = 0.0         # nodes with `straggler_slowdown`x compute
+    straggler_slowdown: float = 10.0
+    availability: float = 1.0           # per-round P(node is reachable)
+    cohort_frac: float = 1.0            # uniform-C sampling fraction (<1)
+    heterogeneity: float = 0.5          # lognormal sigma of compute speeds
+    base_compute_s: float = 1.0
+    bandwidth_bps: float = 12.5e6
+    # training / privacy / communication
+    model: str = "mlp"                  # mlp | cnn
+    hw: Tuple[int, int] = (8, 8)
+    local_steps: int = 5
+    batch_size: int = 16
+    lr: float = 0.1
+    alpha: float = 0.5
+    sigma: float = 0.0
+    clip_s: float = 1.0
+    detect: bool = False
+    detect_s: float = 80.0
+    sparsify_ratio: float = 1.0
+    # data sizing
+    samples_per_node: int = 60
+    n_test: int = 256
+    n_cloud_test: int = 128
+
+    def with_nodes(self, n_nodes: int) -> "Scenario":
+        return dataclasses.replace(self, n_nodes=n_nodes)
+
+
+SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
+    Scenario("honest"),
+    Scenario("label_flip_20", malicious_frac=0.2, detect=True),
+    Scenario("stragglers", straggler_frac=0.2, straggler_slowdown=20.0),
+    Scenario("churn", availability=0.7),
+    Scenario("sampled_cohort", n_nodes=50, cohort_frac=0.2),
+    Scenario("private_sparse", sigma=0.05, sparsify_ratio=0.1, detect=True),
+]}
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; have "
+                       f"{sorted(SCENARIOS)}") from None
+
+
+def build_engine(sc: Scenario, seed: int = 0,
+                 sampler: Optional[ClientSampler] = None,
+                 backend: str = "reference") -> FleetEngine:
+    """Scenario -> FleetEngine on synthetic federated image data."""
+    n_malicious = int(round(sc.malicious_frac * sc.n_nodes))
+    node_data, test, cloud, _ = make_federated_image_data(
+        seed, n_nodes=sc.n_nodes, n_malicious=n_malicious,
+        n_train=sc.samples_per_node * sc.n_nodes, n_test=sc.n_test,
+        n_cloud_test=sc.n_cloud_test, hw=sc.hw)
+
+    key = jax.random.PRNGKey(seed)
+    if sc.model == "cnn":
+        params = init_cnn(key, in_hw=sc.hw)
+        loss_fn, acc_fn = cnn_loss, cnn_accuracy
+    else:
+        params = init_mlp(key, in_dim=sc.hw[0] * sc.hw[1])
+        loss_fn, acc_fn = mlp_loss, mlp_accuracy
+
+    cfg = FleetConfig(local_steps=sc.local_steps, batch_size=sc.batch_size,
+                      lr=sc.lr, alpha=sc.alpha, clip_s=sc.clip_s,
+                      sigma=sc.sigma, detect=sc.detect, detect_s=sc.detect_s,
+                      sparsify_ratio=sc.sparsify_ratio, backend=backend,
+                      seed=seed)
+    profile = NodeProfile.lognormal(
+        sc.n_nodes, sc.base_compute_s, sc.heterogeneity, sc.bandwidth_bps,
+        seed=seed, straggler_frac=sc.straggler_frac,
+        straggler_slowdown=sc.straggler_slowdown)
+
+    if sampler is None:
+        if sc.availability < 1.0:
+            sampler = AvailabilityTrace(
+                probs=np.full(sc.n_nodes, sc.availability), seed=seed)
+        elif sc.cohort_frac < 1.0:
+            sampler = UniformSampler(
+                max(1, int(round(sc.cohort_frac * sc.n_nodes))), seed=seed)
+        else:
+            sampler = FullParticipation()
+
+    return FleetEngine(params, loss_fn, acc_fn, node_data, test, cloud, cfg,
+                       profile=profile, sampler=sampler)

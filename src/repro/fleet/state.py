@@ -1,0 +1,162 @@
+"""Stacked fleet state: every per-node quantity lives on a leading node axis.
+
+The sequential `FederatedTrainer` keeps per-node state in Python lists
+(`self.residuals`, `self.node_time`) and touches one node at a time. The
+fleet engine instead stacks everything — residual pytrees, PRNG keys, data
+shards — along axis 0 so a whole cohort moves through local SGD, ALDP and
+detection in a single device program. This module is the stacking/indexing
+layer: `FleetState` (a registered pytree), `FleetData` (padded per-node
+shards), and gather/scatter helpers used to pull a sampled cohort out of the
+fleet and write its updated state back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# stacked-pytree primitives
+# ---------------------------------------------------------------------------
+
+def stack_trees(trees: Sequence):
+    """[tree, tree, ...] -> one tree with a leading node axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_tree(tree, n: int) -> List:
+    """Inverse of :func:`stack_trees`."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def broadcast_tree(tree, n: int):
+    """Tile a single tree along a new leading node axis of size ``n``."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+
+def gather_nodes(tree, idx: jnp.ndarray):
+    """Select rows ``idx`` of every leaf's leading node axis (fleet -> cohort)."""
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), tree)
+
+
+def scatter_nodes(tree, idx: jnp.ndarray, values):
+    """Write cohort rows back into the fleet (inverse of gather).
+
+    When ``idx`` contains duplicates (padded cohorts) the last write wins,
+    which is correct because duplicated rows carry identical values.
+    """
+    return jax.tree.map(lambda x, v: x.at[idx].set(v), tree, values)
+
+
+# ---------------------------------------------------------------------------
+# FleetState
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FleetState:
+    """Per-node training state, stacked along a leading node axis.
+
+    Attributes:
+      residuals: gradient-accumulation containers (§5.1), leaves (N, ...).
+      chain_key: the engine's PRNG chain key () — advanced every round.
+      round: host-side round counter (static metadata, not traced).
+    """
+    residuals: object
+    chain_key: jnp.ndarray
+    round: int = 0
+
+    @property
+    def n_nodes(self) -> int:
+        return jax.tree.leaves(self.residuals)[0].shape[0]
+
+
+jax.tree_util.register_dataclass(
+    FleetState, data_fields=["residuals", "chain_key"], meta_fields=["round"])
+
+
+def init_fleet_state(template_params, n_nodes: int, key) -> FleetState:
+    """Zero residuals for every node + the engine's starting chain key."""
+    residuals = jax.tree.map(
+        lambda x: jnp.zeros((n_nodes,) + x.shape, jnp.float32),
+        template_params)
+    return FleetState(residuals=residuals, chain_key=key, round=0)
+
+
+# ---------------------------------------------------------------------------
+# FleetData
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FleetData:
+    """Per-node data shards stacked to (N, M, ...) with right-padding.
+
+    ``sizes`` holds each node's true shard length so batched minibatch
+    sampling (`randint(0, sizes[i])`) never touches padding — matching the
+    sequential trainer's per-node `randint(0, len(x_i))` exactly when shards
+    are unpadded.
+    """
+    x: jnp.ndarray          # (N, M, ...)
+    y: jnp.ndarray          # (N, M)
+    sizes: jnp.ndarray      # (N,) int32
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.x.shape[0])
+
+    @classmethod
+    def from_node_data(cls, node_data: Sequence[Tuple[np.ndarray, np.ndarray]]
+                       ) -> "FleetData":
+        sizes = np.array([len(y) for _, y in node_data], np.int32)
+        m = int(sizes.max())
+        xs, ys = [], []
+        for x, y in node_data:
+            pad = m - len(y)
+            x, y = np.asarray(x), np.asarray(y)
+            if pad:
+                x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
+                y = np.concatenate([y, np.zeros((pad,), y.dtype)])
+            xs.append(x)
+            ys.append(y)
+        return cls(x=jnp.asarray(np.stack(xs)), y=jnp.asarray(np.stack(ys)),
+                   sizes=jnp.asarray(sizes))
+
+    def gather(self, idx: jnp.ndarray) -> "FleetData":
+        return FleetData(x=jnp.take(self.x, idx, axis=0),
+                         y=jnp.take(self.y, idx, axis=0),
+                         sizes=jnp.take(self.sizes, idx, axis=0))
+
+
+jax.tree_util.register_dataclass(
+    FleetData, data_fields=["x", "y", "sizes"], meta_fields=[])
+
+
+# ---------------------------------------------------------------------------
+# sequential-compatible key chain
+# ---------------------------------------------------------------------------
+
+def chain_node_keys(key, n: int):
+    """Replicates the sequential trainer's per-node key chain, vectorized.
+
+    The sequential loop does ``key, k1, k2 = split(key, 3)`` once per node;
+    a `lax.scan` over the same split reproduces the identical key sequence
+    in one traced program. Returns (advanced_key, k1s (n,2), k2s (n,2)).
+    """
+    def body(k, _):
+        k, k1, k2 = jax.random.split(k, 3)
+        return k, (k1, k2)
+
+    key, (k1s, k2s) = jax.lax.scan(body, key, None, length=n)
+    return key, k1s, k2s
+
+
+def parallel_node_keys(key, n: int):
+    """Order-independent key derivation: one split, no chain dependency."""
+    key, sub = jax.random.split(key)
+    ks = jax.random.split(sub, 2 * n)
+    return key, ks[:n], ks[n:]

@@ -56,6 +56,27 @@ def _kernel(seed_ref, scale_ref, g_ref, o_ref, *, sigma_s: float,
     o_ref[...] = g.astype(o_ref.dtype)
 
 
+def _fleet_kernel(seed_ref, scale_ref, g_ref, o_ref, *, sigma_s: float):
+    """Node-batched variant: grid (node, block); per-node seed/scale in SMEM.
+
+    Per-block seeding matches the flat kernel (`seed + block*7919`) so each
+    node's output is bit-identical to a standalone `ldp_perturb_flat` call
+    with that node's seed.
+    """
+    node = pl.program_id(0)
+    pid = pl.program_id(1)
+    g = g_ref[0].astype(jnp.float32) * scale_ref[node]
+    if sigma_s > 0.0:
+        shape = g.shape
+        blk_seed = seed_ref[node] + pid * 7919
+        u1 = jnp.maximum(_hash_uniform(blk_seed, 1, shape), 1e-12)
+        u2 = _hash_uniform(blk_seed, 2, shape)
+        r = jnp.sqrt(-2.0 * jnp.log(u1))
+        theta = (2.0 * math.pi) * u2
+        g = g + sigma_s * r * jnp.cos(theta)
+    o_ref[0] = g.astype(o_ref.dtype)
+
+
 def ldp_perturb_flat(flat: jnp.ndarray, seed: jnp.ndarray,
                      clip_scale: jnp.ndarray, sigma: float, clip_s: float,
                      *, block_rows: int = 256,
@@ -89,3 +110,40 @@ def ldp_perturb_flat(flat: jnp.ndarray, seed: jnp.ndarray,
         interpret=interpret,
     )(seed.reshape(1).astype(jnp.int32), clip_scale.reshape(1).astype(jnp.float32), x)
     return out.reshape(-1)[:n]
+
+
+def ldp_perturb_fleet(flat: jnp.ndarray, seeds: jnp.ndarray,
+                      clip_scales: jnp.ndarray, sigma: float, clip_s: float,
+                      *, block_rows: int = 256,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Whole-cohort ALDP pass: one kernel launch perturbs every node's delta.
+
+    flat (K, N) stacked per-node deltas; seeds (K,) int32 (must be distinct
+    per node — node-local noise); clip_scales (K,) f32 = 1/max(1,‖g_k‖/S).
+    Returns clip_scales[:,None]·flat + N(0, (σS)²), shape/dtype preserved.
+    """
+    k, n = flat.shape
+    cols = LANE
+    rows_total = -(-n // cols)
+    pad = rows_total * cols - n
+    x = jnp.pad(flat, ((0, 0), (0, pad))).reshape(k, rows_total, cols)
+    nb = -(-rows_total // block_rows)
+    pad_r = nb * block_rows - rows_total
+    if pad_r:
+        x = jnp.pad(x, ((0, 0), (0, pad_r), (0, 0)))
+
+    kernel = functools.partial(_fleet_kernel,
+                               sigma_s=float(sigma) * float(clip_s))
+    out = pl.pallas_call(
+        kernel,
+        grid=(k, nb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_rows, cols), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows, cols), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, flat.dtype),
+        interpret=interpret,
+    )(seeds.astype(jnp.int32), clip_scales.astype(jnp.float32), x)
+    return out.reshape(k, -1)[:, :n]

@@ -22,6 +22,15 @@ def _kernel(thr_ref, g_ref, r_ref, up_ref, newr_ref):
     newr_ref[...] = jnp.where(keep, 0.0, c).astype(newr_ref.dtype)
 
 
+def _fleet_kernel(thr_ref, g_ref, r_ref, up_ref, newr_ref):
+    """Node-batched variant: grid (node, block); per-node threshold in SMEM."""
+    node = pl.program_id(0)
+    c = g_ref[0].astype(jnp.float32) + r_ref[0].astype(jnp.float32)
+    keep = jnp.abs(c) >= thr_ref[node]
+    up_ref[0] = jnp.where(keep, c, 0.0).astype(up_ref.dtype)
+    newr_ref[0] = jnp.where(keep, 0.0, c).astype(newr_ref.dtype)
+
+
 def sparsify_flat(grad: jnp.ndarray, residual: jnp.ndarray,
                   threshold: jnp.ndarray, *, block_rows: int = 256,
                   interpret: bool = True):
@@ -55,3 +64,43 @@ def sparsify_flat(grad: jnp.ndarray, residual: jnp.ndarray,
         interpret=interpret,
     )(threshold.reshape(1).astype(jnp.float32), g, r)
     return up.reshape(-1)[:n], newr.reshape(-1)[:n]
+
+
+def sparsify_fleet(grads: jnp.ndarray, residuals: jnp.ndarray,
+                   thresholds: jnp.ndarray, *, block_rows: int = 256,
+                   interpret: bool = True):
+    """Whole-cohort DGC pass: one kernel launch for every node's upload split.
+
+    grads, residuals (K, N); thresholds (K,) f32 — per-node magnitude cutoffs.
+    Returns (uploads (K, N), residuals' (K, N)). Grid is (node, block) so the
+    cohort shares a single device program instead of K dispatches.
+    """
+    k, n = grads.shape
+    cols = LANE
+    rows_total = -(-n // cols)
+    pad = rows_total * cols - n
+    g = jnp.pad(grads, ((0, 0), (0, pad))).reshape(k, rows_total, cols)
+    r = jnp.pad(residuals, ((0, 0), (0, pad))).reshape(k, rows_total, cols)
+    nb = -(-rows_total // block_rows)
+    pad_r = nb * block_rows - rows_total
+    if pad_r:
+        g = jnp.pad(g, ((0, 0), (0, pad_r), (0, 0)))
+        r = jnp.pad(r, ((0, 0), (0, pad_r), (0, 0)))
+
+    up, newr = pl.pallas_call(
+        _fleet_kernel,
+        grid=(k, nb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_rows, cols), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_rows, cols), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_rows, cols), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_rows, cols), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct(g.shape, grads.dtype),
+                   jax.ShapeDtypeStruct(g.shape, residuals.dtype)],
+        interpret=interpret,
+    )(thresholds.astype(jnp.float32), g, r)
+    return (up.reshape(k, -1)[:, :n], newr.reshape(k, -1)[:, :n])

@@ -20,6 +20,9 @@ class MoEConfig:
     d_expert: int                 # hidden dim of each expert FFN
     n_shared: int = 0             # always-on shared experts (Kimi/Llama4 style)
     capacity_factor: float = 1.25
+    min_capacity: int = 4         # floor on per-expert capacity: tiny-T calls
+                                  # (decode: T = B) otherwise drop tokens the
+                                  # full-sequence forward keeps
     router_jitter: float = 0.0
     aux_loss_weight: float = 0.01
 

@@ -79,7 +79,7 @@ def moe_fwd(p: dict, cfg: ModelConfig, x: jnp.ndarray
     ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * K)
     aux = E * jnp.sum(me * ce)
 
-    C = max(1, int(T * K / E * m.capacity_factor))
+    C = max(m.min_capacity, int(T * K / E * m.capacity_factor))
     flat_e = idx.reshape(T * K)
     pos = _positions_in_expert(flat_e, E)                         # (T*K,)
 

@@ -2,6 +2,7 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))  # for tests/_optional.py
 
 import jax  # noqa: E402
 

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional import given, settings, st  # hypothesis, optional
 
 from repro.core import (MomentsAccountant, aldp_perturb, clip_by_global_norm,
                         detect, detection_threshold, epsilon_for_sigma,
@@ -80,6 +80,33 @@ def test_accountant_subsampling_amplifies():
     assert a2.epsilon(1e-5) < a1.epsilon(1e-5)
 
 
+def test_accountant_rejects_zero_sigma():
+    """No-noise runs must not construct an accountant — the old trainer
+    sentinel (`sigma or 1e9`) silently produced a near-zero ε instead."""
+    with pytest.raises(ValueError):
+        MomentsAccountant(sigma=0.0)
+    with pytest.raises(ValueError):
+        MomentsAccountant(sigma=-1.0)
+
+
+def test_trainer_no_noise_modes_have_no_accountant():
+    import numpy as _np
+    from repro.core import FedConfig, FederatedTrainer
+    from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+    x = _np.zeros((8, 4, 4, 1), _np.float32)
+    y = _np.zeros((8,), _np.int32)
+    data = ([(x, y), (x, y)], (x, y), (x, y))
+    params = init_mlp(jax.random.PRNGKey(0), 16)
+    for mode, has_acct in [("sfl", False), ("afl", False),
+                           ("sldpfl", True), ("aldpfl", True)]:
+        tr = FederatedTrainer(params, mlp_loss, mlp_accuracy, data[0],
+                              data[1], data[2],
+                              FedConfig(mode=mode, n_nodes=2, sigma=0.05))
+        assert (tr.accountant is not None) == has_acct, mode
+        if not has_acct:
+            assert tr.sigma == 0.0 and tr.epsilon_spent() == 0.0
+
+
 def test_accountant_single_gaussian_close_to_classic():
     """One release, q=1: RDP ε should be within ~2x of the classic bound."""
     sigma = 2.0
@@ -116,6 +143,40 @@ def test_mix_stale_fresh_equals_mix():
     n = {"w": jnp.arange(4.0) + 2}
     np.testing.assert_allclose(np.asarray(mix_stale(g, n, 0.5, 0)["w"]),
                                np.asarray(mix(g, n, 0.5)["w"]), rtol=1e-6)
+
+
+def test_mix_stale_tau0_reproduces_eq6():
+    """τ=0: α_eff = (1−α)·(0+1)^(−a) = 1−α exactly, so mix_stale is Eq. (6)
+    (up to one f32 rounding of the complementary weight 1−(1−α))."""
+    key = jax.random.PRNGKey(3)
+    g = {"w": jax.random.normal(key, (32,)),
+         "b": {"c": jax.random.normal(jax.random.PRNGKey(4), (4, 4))}}
+    n = jax.tree.map(lambda x: x + 1.5, g)
+    for alpha in (0.1, 0.5, 0.9):
+        assert float(staleness_alpha(alpha, 0)) == np.float32(1.0 - alpha)
+        fresh = mix_stale(g, n, alpha, 0)
+        eq6 = mix(g, n, alpha)
+        for a, b in zip(jax.tree.leaves(fresh), jax.tree.leaves(eq6)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-7)
+
+
+def test_staleness_weights_decay_monotonically():
+    taus = jnp.arange(0, 25)
+    w = np.asarray(staleness_alpha(0.5, taus))
+    assert (np.diff(w) < 0).all(), w          # strictly decreasing in τ
+    assert (w > 0).all() and w[0] == pytest.approx(0.5)
+    # stronger damping exponent decays faster at every positive staleness
+    w_strong = np.asarray(staleness_alpha(0.5, taus, a=1.0))
+    assert (w_strong[1:] < w[1:]).all()
+
+
+def test_mix_stale_large_tau_keeps_global():
+    g = {"w": jnp.arange(8.0)}
+    n = {"w": jnp.arange(8.0) + 100.0}
+    out = mix_stale(g, n, 0.5, 10_000)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]),
+                               atol=0.51)  # w_new ≈ 0.5/100 ⇒ drift ≤ 0.5
 
 
 def test_kappa():

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional import given, settings, st  # hypothesis, optional
 
 from repro.configs import get_smoke_config
 from repro.core.detection import detect, masked_mean

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional import given, settings, st  # hypothesis, optional
 
 from repro.checkpointing import load_checkpoint, save_checkpoint
 from repro.data.synthetic import (make_image_dataset, make_token_dataset,
@@ -103,9 +103,11 @@ def test_checkpoint_roundtrip(tmp_path):
 
 def _abstract_mesh(shape=(("data", 4), ("model", 2))):
     from jax.sharding import AbstractMesh
-    names = tuple(n for n, _ in shape)
-    sizes = tuple(s for _, s in shape)
-    return AbstractMesh(sizes, names)
+    try:  # jax >= 0.5 signature: AbstractMesh(axis_sizes, axis_names)
+        return AbstractMesh(tuple(s for _, s in shape),
+                            tuple(n for n, _ in shape))
+    except TypeError:  # jax 0.4.x signature: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(shape))
 
 
 @pytest.mark.parametrize("arch", ["smollm-360m", "kimi-k2-1t-a32b",

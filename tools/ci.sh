@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# One-command smoke: module-import sweep + tier-1 pytest + a 2-round fleet
+# run on synthetic data.
+#
+#   bash tools/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== 1/3 import sweep (every repro.* and benchmarks.* module) =="
+python - <<'EOF'
+import importlib
+import pkgutil
+
+import repro
+
+failures = []
+mods = ["repro"] + [m.name for m in
+                    pkgutil.walk_packages(repro.__path__, "repro.")]
+import benchmarks
+mods += ["benchmarks"] + [m.name for m in
+                          pkgutil.walk_packages(benchmarks.__path__,
+                                                "benchmarks.")]
+for name in mods:
+    try:
+        importlib.import_module(name)
+    except Exception as e:  # noqa: BLE001 - report every broken module
+        failures.append((name, repr(e)))
+for name, err in failures:
+    print(f"IMPORT FAILED: {name}: {err}")
+print(f"imported {len(mods) - len(failures)}/{len(mods)} modules")
+raise SystemExit(1 if failures else 0)
+EOF
+
+echo "== 2/3 tier-1 pytest =="
+python -m pytest -q
+
+echo "== 3/3 2-round fleet smoke on synthetic data =="
+python -m benchmarks.fleet_scale --smoke
+echo "CI OK"
