@@ -1,0 +1,130 @@
+"""Async-scale micro-benchmark: event-loop trainer vs windowed AsyncFleetEngine.
+
+Sweeps n_nodes ∈ {10, 100} on the `honest` synthetic-MLP scenario. The
+fleet engine is run for a fixed number of arrival windows; the sequential
+event loop (`FederatedTrainer(mode="afl", use_fleet=False)`) is then run
+over the *same number of processed arrivals*, so
+
+    speedup = event_loop_wall_clock / fleet_wall_clock
+
+is a per-window (equivalently per-arrival) comparison at identical
+simulated work. The event loop pays one Python/JAX dispatch per arrival;
+the engine one dispatch per window.
+
+Each invocation appends one record per swept size to the JSON trajectory at
+``results/async_scale.json`` (shared with `benchmarks.fig7_compare`'s async
+records) so speedups are tracked across commits.
+
+  PYTHONPATH=src python -m benchmarks.async_scale            # the sweep
+  PYTHONPATH=src python -m benchmarks.async_scale --smoke    # 2-window CI run
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+
+from .common import append_trajectory, emit
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "async_scale.json")
+SWEEP = (10, 100)
+TIMED_WINDOWS = 4
+
+
+def _scenario(n_nodes: int):
+    from repro.fleet import get_scenario
+    return get_scenario("honest").with_nodes(n_nodes)
+
+
+def _build_async_fleet(n_nodes: int):
+    from repro.fleet import build_async_engine
+    return build_async_engine(_scenario(n_nodes), seed=0)
+
+
+def _build_event_loop(n_nodes: int, rounds: int):
+    from repro.core import FedConfig, FederatedTrainer
+    from repro.data import make_federated_image_data
+    from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+    sc = _scenario(n_nodes)
+    node_data, test, cloud, _ = make_federated_image_data(
+        0, n_nodes=n_nodes, n_malicious=0,
+        n_train=sc.samples_per_node * n_nodes, n_test=sc.n_test,
+        n_cloud_test=sc.n_cloud_test, hw=sc.hw)
+    cfg = FedConfig(mode="afl", n_nodes=n_nodes, rounds=rounds,
+                    local_steps=sc.local_steps, batch_size=sc.batch_size,
+                    lr=sc.lr, detect=False, seed=0, use_fleet=False)
+    params = init_mlp(jax.random.PRNGKey(0), sc.hw[0] * sc.hw[1])
+    return FederatedTrainer(params, mlp_loss, mlp_accuracy, node_data, test,
+                            cloud, cfg)
+
+
+def _time_fleet(n_nodes: int):
+    """(seconds per window, arrivals actually processed per window)."""
+    eng = _build_async_fleet(n_nodes)
+    for _ in range(4):
+        eng.run_window()                     # compile likely buckets + warm
+    warm = len(eng.history)
+    t0 = time.perf_counter()
+    for _ in range(TIMED_WINDOWS):
+        eng.run_window()
+    dt = (time.perf_counter() - t0) / TIMED_WINDOWS
+    arrivals = sum(r.n_processed for r in eng.history[warm:]) / TIMED_WINDOWS
+    return dt, arrivals
+
+
+def _time_event_loop(n_nodes: int, arrivals: int) -> float:
+    """Seconds for the sequential event loop to process `arrivals`
+    (measured over whole simulated rounds of n_nodes arrivals and scaled
+    per-arrival — each `run()` call processes rounds×n_nodes arrivals)."""
+    tr = _build_event_loop(n_nodes, rounds=1)
+    tr.run()                                 # compile + warm (n_nodes arrivals)
+    rounds = max(1, round(arrivals / n_nodes))
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        tr.run()                             # one round = n_nodes arrivals
+    dt = time.perf_counter() - t0
+    return dt / (rounds * n_nodes) * arrivals
+
+
+def run() -> None:
+    stamp = time.strftime("%Y-%m-%dT%H:%M:%S")
+    records = []
+    for n in SWEEP:
+        fleet_s, arrivals = _time_fleet(n)
+        loop_s = _time_event_loop(n, int(round(arrivals * TIMED_WINDOWS))) \
+            / TIMED_WINDOWS
+        speedup = loop_s / fleet_s
+        emit(f"async_window_n{n}", fleet_s * 1e6,
+             f"loop_s={loop_s:.4f};arrivals_per_window={arrivals:.1f};"
+             f"speedup={speedup:.1f}x")
+        records.append({
+            "ts": stamp, "bench": "async_scale", "n_nodes": n,
+            "fleet_s_per_window": fleet_s, "loop_s_per_window": loop_s,
+            "arrivals_per_window": arrivals, "speedup": speedup,
+        })
+    append_trajectory(RESULTS_PATH, records)
+
+
+def smoke() -> None:
+    """2-window async fleet run on synthetic data — the CI liveness check."""
+    eng = _build_async_fleet(16)
+    for _ in range(2):
+        r = eng.run_window()
+        print(f"window={r.window} arrivals={r.n_processed} "
+              f"acc={r.accuracy:.3f} t={r.t:.2f}s version={r.version}")
+    assert len(eng.history) == 2
+    assert sum(r.n_processed for r in eng.history) >= 2
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="2-window 16-node async fleet run (CI)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        run()

@@ -1,6 +1,7 @@
 """Shared helpers for the benchmark harness (CPU-sized paper reproductions)."""
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -39,6 +40,19 @@ def build_trainer(mode: str, *, n_malicious: int = 3, detect: bool = True,
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def append_trajectory(path: str, records) -> None:
+    """Append benchmark records to a JSON trajectory file (one shared
+    format across fleet_scale/async_scale/fig7_compare)."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    traj = []
+    if os.path.exists(path):
+        with open(path) as f:
+            traj = json.load(f)
+    traj.extend(records)
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1)
 
 
 class Timer:

@@ -16,14 +16,13 @@ Each invocation appends one record per swept size to the JSON trajectory at
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
 import jax
 import numpy as np
 
-from .common import emit
+from .common import append_trajectory, emit
 
 RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
                             "fleet_scale.json")
@@ -77,17 +76,6 @@ def _time_sequential_round(n_nodes: int) -> float:
     return (time.perf_counter() - t0) / TIMED_ROUNDS
 
 
-def _append_trajectory(records) -> None:
-    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
-    traj = []
-    if os.path.exists(RESULTS_PATH):
-        with open(RESULTS_PATH) as f:
-            traj = json.load(f)
-    traj.extend(records)
-    with open(RESULTS_PATH, "w") as f:
-        json.dump(traj, f, indent=1)
-
-
 def run() -> None:
     stamp = time.strftime("%Y-%m-%dT%H:%M:%S")
     records = []
@@ -110,7 +98,7 @@ def run() -> None:
             "seq_s_per_round": seq_s, "seq_estimated": estimated,
             "speedup": speedup,
         })
-    _append_trajectory(records)
+    append_trajectory(RESULTS_PATH, records)
 
 
 def smoke() -> None:

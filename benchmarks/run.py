@@ -19,6 +19,7 @@ MODULES = {
     "ablations": "ablations",
     "comm": "comm_efficiency",
     "fleet": "fleet_scale",
+    "async": "async_scale",
     "kernels": "kernels_micro",
     "roofline": "roofline_table",
 }

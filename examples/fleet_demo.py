@@ -1,11 +1,16 @@
-"""Fleet demo: run a named scenario on the cohort-batched FleetEngine.
+"""Fleet demo: run a named scenario on the batched fleet engines.
 
 Scenarios are declarative node populations (honest, label-flip adversaries,
-stragglers, churn, sampled cohorts, private+sparse uploads) — see
-`repro.fleet.scenarios.SCENARIOS`.
+stragglers, churn, sampled cohorts, private+sparse uploads, async variants)
+— see `repro.fleet.scenarios.SCENARIOS`. `--engine sync` runs barrier
+rounds on the cohort-batched `FleetEngine`; `--engine async` runs
+virtual-time arrival windows on the `AsyncFleetEngine` (Eq. 6 mixing per
+arrival, streaming detection).
 
   PYTHONPATH=src python examples/fleet_demo.py --scenario label_flip_20 \\
       --nodes 50 --rounds 8
+  PYTHONPATH=src python examples/fleet_demo.py --engine async \\
+      --scenario async_stragglers --nodes 30 --rounds 6
 """
 import argparse
 import os
@@ -13,15 +18,18 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.fleet import SCENARIOS, build_engine, get_scenario  # noqa: E402
+from repro.fleet import (SCENARIOS, build_async_engine,  # noqa: E402
+                         build_engine, get_scenario)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="honest", choices=sorted(SCENARIOS))
+    ap.add_argument("--engine", default="sync", choices=["sync", "async"])
     ap.add_argument("--nodes", type=int, default=0,
                     help="override the scenario's population size")
-    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=8,
+                    help="sync rounds; async processes rounds*nodes arrivals")
     ap.add_argument("--backend", default="reference",
                     choices=["reference", "pallas"])
     args = ap.parse_args()
@@ -33,14 +41,22 @@ def main() -> None:
         sc = sc.with_nodes(args.nodes)
     print(f"scenario={sc.name} nodes={sc.n_nodes} model={sc.model} "
           f"sigma={sc.sigma} sparsify={sc.sparsify_ratio} "
-          f"detect={sc.detect} backend={args.backend}")
+          f"detect={sc.detect} engine={args.engine} backend={args.backend}")
 
-    eng = build_engine(sc, seed=0, backend=args.backend)
-    for rec in eng.run(args.rounds):
-        print(f"  round={rec.round:3d} t={rec.t:8.2f}s "
-              f"acc={rec.accuracy:.3f} participants={rec.n_participating:4d} "
-              f"rejected={rec.n_rejected:3d} "
-              f"bytes={rec.comm_bytes / 1e6:.2f}MB")
+    if args.engine == "async":
+        eng = build_async_engine(sc, seed=0, backend=args.backend)
+        for rec in eng.run_arrivals(args.rounds * sc.n_nodes):
+            print(f"  window={rec.window:3d} t={rec.t:8.2f}s "
+                  f"acc={rec.accuracy:.3f} arrivals={rec.n_processed:4d} "
+                  f"rejected={rec.n_rejected:3d} tau_max={rec.max_staleness:3d} "
+                  f"bytes={rec.comm_bytes / 1e6:.2f}MB")
+    else:
+        eng = build_engine(sc, seed=0, backend=args.backend)
+        for rec in eng.run(args.rounds):
+            print(f"  round={rec.round:3d} t={rec.t:8.2f}s "
+                  f"acc={rec.accuracy:.3f} participants={rec.n_participating:4d} "
+                  f"rejected={rec.n_rejected:3d} "
+                  f"bytes={rec.comm_bytes / 1e6:.2f}MB")
     print(f"final accuracy: {eng.history[-1].accuracy:.3f}")
     print(f"communication efficiency κ = {eng.kappa():.4f}")
 

@@ -4,7 +4,9 @@ from .aldp import (aldp_perturb, add_gaussian_noise,           # noqa: F401
                    clip_by_global_norm, epsilon_for_sigma, global_norm,
                    sigma_for_epsilon)
 from .async_update import (communication_efficiency, mix,      # noqa: F401
-                           mix_delta, mix_stale, staleness_alpha)
-from .detection import detect, detection_threshold, masked_mean  # noqa: F401
+                           mix_delta, mix_stale, mix_stale_sequence,
+                           staleness_alpha)
+from .detection import (detect, detection_threshold, masked_mean,  # noqa: F401
+                        ring_detect, ring_init, ring_push, ring_threshold)
 from .fed_step import FedStepConfig, fed_train_step, plain_train_step  # noqa: F401
 from .federated import FedConfig, FederatedTrainer             # noqa: F401

@@ -51,6 +51,34 @@ def mix_stale(global_tree, new_tree, alpha: float, staleness, a: float = 0.5):
         global_tree, new_tree)
 
 
+def mix_stale_sequence(global_tree, new_trees, staleness: jnp.ndarray,
+                       alpha: float, a: float = 0.5,
+                       gate: Optional[jnp.ndarray] = None):
+    """Fold a stack of arrivals into the global model in arrival order.
+
+    A `lax.scan` of :func:`mix_stale` over the leading (arrival) axis of
+    `new_trees` — the device-side equivalent of the async event loop's
+    one-mix-per-arrival sequence, tested equal to sequentially applied
+    `mix_stale`. (`AsyncFleetEngine`'s window fold interleaves this same
+    gated mixing scan with streaming detection and version tracking; this
+    standalone form is the reference for it and the public building block.)
+    `staleness` (C,) is each arrival's τ; `gate` (C,) bool skips masked
+    arrivals (default: all on).
+
+    Returns (final_tree, per-arrival snapshots with leading axis C).
+    """
+    if gate is None:
+        gate = jnp.ones(staleness.shape, bool)
+
+    def body(g, inp):
+        nt, tau, on = inp
+        mixed = mix_stale(g, nt, alpha, tau, a)
+        g = jax.tree.map(lambda m, p: jnp.where(on, m, p), mixed, g)
+        return g, g
+
+    return jax.lax.scan(body, global_tree, (new_trees, staleness, gate))
+
+
 def communication_efficiency(comm_time: float, comp_time: float) -> float:
     """Eq. (5): κ = Comm / (Comp + Comm)."""
     denom = comm_time + comp_time

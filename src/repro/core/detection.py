@@ -52,3 +52,55 @@ def masked_mean(trees, mask: jnp.ndarray):
 def evaluate_nodes(node_params, eval_fn: Callable, *eval_args) -> jnp.ndarray:
     """vmap a per-model accuracy function over the stacked node models."""
     return jax.vmap(lambda p: eval_fn(p, *eval_args))(node_params)
+
+
+# ---------------------------------------------------------------------------
+# streaming detection window (asynchronous Alg. 2)
+#
+# The asynchronous schemes have no cohort barrier, so the accuracy set 𝒜 is
+# a sliding window of the most recent arrivals. The sequential trainer kept
+# it as a Python list (`acc_window`); the fleet engines keep it device-side
+# as a fixed-size ring buffer: NaN marks never-written slots, `count` is the
+# total number of pushes (write cursor = count % window).
+# ---------------------------------------------------------------------------
+
+def default_window(n_nodes: int) -> int:
+    """Default async sliding-window length: one full fleet pass, floored so
+    tiny fleets still collect enough accuracies to threshold. The single
+    source for `FedConfig.detection_window()` and the scenario builders."""
+    return max(n_nodes, 4)
+
+
+def ring_init(window: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Empty ring of capacity `window` + zero push counter."""
+    return (jnp.full((window,), jnp.nan, jnp.float32),
+            jnp.zeros((), jnp.int32))
+
+
+def ring_push(ring: jnp.ndarray, count: jnp.ndarray, value: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Append one accuracy, overwriting the oldest once the ring is full."""
+    pos = jnp.mod(count, ring.shape[0])
+    return ring.at[pos].set(jnp.asarray(value, jnp.float32)), count + 1
+
+
+def ring_threshold(ring: jnp.ndarray, count: jnp.ndarray, s: float
+                   ) -> jnp.ndarray:
+    """Thr ← top-s% of the occupied ring slots (NaN slots excluded); the
+    window is unordered for a percentile, so this equals
+    `detection_threshold` over the trainer's `acc_window` list."""
+    occupied = jnp.arange(ring.shape[0]) < count
+    return jnp.nanpercentile(jnp.where(occupied, ring, jnp.nan), s)
+
+
+def ring_detect(ring: jnp.ndarray, count: jnp.ndarray, acc: jnp.ndarray,
+                s: float, warmup: int) -> jnp.ndarray:
+    """One async detection step: is the arrival with cloud accuracy `acc`
+    rejected? Matches the sequential event loop: the arrival's own accuracy
+    is already in the window, detection only kicks in after `warmup`
+    accuracies are *held* (the occupancy min(count, window), exactly
+    `len(acc_window)` in the event loop — so a warmup larger than the
+    window disables detection on both paths), and A ≤ Thr ⇒ malicious."""
+    thr = ring_threshold(ring, count, s)
+    held = jnp.minimum(count, ring.shape[0])
+    return (held >= warmup) & (acc <= thr)

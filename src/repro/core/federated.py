@@ -10,10 +10,14 @@ compute time; the cloud mixes it immediately (Eq. 6) without waiting for other
 nodes. The simulated clock gives the paper's running-time comparison (Fig. 7b)
 and κ = Comm/(Comp+Comm) (Eq. 5); training math runs in JAX (jitted local SGD).
 
-The synchronous schemes (sfl/sldpfl) route through the cohort-batched
-`repro.fleet.FleetEngine` by default — one device dispatch per round instead
-of K — with a per-node PRNG chain identical to the sequential reference loop
-(kept under `cfg.use_fleet=False` and tested equivalent in tests/test_fleet.py).
+Both scheme families route through `repro.fleet` by default: the
+synchronous ones (sfl/sldpfl) through the cohort-batched `FleetEngine` (one
+device dispatch per round instead of K), the asynchronous ones
+(afl/aldpfl) through the window-batched `AsyncFleetEngine` (one dispatch
+per virtual-time arrival window instead of per arrival), each with a
+per-node PRNG chain identical to the sequential reference paths (kept under
+`cfg.use_fleet=False` and tested equivalent in tests/test_fleet.py and
+tests/test_async_fleet.py).
 """
 from __future__ import annotations
 
@@ -50,6 +54,8 @@ class FedConfig:
     # detection
     detect: bool = True
     detect_s: float = 80.0
+    detect_warmup: int = 4          # async: min arrivals before detecting
+    detect_window: Optional[int] = None  # async window; None => max(n_nodes, 4)
     # communication model
     sparsify_ratio: float = 1.0     # <1 => gradient accumulation container
     bandwidth_bytes_per_s: float = 12.5e6   # 100 Mbit/s edge uplink
@@ -58,6 +64,12 @@ class FedConfig:
     use_fleet: bool = True          # sync path: batched FleetEngine vs
                                     # the sequential per-node reference loop
     seed: int = 0
+
+    def detection_window(self) -> int:
+        """Length of the async sliding accuracy window (was a magic
+        expression inline in the event loop)."""
+        return self.detect_window if self.detect_window is not None \
+            else detection.default_window(self.n_nodes)
 
     def noise_multiplier(self) -> float:
         """σ for the configured mode; explicitly 0.0 for the no-noise
@@ -257,7 +269,79 @@ class FederatedTrainer:
         return self.history
 
     def _run_async(self) -> List[RoundRecord]:
-        """Asynchronous: event-queue, Eq. (6) mix on every arrival."""
+        """Asynchronous: Eq. (6) mix on every arrival.
+
+        Default path is the window-batched `repro.fleet.AsyncFleetEngine`
+        in parity mode (auto window + sequential mixing + the trainer's
+        PRNG chain); `cfg.use_fleet=False` keeps the original per-arrival
+        event loop, which the engine is tested against.
+        """
+        if self.cfg.use_fleet:
+            return self._run_async_fleet()
+        return self._run_async_sequential()
+
+    def _async_fleet_engine(self):
+        """Build an AsyncFleetEngine faithful to this trainer: same node
+        clocks, same per-arrival PRNG chain, same detection window."""
+        from .. import fleet  # deferred: fleet depends on repro.core
+        cfg = self.cfg
+        fcfg = fleet.AsyncFleetConfig(
+            local_steps=cfg.local_steps, batch_size=cfg.batch_size,
+            lr=cfg.lr, alpha=cfg.alpha, clip_s=cfg.clip_s, sigma=self.sigma,
+            detect=cfg.detect, detect_s=cfg.detect_s,
+            sparsify_ratio=cfg.sparsify_ratio, key_mode="sequential",
+            backend="reference", seed=cfg.seed,
+            window=None, mixing="sequential",
+            staleness_adaptive=cfg.staleness_adaptive,
+            detect_warmup=cfg.detect_warmup,
+            detect_window=cfg.detection_window())
+        profile = fleet.NodeProfile(
+            compute_s=self.node_time,
+            bandwidth_bps=np.full(cfg.n_nodes, cfg.bandwidth_bytes_per_s))
+        eng = fleet.AsyncFleetEngine(
+            self.params, self.loss_fn, self._acc_fn_raw, self.node_data,
+            self.test_data, self.cloud_test, fcfg, profile=profile)
+        eng.state = dataclasses.replace(
+            eng.state, residuals=fleet.stack_trees(self.residuals),
+            chain_key=self.key)
+        return eng
+
+    def _run_async_fleet(self) -> List[RoundRecord]:
+        cfg = self.cfg
+        eng = self._async_fleet_engine()
+        total = cfg.rounds * cfg.n_nodes
+        processed = 0
+        # one RoundRecord per n_nodes arrivals, exactly like the event loop
+        # (downstream benchmarks normalize by len(history)): windows are
+        # capped so they never straddle a record boundary — a cap only
+        # truncates the arrival prefix, so the processed order is unchanged
+        span_bytes = span_comp = span_comm = 0.0
+        span_rejected = 0
+        while processed < total:
+            boundary = cfg.n_nodes - processed % cfg.n_nodes
+            rec = eng.run_window(max_arrivals=boundary, evaluate=False)
+            processed += rec.n_processed
+            if self.accountant is not None:
+                self.accountant.step(rec.n_processed)
+            self.params = eng.params
+            span_bytes += rec.comm_bytes
+            span_comp += rec.comp_time
+            span_comm += rec.comm_time
+            span_rejected += rec.n_rejected
+            if processed % cfg.n_nodes == 0:
+                self.history.append(RoundRecord(
+                    rec.t, rec.version, self.global_accuracy(), span_bytes,
+                    span_comp, span_comm, span_rejected))
+                span_bytes = span_comp = span_comm = 0.0
+                span_rejected = 0
+        # hand node-local state back so follow-on runs stay faithful
+        self.key = eng.state.chain_key
+        from ..fleet import unstack_tree
+        self.residuals = unstack_tree(eng.state.residuals, cfg.n_nodes)
+        return self.history
+
+    def _run_async_sequential(self) -> List[RoundRecord]:
+        """The per-arrival event-queue reference loop."""
         cfg = self.cfg
         version = 0
         # (arrival_time, node, dispatched_version, seq) heap
@@ -269,15 +353,19 @@ class FederatedTrainer:
         acc_window: List[float] = []
         seq = cfg.n_nodes
         processed = 0
+        # per-record accumulators: a RoundRecord spans n_nodes arrivals, so
+        # traffic/time must be summed over the span, not the last arrival
+        span_bytes = span_comp = span_comm = 0.0
+        span_rejected = 0
         while processed < total_updates:
             t, node, v_disp, _ = heapq.heappop(events)
             w, b, a = self._node_update(node, dispatched_params[node])
             comm = self._comm_time(b)
             t_arrive = t + comm
             acc_window.append(a)
-            acc_window = acc_window[-max(cfg.n_nodes, 4):]
+            acc_window = acc_window[-cfg.detection_window():]
             rejected = 0
-            if cfg.detect and len(acc_window) >= 4:
+            if cfg.detect and len(acc_window) >= cfg.detect_warmup:
                 accs = jnp.asarray(acc_window)
                 thr = detection.detection_threshold(accs, cfg.detect_s)
                 if a <= float(thr):
@@ -291,6 +379,10 @@ class FederatedTrainer:
                     self.params = async_update.mix(self.params, w, cfg.alpha)
                 version += 1
             processed += 1
+            span_bytes += b
+            span_comp += float(self.node_time[node])
+            span_comm += comm
+            span_rejected += rejected
             # redispatch node with the fresh global model
             dispatched_params[node] = self.params
             heapq.heappush(events,
@@ -298,8 +390,10 @@ class FederatedTrainer:
             seq += 1
             if processed % cfg.n_nodes == 0:
                 self.history.append(RoundRecord(
-                    t_arrive, version, self.global_accuracy(), b,
-                    float(self.node_time[node]), comm, rejected))
+                    t_arrive, version, self.global_accuracy(), span_bytes,
+                    span_comp, span_comm, span_rejected))
+                span_bytes = span_comp = span_comm = 0.0
+                span_rejected = 0
         return self.history
 
     # -- reporting --------------------------------------------------------------

@@ -3,14 +3,21 @@
 Runs an entire cohort's federated round — local SGD, DGC sparsify, ALDP
 perturbation, cloud-side detection, Eq. (6) mixing — as one device dispatch,
 instead of the sequential trainer's K-dispatch Python loop. See
-`engine.FleetEngine` (the batched round), `state` (stacked pytree state and
+`engine.FleetEngine` (the batched synchronous round),
+`async_engine.AsyncFleetEngine` (the batched virtual-time event scheduler
+for the paper's asynchronous schemes), `stages` (the shared backend-
+pluggable pipeline stages), `state` (stacked pytree state and
 gather/scatter), and `scenarios` (declarative node populations).
 """
+from .async_engine import (AsyncFleetConfig, AsyncFleetEngine,  # noqa: F401
+                           AsyncWindowRecord)
 from .engine import (AvailabilityTrace, ClientSampler, FleetConfig,  # noqa: F401
                      FleetEngine, FleetRoundRecord, FullParticipation,
                      NodeProfile, UniformSampler, detect_masked)
-from .scenarios import SCENARIOS, Scenario, build_engine, get_scenario  # noqa: F401
+from .scenarios import (SCENARIOS, Scenario, build_async_engine,  # noqa: F401
+                        build_engine, get_scenario)
 from .state import (FleetData, FleetState, broadcast_tree,  # noqa: F401
-                    chain_node_keys, gather_nodes, init_fleet_state,
+                    chain_node_keys, chain_node_keys_masked, gather_nodes,
+                    init_async_fleet_state, init_fleet_state,
                     parallel_node_keys, scatter_nodes, stack_trees,
                     unstack_tree)

@@ -1,0 +1,346 @@
+"""AsyncFleetEngine: the paper's asynchronous scheme, one dispatch per window.
+
+The sequential `FederatedTrainer._run_async` event loop pops one heap event
+at a time and runs one Python-dispatched node update per arrival — O(K)
+dispatches per simulated round, dispatch-bound past a few dozen nodes. This
+engine vectorizes the event queue itself: per-node virtual clocks
+(`FleetState.next_arrival`), dispatched model versions and the streaming
+detection window all live on device, and each step
+
+  1. selects the *arrival window*: every in-flight update landing inside
+     [t0, t0 + window) where t0 is the earliest pending arrival;
+  2. runs the shared upload pipeline (local SGD from each node's stale
+     dispatched params -> DGC sparsify -> ALDP) node-batched via
+     `fleet.stages` — one device program for the whole window;
+  3. folds the window into the global model:
+       * ``mixing="sequential"`` — a `lax.scan` over arrival order applying
+         Eq. (6) (`async_update.mix`) or the FedAsync staleness-adaptive
+         `mix_stale` per arrival, with the device-side accuracy ring buffer
+         (`core.detection.ring_*`) reproducing the event loop's sliding
+         `acc_window` detection exactly;
+       * ``mixing="buffered"`` — FedBuff-style: detect against the window
+         once, then mix the masked mean of accepted arrivals in one Eq. (6)
+         step (cheaper, coarser — diverges from the event loop by design);
+  4. redispatches each processed node with the model it would have received
+     from the cloud (sequential: the global model right after its own
+     arrival was handled) and advances its clock by uplink + compute time.
+
+With ``window=None`` (auto) the window length is min node compute time, so
+no node processed in a window can re-arrive inside it — arrivals are handled
+in exactly the event loop's global time order, and with
+``key_mode="sequential"`` + `chain_node_keys_masked` the PRNG chain is
+consumed identically. That is the *parity mode* the rewired
+`FederatedTrainer._run_async` runs in (tested float-close in
+tests/test_async_fleet.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import async_update, detection
+from . import stages
+from .engine import ClientSampler, FleetConfig, NodeProfile
+from .state import (FleetState, chain_node_keys_masked, gather_nodes,
+                    init_async_fleet_state, parallel_node_keys)
+
+
+@dataclass
+class AsyncFleetConfig(FleetConfig):
+    """`FleetConfig` + the asynchronous scheduler knobs."""
+    window: Optional[float] = None  # virtual-time window length; None =>
+                                    # min node compute time (parity-safe:
+                                    # preserves event-loop arrival order)
+    mixing: str = "sequential"      # sequential (scan of Eq. 6/mix_stale)
+                                    # | buffered (FedBuff-style masked mean)
+    staleness_adaptive: bool = False
+    staleness_a: float = 0.5        # FedAsync polynomial exponent
+    detect_warmup: int = 4          # arrivals observed before detecting
+    detect_window: int = 8          # accuracy ring-buffer capacity
+
+
+@dataclass
+class AsyncWindowRecord:
+    t: float                        # simulated clock at window end
+    window: int                     # window index
+    version: int                    # global model version after the window
+    accuracy: float                 # global model on the test set
+    comm_bytes: float               # total window upload bytes
+    comp_time: float                # summed node compute time in the window
+    comm_time: float                # summed uplink time in the window
+    n_processed: int                # arrivals handled this window
+    n_rejected: int                 # arrivals rejected by detection
+    max_staleness: int              # max τ = version − dispatched_version
+
+
+class AsyncFleetEngine:
+    """Event-driven async FEL over a stacked node fleet, batched per window.
+
+    Args mirror `FleetEngine`; `sampler` (optional) models churn: a node
+    whose arrival lands in a window while the sampler marks it unavailable
+    loses that upload (no mix, no detection entry) but is redispatched —
+    mid-flight churn rather than cohort sampling.
+    """
+
+    def __init__(self, init_params, loss_fn: Callable, acc_fn: Callable,
+                 node_data, test_data, cloud_test, cfg: AsyncFleetConfig,
+                 profile: Optional[NodeProfile] = None,
+                 sampler: Optional[ClientSampler] = None):
+        self.cfg = cfg
+        self.params = init_params
+        self.loss_fn = loss_fn
+        self.acc_fn = jax.jit(acc_fn)
+        (self.data, self.n_nodes, self.test_data, self.cloud_test,
+         self.profile, self.n_params) = stages.init_engine_common(
+            init_params, node_data, test_data, cloud_test, profile)
+        self.sampler = sampler
+        self._bpn = stages.bytes_per_node(self.n_params, cfg.sparsify_ratio)
+        # per-node uplink + compute, fixed over the run (device copies feed
+        # the jitted clock update; float64 host copies feed window selection)
+        self._comm_s = np.asarray(self._bpn / self.profile.bandwidth_bps,
+                                  np.float64)
+        self._comp_s = np.asarray(self.profile.compute_s, np.float64)
+        self._window_len = (cfg.window if cfg.window is not None
+                            else float(self._comp_s.min()))
+        if self._window_len <= 0:
+            raise ValueError(f"window must be positive, got "
+                             f"{self._window_len}")
+        self.state = init_async_fleet_state(
+            init_params, self.n_nodes, jax.random.PRNGKey(cfg.seed),
+            first_arrival=self._comp_s, detect_window=cfg.detect_window)
+        self._window_idx = 0
+        self.history: List[AsyncWindowRecord] = []
+        self._window_fn = jax.jit(self._build_window())
+
+    # -- the single-dispatch arrival window ---------------------------------
+    def _build_window(self):
+        cfg = self.cfg
+        raw_acc_fn = self.acc_fn
+        cloud_x, cloud_y = self.cloud_test
+        local_train = stages.make_local_train(self.loss_fn, cfg.local_steps,
+                                              cfg.lr, cfg.batch_size)
+        comm_s = jnp.asarray(self._comm_s, jnp.float32)
+        comp_s = jnp.asarray(self._comp_s, jnp.float32)
+        n = self.n_nodes
+
+        def sequential_fold(params, version, ring, count, omegas, accs,
+                            vdisp_c, arrived):
+            """Eq. (6)/mix_stale over arrival order with streaming
+            detection — the event loop, as one lax.scan."""
+
+            def body(carry, inp):
+                params, version, ring, count = carry
+                omega_i, acc_i, vdisp_i, arr_i = inp
+                r2, c2 = detection.ring_push(ring, count, acc_i)
+                ring = jnp.where(arr_i, r2, ring)
+                count = jnp.where(arr_i, c2, count)
+                if cfg.detect:
+                    rej = arr_i & detection.ring_detect(
+                        ring, count, acc_i, cfg.detect_s, cfg.detect_warmup)
+                else:
+                    rej = jnp.zeros((), bool)
+                tau = version - vdisp_i
+                if cfg.staleness_adaptive:
+                    mixed = async_update.mix_stale(params, omega_i, cfg.alpha,
+                                                   tau, cfg.staleness_a)
+                else:
+                    mixed = async_update.mix(params, omega_i, cfg.alpha)
+                do_mix = arr_i & ~rej
+                params = jax.tree.map(lambda m, p: jnp.where(do_mix, m, p),
+                                      mixed, params)
+                version = version + do_mix.astype(jnp.int32)
+                return ((params, version, ring, count),
+                        (params, version, rej, tau))
+
+            (params, version, ring, count), (p_seq, v_seq, rej, taus) = \
+                jax.lax.scan(body, (params, version, ring, count),
+                             (omegas, accs, vdisp_c, arrived))
+            return params, version, ring, count, p_seq, v_seq, rej, taus
+
+        def buffered_fold(params, version, ring, count, omegas, accs,
+                          vdisp_c, arrived):
+            """FedBuff-style: one detection pass over the updated window,
+            one masked-mean Eq. (6) mix for the whole buffer."""
+
+            def push(carry, inp):
+                ring, count = carry
+                acc_i, arr_i = inp
+                r2, c2 = detection.ring_push(ring, count, acc_i)
+                return (jnp.where(arr_i, r2, ring),
+                        jnp.where(arr_i, c2, count)), None
+
+            version0 = version
+            (ring, count), _ = jax.lax.scan(push, (ring, count),
+                                            (accs, arrived))
+            if cfg.detect:
+                thr = detection.ring_threshold(ring, count, cfg.detect_s)
+                held = jnp.minimum(count, ring.shape[0])
+                rej = arrived & (held >= cfg.detect_warmup) & (accs <= thr)
+            else:
+                rej = jnp.zeros_like(arrived)
+            mask = arrived & ~rej
+            omega_mean = detection.masked_mean(omegas, mask)
+            mixed = async_update.mix(params, omega_mean, cfg.alpha)
+            any_mix = mask.any()
+            params = jax.tree.map(lambda m, p: jnp.where(any_mix, m, p),
+                                  mixed, params)
+            version = version + any_mix.astype(jnp.int32)
+            taus = version0 - vdisp_c         # staleness at mix time
+            # every processed node receives the post-window model/version
+            c = vdisp_c.shape[0]
+            p_seq = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (c,) + x.shape), params)
+            v_seq = jnp.broadcast_to(version, (c,))
+            return params, version, ring, count, p_seq, v_seq, rej, taus
+
+        def window_fn(params, state: FleetState, x, y, sizes,
+                      order, proc, avail):
+            """order: node ids sorted by (arrival time, node id), truncated
+            to the compute bucket (in-window arrivals are a prefix of the
+            sort, so the host passes the smallest power-of-two cohort
+            covering them — one compiled program per bucket size); proc:
+            in-window flags (sorted positions); avail: churn mask."""
+            t_arr = jnp.take(state.next_arrival, order)
+            vdisp_c = jnp.take(state.dispatched_version, order)
+            disp_c = gather_nodes(state.dispatched, order)
+            res_c = gather_nodes(state.residuals, order)
+            xg = jnp.take(x, order, axis=0)
+            yg = jnp.take(y, order, axis=0)
+            sz = jnp.take(sizes, order, axis=0)
+
+            if cfg.key_mode == "sequential":
+                chain_key, k1s, k2s = chain_node_keys_masked(
+                    state.chain_key, proc)
+            else:
+                chain_key, k1s, k2s = parallel_node_keys(state.chain_key,
+                                                         order.shape[0])
+
+            local = jax.vmap(local_train)(disp_c, xg, yg, sz, k1s)
+            deltas = jax.tree.map(lambda l, d: l - d.astype(l.dtype),
+                                  local, disp_c)
+            deltas, res_c = stages.upload_pipeline(cfg, deltas, res_c, k2s)
+            omegas, accs = stages.rebuild_and_evaluate(
+                raw_acc_fn, disp_c, deltas, cloud_x, cloud_y)
+
+            arrived = proc & avail
+            fold = (sequential_fold if cfg.mixing == "sequential"
+                    else buffered_fold)
+            params, version, ring, count, p_seq, v_seq, rej, taus = fold(
+                params, state.version, state.acc_ring, state.acc_count,
+                omegas, accs, vdisp_c, arrived)
+
+            # redispatch: processed nodes get the model right after their
+            # own slot (sequential) / the post-window model (buffered), the
+            # matching version, and a fresh clock = arrival + uplink + next
+            # local compute. Untouched slots scatter out of bounds.
+            drop_idx = jnp.where(proc, order, n)
+            scatter = lambda full, part: jax.tree.map(
+                lambda f, p: f.at[drop_idx].set(p, mode="drop"), full, part)
+            dispatched = scatter(state.dispatched, p_seq)
+            residuals = scatter(state.residuals, res_c)
+            dv = state.dispatched_version.at[drop_idx].set(v_seq, mode="drop")
+            t_next = t_arr + jnp.take(comm_s, order) + jnp.take(comp_s, order)
+            na = state.next_arrival.at[drop_idx].set(t_next, mode="drop")
+
+            new_state = dataclasses.replace(
+                state, residuals=residuals, chain_key=chain_key,
+                dispatched=dispatched, next_arrival=na,
+                dispatched_version=dv, version=version, acc_ring=ring,
+                acc_count=count)
+            metrics = {
+                "n_rejected": (rej & arrived).sum(),
+                "max_staleness": jnp.where(arrived, taus, 0).max(),
+            }
+            return params, new_state, metrics
+
+        return window_fn
+
+    # -- host-side driver ---------------------------------------------------
+    def select_window(self, max_arrivals: Optional[int] = None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """(order, proc): node ids sorted by (arrival, id) and in-window
+        flags — every pending arrival inside [t0, t0 + window)."""
+        na = np.asarray(self.state.next_arrival, np.float64)
+        order = np.lexsort((np.arange(self.n_nodes), na))
+        proc = na[order] < na[order[0]] + self._window_len
+        if max_arrivals is not None:
+            proc &= np.cumsum(proc) <= max_arrivals
+        # in-window arrivals are a prefix of the sort: truncate the cohort
+        # to the smallest power-of-two bucket covering them so the device
+        # program only trains nodes that can arrive (one compile per bucket;
+        # floored at 16 — small fleets get a single full-size program)
+        c = 16
+        while c < int(proc.sum()):
+            c *= 2
+        c = min(c, self.n_nodes)
+        return order[:c], proc[:c]
+
+    def run_window(self, max_arrivals: Optional[int] = None,
+                   evaluate: bool = True) -> AsyncWindowRecord:
+        """Process one arrival window. `evaluate=False` skips the global
+        test-set accuracy (recorded as NaN) — callers that only consume
+        accuracy at coarser boundaries (the trainer: once per n_nodes
+        arrivals) avoid a test forward pass + device sync per window."""
+        w = self._window_idx
+        order, proc = self.select_window(max_arrivals)
+        t_arr = np.asarray(self.state.next_arrival, np.float64)[order]
+        if self.sampler is not None:
+            # cohort() returns (idx, valid) aligned to idx; fold it into a
+            # per-node availability mask (a node absent from the cohort, or
+            # present but invalid, loses arrivals this window)
+            idx_s, up = self.sampler.cohort(w, self.n_nodes)
+            up_by_node = np.zeros(self.n_nodes, bool)
+            up_by_node[np.asarray(idx_s)[np.asarray(up)]] = True
+            avail = up_by_node[order]
+        else:
+            avail = np.ones(order.size, bool)
+
+        self.params, self.state, m = self._window_fn(
+            self.params, self.state, self.data.x, self.data.y,
+            self.data.sizes, jnp.asarray(order, jnp.int32),
+            jnp.asarray(proc), jnp.asarray(avail))
+        self._window_idx = w + 1
+
+        # host-side clock/traffic accounting over the processed arrivals
+        sel = order[proc]
+        t_arrive = t_arr[proc] + self._comm_s[sel]  # arrival + uplink times
+        bpn = self._bpn
+        rec = AsyncWindowRecord(
+            t=float(t_arrive.max()) if sel.size else 0.0,
+            window=w, version=int(self.state.version),
+            accuracy=self.global_accuracy() if evaluate else float("nan"),
+            comm_bytes=float(bpn * sel.size),
+            comp_time=float(self._comp_s[sel].sum()),
+            comm_time=float(self._comm_s[sel].sum()),
+            n_processed=int(sel.size),
+            n_rejected=int(m["n_rejected"]),
+            max_staleness=int(m["max_staleness"]))
+        self.history.append(rec)
+        return rec
+
+    def run(self, windows: int) -> List[AsyncWindowRecord]:
+        for _ in range(windows):
+            self.run_window()
+        return self.history
+
+    def run_arrivals(self, total: int) -> List[AsyncWindowRecord]:
+        """Process exactly `total` arrivals (the trainer's rounds×nodes
+        budget), truncating the final window."""
+        done = 0
+        while done < total:
+            done += self.run_window(max_arrivals=total - done).n_processed
+        return self.history
+
+    def global_accuracy(self) -> float:
+        return float(self.acc_fn(self.params, *self.test_data))
+
+    def kappa(self) -> float:
+        """Eq. (5) over the whole run (per-arrival totals)."""
+        comm = sum(r.comm_time for r in self.history)
+        comp = sum(r.comp_time for r in self.history)
+        return async_update.communication_efficiency(comm, comp)

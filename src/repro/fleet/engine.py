@@ -35,9 +35,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import accumulator as accum
-from ..core import aldp, async_update, detection
-from .state import (FleetData, FleetState, chain_node_keys, gather_nodes,
+from ..core import async_update, detection
+from . import stages
+from .stages import detect_masked  # noqa: F401  (public re-export)
+from .state import (FleetState, chain_node_keys, gather_nodes,
                     init_fleet_state, parallel_node_keys)
 
 
@@ -180,22 +181,6 @@ class FleetRoundRecord:
 
 
 # ---------------------------------------------------------------------------
-# masked detection (Alg. 2 over a partially-valid cohort)
-# ---------------------------------------------------------------------------
-
-def detect_masked(accs: jnp.ndarray, valid: jnp.ndarray, s: float
-                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Alg. 2 with padded slots excluded: threshold is the top-s percentile
-    of the *valid* accuracies; reduces to `detection.detect` when all slots
-    are valid."""
-    masked = jnp.where(valid, accs.astype(jnp.float32), jnp.nan)
-    thr = jnp.nanpercentile(masked, s)
-    mask = (accs > thr) & valid
-    mask = jnp.where(mask.any(), mask, (accs >= thr) & valid)
-    return mask, thr
-
-
-# ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
 
@@ -221,70 +206,26 @@ class FleetEngine:
         self.params = init_params
         self.loss_fn = loss_fn
         self.acc_fn = jax.jit(acc_fn)
-        self.data = (node_data if isinstance(node_data, FleetData)
-                     else FleetData.from_node_data(node_data))
-        self.n_nodes = self.data.n_nodes
-        self.test_data = (jnp.asarray(test_data[0]), jnp.asarray(test_data[1]))
-        self.cloud_test = (jnp.asarray(cloud_test[0]),
-                           jnp.asarray(cloud_test[1]))
-        self.profile = profile or NodeProfile(
-            compute_s=np.ones(self.n_nodes),
-            bandwidth_bps=np.full(self.n_nodes, 12.5e6))
+        (self.data, self.n_nodes, self.test_data, self.cloud_test,
+         self.profile, self.n_params) = stages.init_engine_common(
+            init_params, node_data, test_data, cloud_test, profile)
         self.sampler = sampler or FullParticipation()
         self.state = init_fleet_state(init_params, self.n_nodes,
                                       jax.random.PRNGKey(cfg.seed))
-        self.n_params = sum(x.size for x in jax.tree.leaves(init_params))
         self.history: List[FleetRoundRecord] = []
         self._round_fn = jax.jit(self._build_round())
 
     # -- per-node upload bytes (wire format: values, or values+indices) -----
     def bytes_per_node(self) -> float:
-        r = self.cfg.sparsify_ratio
-        if r >= 1.0:
-            return self.n_params * 4
-        return int(self.n_params * r) * 8
+        return stages.bytes_per_node(self.n_params, self.cfg.sparsify_ratio)
 
     # -- the single-dispatch round ------------------------------------------
     def _build_round(self):
         cfg = self.cfg
-        loss_fn = self.loss_fn
         raw_acc_fn = self.acc_fn
         cloud_x, cloud_y = self.cloud_test
-
-        def local_train(params, x, y, size, key):
-            """Node-local minibatch SGD; identical math/key-use to the
-            sequential trainer's `_local_train_impl` (bounds from `size`,
-            not the padded shard length)."""
-            def body(p, k):
-                idx = jax.random.randint(k, (cfg.batch_size,), 0, size)
-                batch = {"x": x[idx], "y": y[idx]}
-                g = jax.grad(lambda pp: loss_fn(pp, batch)[0])(p)
-                return jax.tree.map(lambda a, b: a - cfg.lr * b, p, g), None
-
-            keys = jax.random.split(key, cfg.local_steps)
-            p, _ = jax.lax.scan(body, params, keys)
-            return p
-
-        def upload_pipeline(deltas, residuals_c, k2s):
-            """[DGC accumulate+sparsify] -> [ALDP clip+noise], cohort-batched."""
-            if cfg.sparsify_ratio < 1.0:
-                if cfg.backend == "pallas":
-                    deltas, residuals_c = _sparsify_pallas_cohort(
-                        deltas, residuals_c, cfg.sparsify_ratio)
-                else:
-                    deltas, residuals_c, _ = jax.vmap(
-                        lambda r, d: accum.accumulate_and_sparsify(
-                            r, d, cfg.sparsify_ratio))(residuals_c, deltas)
-            if cfg.sigma > 0.0:
-                if cfg.backend == "pallas":
-                    deltas = _aldp_pallas_cohort(deltas, k2s, cfg.sigma,
-                                                 cfg.clip_s)
-                else:
-                    deltas = jax.vmap(
-                        lambda d, k: aldp.aldp_perturb(d, k, cfg.sigma,
-                                                       cfg.clip_s)[0]
-                    )(deltas, k2s)
-            return deltas, residuals_c
+        local_train = stages.make_local_train(self.loss_fn, cfg.local_steps,
+                                              cfg.lr, cfg.batch_size)
 
         def round_fn(params, residuals, chain_key, x, y, sizes, idx, valid):
             c = idx.shape[0]
@@ -302,12 +243,11 @@ class FleetEngine:
                 params, xg, yg, sz, k1s)
             deltas = jax.tree.map(lambda l, g: l - g[None].astype(l.dtype),
                                   local, params)
-            deltas, res_c = upload_pipeline(deltas, res_c, k2s)
+            deltas, res_c = stages.upload_pipeline(cfg, deltas, res_c, k2s)
 
             # cloud side: rebuild node models, test, detect, aggregate, mix
-            omegas = jax.tree.map(lambda g, d: g[None].astype(d.dtype) + d,
-                                  params, deltas)
-            accs = jax.vmap(lambda p: raw_acc_fn(p, cloud_x, cloud_y))(omegas)
+            omegas, accs = stages.rebuild_and_evaluate(
+                raw_acc_fn, params, deltas, cloud_x, cloud_y)
             if cfg.detect:
                 mask, thr = detect_masked(accs, valid, cfg.detect_s)
             else:
@@ -365,66 +305,3 @@ class FleetEngine:
         comm = sum(r.comm_time for r in self.history)
         comp = sum(r.comp_time for r in self.history)
         return async_update.communication_efficiency(comm, comp)
-
-
-# ---------------------------------------------------------------------------
-# pallas-backed cohort upload pipeline
-# ---------------------------------------------------------------------------
-
-def _flatten_cohort(tree):
-    """Stacked tree with leading cohort axis -> ((C, P) flat, unflatten)."""
-    leaves, treedef = jax.tree.flatten(tree)
-    shapes = [l.shape[1:] for l in leaves]
-    sizes = [int(np.prod(s)) for s in shapes]
-    flat = jnp.concatenate([l.reshape(l.shape[0], -1).astype(jnp.float32)
-                            for l in leaves], axis=1)
-
-    def unflatten(f):
-        out, off = [], 0
-        for shape, size, leaf in zip(shapes, sizes, leaves):
-            out.append(f[:, off:off + size].reshape((f.shape[0],) + shape)
-                       .astype(leaf.dtype))
-            off += size
-        return jax.tree.unflatten(treedef, out)
-
-    return flat, unflatten
-
-
-def _sparsify_pallas_cohort(deltas, residuals, ratio: float):
-    """Per-leaf DGC split via the node-batched `sparsify_fleet` kernel —
-    same per-leaf quantile threshold rule as `accum.accumulate_and_sparsify`,
-    but one kernel launch per leaf for the whole cohort."""
-    from ..kernels.sparsify import sparsify_fleet
-
-    def one_leaf(d, r):
-        c = d.shape[0]
-        df = d.reshape(c, -1).astype(jnp.float32)
-        rf = r.reshape(c, -1).astype(jnp.float32)
-        comb = df + rf
-        thr = jax.vmap(lambda v: accum.leaf_threshold(v, ratio))(comb)
-        up, newr = sparsify_fleet(df, rf, thr)
-        return up.reshape(d.shape).astype(d.dtype), newr.reshape(r.shape)
-
-    pairs = jax.tree.map(one_leaf, deltas, residuals)
-    up = jax.tree.map(lambda p: p[0], pairs,
-                      is_leaf=lambda x: isinstance(x, tuple))
-    newr = jax.tree.map(lambda p: p[1], pairs,
-                        is_leaf=lambda x: isinstance(x, tuple))
-    return up, newr
-
-
-def _aldp_pallas_cohort(deltas, k2s, sigma: float, clip_s: float):
-    """Cohort ALDP via the node-batched `ldp_perturb_fleet` kernel: whole-
-    delta clip scale per node, in-kernel Gaussian noise (node-distinct
-    seeds folded from the per-node PRNG keys)."""
-    from ..kernels.ldp_noise import ldp_perturb_fleet
-
-    flat, unflatten = _flatten_cohort(deltas)
-    norms = jnp.sqrt(jnp.sum(jnp.square(flat), axis=1))
-    scales = 1.0 / jnp.maximum(1.0, norms / clip_s)
-    raw = k2s
-    if jnp.issubdtype(k2s.dtype, jax.dtypes.prng_key):   # new-style typed keys
-        raw = jax.random.key_data(k2s)
-    seeds = (raw[:, 0] ^ raw[:, -1]).astype(jnp.int32)
-    out = ldp_perturb_fleet(flat, seeds, scales, sigma, clip_s)
-    return unflatten(out)

@@ -15,9 +15,11 @@ from typing import Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from ..core import detection
 from ..data import make_federated_image_data
 from ..models.cnn import cnn_accuracy, cnn_loss, init_cnn
 from ..models.mlp import init_mlp, mlp_accuracy, mlp_loss
+from .async_engine import AsyncFleetConfig, AsyncFleetEngine
 from .engine import (AvailabilityTrace, ClientSampler, FleetConfig,
                      FleetEngine, FullParticipation, NodeProfile,
                      UniformSampler)
@@ -49,6 +51,10 @@ class Scenario:
     detect: bool = False
     detect_s: float = 80.0
     sparsify_ratio: float = 1.0
+    # async scheduling (consumed by build_async_engine only)
+    staleness_adaptive: bool = False
+    async_window: Optional[float] = None  # None => parity-safe auto window
+    async_mixing: str = "sequential"      # sequential | buffered
     # data sizing
     samples_per_node: int = 60
     n_test: int = 256
@@ -65,6 +71,12 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
     Scenario("churn", availability=0.7),
     Scenario("sampled_cohort", n_nodes=50, cohort_frac=0.2),
     Scenario("private_sparse", sigma=0.05, sparsify_ratio=0.1, detect=True),
+    # asynchronous populations (run via build_async_engine)
+    Scenario("async_stragglers", straggler_frac=0.2, straggler_slowdown=20.0,
+             staleness_adaptive=True),
+    Scenario("async_churn", availability=0.7),
+    Scenario("async_label_flip", malicious_frac=0.2, detect=True),
+    Scenario("async_buffered", async_mixing="buffered", async_window=2.0),
 ]}
 
 
@@ -76,10 +88,9 @@ def get_scenario(name: str) -> Scenario:
                        f"{sorted(SCENARIOS)}") from None
 
 
-def build_engine(sc: Scenario, seed: int = 0,
-                 sampler: Optional[ClientSampler] = None,
-                 backend: str = "reference") -> FleetEngine:
-    """Scenario -> FleetEngine on synthetic federated image data."""
+def _population(sc: Scenario, seed: int):
+    """Scenario -> (params, loss_fn, acc_fn, node_data, test, cloud,
+    profile): everything both engine builders share."""
     n_malicious = int(round(sc.malicious_frac * sc.n_nodes))
     node_data, test, cloud, _ = make_federated_image_data(
         seed, n_nodes=sc.n_nodes, n_malicious=n_malicious,
@@ -94,15 +105,24 @@ def build_engine(sc: Scenario, seed: int = 0,
         params = init_mlp(key, in_dim=sc.hw[0] * sc.hw[1])
         loss_fn, acc_fn = mlp_loss, mlp_accuracy
 
+    profile = NodeProfile.lognormal(
+        sc.n_nodes, sc.base_compute_s, sc.heterogeneity, sc.bandwidth_bps,
+        seed=seed, straggler_frac=sc.straggler_frac,
+        straggler_slowdown=sc.straggler_slowdown)
+    return params, loss_fn, acc_fn, node_data, test, cloud, profile
+
+
+def build_engine(sc: Scenario, seed: int = 0,
+                 sampler: Optional[ClientSampler] = None,
+                 backend: str = "reference") -> FleetEngine:
+    """Scenario -> FleetEngine on synthetic federated image data."""
+    params, loss_fn, acc_fn, node_data, test, cloud, profile = \
+        _population(sc, seed)
     cfg = FleetConfig(local_steps=sc.local_steps, batch_size=sc.batch_size,
                       lr=sc.lr, alpha=sc.alpha, clip_s=sc.clip_s,
                       sigma=sc.sigma, detect=sc.detect, detect_s=sc.detect_s,
                       sparsify_ratio=sc.sparsify_ratio, backend=backend,
                       seed=seed)
-    profile = NodeProfile.lognormal(
-        sc.n_nodes, sc.base_compute_s, sc.heterogeneity, sc.bandwidth_bps,
-        seed=seed, straggler_frac=sc.straggler_frac,
-        straggler_slowdown=sc.straggler_slowdown)
 
     if sampler is None:
         if sc.availability < 1.0:
@@ -116,3 +136,36 @@ def build_engine(sc: Scenario, seed: int = 0,
 
     return FleetEngine(params, loss_fn, acc_fn, node_data, test, cloud, cfg,
                        profile=profile, sampler=sampler)
+
+
+def build_async_engine(sc: Scenario, seed: int = 0,
+                       sampler: Optional[ClientSampler] = None,
+                       backend: str = "reference") -> AsyncFleetEngine:
+    """Scenario -> AsyncFleetEngine (virtual-time arrival windows).
+
+    `availability < 1` models mid-flight churn: arrivals from unavailable
+    nodes are lost in transit (no mix, no detection entry) but the node is
+    redispatched. `cohort_frac < 1` likewise gates arrivals per window to a
+    sampled cohort (the async analogue of 'm of K' participation).
+    """
+    params, loss_fn, acc_fn, node_data, test, cloud, profile = \
+        _population(sc, seed)
+    cfg = AsyncFleetConfig(
+        local_steps=sc.local_steps, batch_size=sc.batch_size,
+        lr=sc.lr, alpha=sc.alpha, clip_s=sc.clip_s,
+        sigma=sc.sigma, detect=sc.detect, detect_s=sc.detect_s,
+        sparsify_ratio=sc.sparsify_ratio, backend=backend, seed=seed,
+        window=sc.async_window, mixing=sc.async_mixing,
+        staleness_adaptive=sc.staleness_adaptive,
+        detect_window=detection.default_window(sc.n_nodes))
+
+    if sampler is None:
+        if sc.availability < 1.0:
+            sampler = AvailabilityTrace(
+                probs=np.full(sc.n_nodes, sc.availability), seed=seed)
+        elif sc.cohort_frac < 1.0:
+            sampler = UniformSampler(
+                max(1, int(round(sc.cohort_frac * sc.n_nodes))), seed=seed)
+
+    return AsyncFleetEngine(params, loss_fn, acc_fn, node_data, test, cloud,
+                            cfg, profile=profile, sampler=sampler)

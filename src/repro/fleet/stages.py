@@ -1,0 +1,210 @@
+"""Shared cohort-batched pipeline stages for the sync and async engines.
+
+`FleetEngine.run_round` (synchronous barrier) and
+`AsyncFleetEngine.run_window` (virtual-time arrival windows) run the same
+upload pipeline over a stacked cohort:
+
+  local SGD -> delta -> [DGC accumulate+sparsify] -> [ALDP clip+noise]
+            -> rebuild node models -> cloud-side accuracy
+
+Only the aggregation differs (barrier masked-mean vs staleness-aware
+arrival-order mixing), so the stages live here as module-level functions
+parameterized by `FleetConfig` with a pluggable backend: "reference"
+(pure-jnp `accumulator`/`aldp`, bit-compatible with the sequential
+trainer) or "pallas" (the node-batched fused `sparsify`/`ldp_noise`
+kernels).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import accumulator as accum
+from ..core import aldp, detection
+
+
+# ---------------------------------------------------------------------------
+# stage: node-local minibatch SGD
+# ---------------------------------------------------------------------------
+
+def make_local_train(loss_fn, local_steps: int, lr: float, batch_size: int):
+    """Single-node local SGD body; identical math/key-use to the sequential
+    trainer's `_local_train_impl` (bounds from `size`, not the padded shard
+    length). The sync engine vmaps it with the global params broadcast
+    (`in_axes=(None, ...)`); the async engine with per-node dispatched
+    params (`in_axes=(0, ...)`)."""
+
+    def local_train(params, x, y, size, key):
+        def body(p, k):
+            idx = jax.random.randint(k, (batch_size,), 0, size)
+            batch = {"x": x[idx], "y": y[idx]}
+            g = jax.grad(lambda pp: loss_fn(pp, batch)[0])(p)
+            return jax.tree.map(lambda a, b: a - lr * b, p, g), None
+
+        keys = jax.random.split(key, local_steps)
+        p, _ = jax.lax.scan(body, params, keys)
+        return p
+
+    return local_train
+
+
+# ---------------------------------------------------------------------------
+# stage: upload pipeline (DGC sparsify -> ALDP), cohort-batched
+# ---------------------------------------------------------------------------
+
+def upload_pipeline(cfg, deltas, residuals_c, k2s):
+    """[DGC accumulate+sparsify] -> [ALDP clip+noise] over a stacked cohort.
+
+    `cfg` needs `.sparsify_ratio`, `.sigma`, `.clip_s`, `.backend`.
+    Returns (uploaded deltas, updated cohort residuals)."""
+    if cfg.sparsify_ratio < 1.0:
+        if cfg.backend == "pallas":
+            deltas, residuals_c = sparsify_pallas_cohort(
+                deltas, residuals_c, cfg.sparsify_ratio)
+        else:
+            deltas, residuals_c, _ = jax.vmap(
+                lambda r, d: accum.accumulate_and_sparsify(
+                    r, d, cfg.sparsify_ratio))(residuals_c, deltas)
+    if cfg.sigma > 0.0:
+        if cfg.backend == "pallas":
+            deltas = aldp_pallas_cohort(deltas, k2s, cfg.sigma, cfg.clip_s)
+        else:
+            deltas = jax.vmap(
+                lambda d, k: aldp.aldp_perturb(d, k, cfg.sigma,
+                                               cfg.clip_s)[0])(deltas, k2s)
+    return deltas, residuals_c
+
+
+def rebuild_and_evaluate(acc_fn, start_params, deltas, cloud_x, cloud_y):
+    """Rebuild every node's uploaded model ω_new = ω_start + Δ and score it
+    on the cloud testing dataset (§5.4). `start_params` is either the global
+    model (sync: leaves without node axis, broadcast) or the stacked
+    dispatched params (async: leading node axis)."""
+    broadcast = (jax.tree.leaves(deltas)[0].ndim
+                 > jax.tree.leaves(start_params)[0].ndim)
+    if broadcast:       # start_params has no node axis: broadcast it
+        omegas = jax.tree.map(lambda g, d: g[None].astype(d.dtype) + d,
+                              start_params, deltas)
+    else:
+        omegas = jax.tree.map(lambda g, d: g.astype(d.dtype) + d,
+                              start_params, deltas)
+    accs = jax.vmap(lambda p: acc_fn(p, cloud_x, cloud_y))(omegas)
+    return omegas, accs
+
+
+# ---------------------------------------------------------------------------
+# stage: masked detection (Alg. 2 over a partially-valid cohort)
+# ---------------------------------------------------------------------------
+
+def detect_masked(accs: jnp.ndarray, valid: jnp.ndarray, s: float
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Alg. 2 with padded slots excluded: threshold is the top-s percentile
+    of the *valid* accuracies; reduces to `detection.detect` when all slots
+    are valid."""
+    masked = jnp.where(valid, accs.astype(jnp.float32), jnp.nan)
+    thr = jnp.nanpercentile(masked, s)
+    mask = (accs > thr) & valid
+    mask = jnp.where(mask.any(), mask, (accs >= thr) & valid)
+    return mask, thr
+
+
+# ---------------------------------------------------------------------------
+# pallas-backed cohort upload pipeline
+# ---------------------------------------------------------------------------
+
+def flatten_cohort(tree):
+    """Stacked tree with leading cohort axis -> ((C, P) flat, unflatten)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape[1:] for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    flat = jnp.concatenate([l.reshape(l.shape[0], -1).astype(jnp.float32)
+                            for l in leaves], axis=1)
+
+    def unflatten(f):
+        out, off = [], 0
+        for shape, size, leaf in zip(shapes, sizes, leaves):
+            out.append(f[:, off:off + size].reshape((f.shape[0],) + shape)
+                       .astype(leaf.dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+def sparsify_pallas_cohort(deltas, residuals, ratio: float):
+    """Per-leaf DGC split via the node-batched `sparsify_fleet` kernel —
+    same per-leaf quantile threshold rule as `accum.accumulate_and_sparsify`,
+    but one kernel launch per leaf for the whole cohort."""
+    from ..kernels.sparsify import sparsify_fleet
+
+    def one_leaf(d, r):
+        c = d.shape[0]
+        df = d.reshape(c, -1).astype(jnp.float32)
+        rf = r.reshape(c, -1).astype(jnp.float32)
+        comb = df + rf
+        thr = jax.vmap(lambda v: accum.leaf_threshold(v, ratio))(comb)
+        up, newr = sparsify_fleet(df, rf, thr)
+        return up.reshape(d.shape).astype(d.dtype), newr.reshape(r.shape)
+
+    pairs = jax.tree.map(one_leaf, deltas, residuals)
+    up = jax.tree.map(lambda p: p[0], pairs,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    newr = jax.tree.map(lambda p: p[1], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return up, newr
+
+
+def aldp_pallas_cohort(deltas, k2s, sigma: float, clip_s: float):
+    """Cohort ALDP via the node-batched `ldp_perturb_fleet` kernel: whole-
+    delta clip scale per node, in-kernel Gaussian noise (node-distinct
+    seeds folded from the per-node PRNG keys)."""
+    from ..kernels.ldp_noise import ldp_perturb_fleet
+
+    flat, unflatten = flatten_cohort(deltas)
+    norms = jnp.sqrt(jnp.sum(jnp.square(flat), axis=1))
+    scales = 1.0 / jnp.maximum(1.0, norms / clip_s)
+    raw = k2s
+    if jnp.issubdtype(k2s.dtype, jax.dtypes.prng_key):   # new-style typed keys
+        raw = jax.random.key_data(k2s)
+    seeds = (raw[:, 0] ^ raw[:, -1]).astype(jnp.int32)
+    out = ldp_perturb_fleet(flat, seeds, scales, sigma, clip_s)
+    return unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# construction + wire-format accounting shared by both engines
+# ---------------------------------------------------------------------------
+
+DEFAULT_BANDWIDTH_BPS = 12.5e6      # 100 Mbit/s edge uplink
+
+
+def init_engine_common(init_params, node_data, test_data, cloud_test,
+                       profile):
+    """The setup both engines share: coerce per-node shards to `FleetData`,
+    move eval sets to device, default the system profile, count params.
+
+    Returns (data, n_nodes, test_data, cloud_test, profile, n_params)."""
+    from .engine import NodeProfile       # deferred: engine imports stages
+    from .state import FleetData
+
+    data = (node_data if isinstance(node_data, FleetData)
+            else FleetData.from_node_data(node_data))
+    n_nodes = data.n_nodes
+    test = (jnp.asarray(test_data[0]), jnp.asarray(test_data[1]))
+    cloud = (jnp.asarray(cloud_test[0]), jnp.asarray(cloud_test[1]))
+    profile = profile or NodeProfile(
+        compute_s=np.ones(n_nodes),
+        bandwidth_bps=np.full(n_nodes, DEFAULT_BANDWIDTH_BPS))
+    n_params = sum(x.size for x in jax.tree.leaves(init_params))
+    return data, n_nodes, test, cloud, profile, n_params
+
+
+def bytes_per_node(n_params: int, sparsify_ratio: float) -> float:
+    """Upload size per node: dense f32 values, or (value, index) pairs for a
+    sparsified upload — matches `accumulator.upload_bytes`."""
+    if sparsify_ratio >= 1.0:
+        return n_params * 4
+    return int(n_params * sparsify_ratio) * 8

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,10 +66,29 @@ class FleetState:
       residuals: gradient-accumulation containers (§5.1), leaves (N, ...).
       chain_key: the engine's PRNG chain key () — advanced every round.
       round: host-side round counter (static metadata, not traced).
+
+    The asynchronous engine additionally tracks (None for sync engines):
+      dispatched: stacked params each node last received and trains from,
+        leaves (N, ...) — asynchrony means nodes hold *stale* models.
+      next_arrival: (N,) f32 virtual time each node's in-flight update
+        finishes local compute (the event heap, vectorized).
+      dispatched_version: (N,) i32 global-model version each node's
+        in-flight update was trained from (staleness τ = version − this).
+      version: () i32 global model version (increments per accepted mix).
+      acc_ring: (W,) f32 streaming detection window of recent cloud-side
+        accuracies (NaN = empty slot) — replaces the trainer's Python
+        `acc_window` list; acc_count: () i32 total accuracies ever pushed
+        (write cursor = acc_count % W).
     """
     residuals: object
     chain_key: jnp.ndarray
     round: int = 0
+    dispatched: object = None
+    next_arrival: Optional[jnp.ndarray] = None
+    dispatched_version: Optional[jnp.ndarray] = None
+    version: Optional[jnp.ndarray] = None
+    acc_ring: Optional[jnp.ndarray] = None
+    acc_count: Optional[jnp.ndarray] = None
 
     @property
     def n_nodes(self) -> int:
@@ -77,7 +96,10 @@ class FleetState:
 
 
 jax.tree_util.register_dataclass(
-    FleetState, data_fields=["residuals", "chain_key"], meta_fields=["round"])
+    FleetState,
+    data_fields=["residuals", "chain_key", "dispatched", "next_arrival",
+                 "dispatched_version", "version", "acc_ring", "acc_count"],
+    meta_fields=["round"])
 
 
 def init_fleet_state(template_params, n_nodes: int, key) -> FleetState:
@@ -86,6 +108,23 @@ def init_fleet_state(template_params, n_nodes: int, key) -> FleetState:
         lambda x: jnp.zeros((n_nodes,) + x.shape, jnp.float32),
         template_params)
     return FleetState(residuals=residuals, chain_key=key, round=0)
+
+
+def init_async_fleet_state(template_params, n_nodes: int, key,
+                           first_arrival: np.ndarray,
+                           detect_window: int) -> FleetState:
+    """Async extension of :func:`init_fleet_state`: every node starts with
+    the global model (version 0) in flight, arriving when its first local
+    compute finishes; the detection ring starts empty."""
+    st = init_fleet_state(template_params, n_nodes, key)
+    return dataclasses.replace(
+        st,
+        dispatched=broadcast_tree(template_params, n_nodes),
+        next_arrival=jnp.asarray(first_arrival, jnp.float32),
+        dispatched_version=jnp.zeros((n_nodes,), jnp.int32),
+        version=jnp.zeros((), jnp.int32),
+        acc_ring=jnp.full((detect_window,), jnp.nan, jnp.float32),
+        acc_count=jnp.zeros((), jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -160,3 +199,30 @@ def parallel_node_keys(key, n: int):
     key, sub = jax.random.split(key)
     ks = jax.random.split(sub, 2 * n)
     return key, ks[:n], ks[n:]
+
+
+def _select_key(pred, a, b):
+    """`jnp.where` that also works on new-style typed PRNG keys."""
+    if jnp.issubdtype(a.dtype, jax.dtypes.prng_key):
+        return jax.random.wrap_key_data(
+            jnp.where(pred, jax.random.key_data(a), jax.random.key_data(b)),
+            impl=jax.random.key_impl(a))
+    return jnp.where(pred, a, b)
+
+
+def chain_node_keys_masked(key, mask: jnp.ndarray):
+    """:func:`chain_node_keys` that advances the chain only on True slots.
+
+    The async engine processes a whole fleet-sized cohort each window but
+    only the in-window arrivals consume PRNG keys (exactly as the sequential
+    event loop splits 3-ways once per processed arrival); masked-out slots
+    leave the chain untouched so the key sequence stays identical to the
+    event loop's regardless of how arrivals bucket into windows. k1/k2 of
+    masked-out slots are speculative splits — callers must not use them.
+    """
+    def body(k, m):
+        nk, k1, k2 = jax.random.split(k, 3)
+        return _select_key(m, nk, k), (k1, k2)
+
+    key, (k1s, k2s) = jax.lax.scan(body, key, mask)
+    return key, k1s, k2s

@@ -1,0 +1,309 @@
+"""Async fleet engine tests: event-loop parity, streaming detection,
+staleness-aware mixing, window accounting, async scenarios."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FedConfig, FederatedTrainer, detection_threshold,
+                        mix_stale, mix_stale_sequence, ring_detect, ring_init,
+                        ring_push, ring_threshold)
+from repro.data import make_federated_image_data
+from repro.fleet import (build_async_engine, chain_node_keys,
+                         chain_node_keys_masked, get_scenario)
+from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+
+
+# ---------------------------------------------------------------------------
+# streaming detection ring ≡ the event loop's Python acc_window list
+# ---------------------------------------------------------------------------
+
+def test_ring_matches_list_window():
+    rng = np.random.default_rng(0)
+    accs = rng.uniform(0.1, 0.9, 23).astype(np.float32)
+    window, warmup, s = 7, 4, 80.0
+    ring, count = ring_init(window)
+    acc_list = []
+    for a in accs:
+        ring, count = ring_push(ring, count, jnp.float32(a))
+        acc_list.append(float(a))
+        acc_list = acc_list[-window:]
+        thr_ref = float(detection_threshold(jnp.asarray(acc_list), s))
+        assert float(ring_threshold(ring, count, s)) == \
+            pytest.approx(thr_ref, abs=1e-6)
+        rej_ref = len(acc_list) >= warmup and float(a) <= thr_ref
+        rej = bool(ring_detect(ring, count, jnp.float32(a), s, warmup))
+        assert rej == rej_ref
+
+
+def test_ring_warmup_blocks_detection():
+    ring, count = ring_init(8)
+    ring, count = ring_push(ring, count, jnp.float32(0.0))
+    # one observation: even a terrible accuracy is not rejected yet
+    assert not bool(ring_detect(ring, count, jnp.float32(0.0), 80.0, 4))
+
+
+def test_ring_warmup_larger_than_window_never_detects():
+    """The event loop caps its acc_window at the window length before the
+    warmup check, so warmup > window disables detection; the ring must
+    gate on occupancy (min(count, window)), not total pushes."""
+    ring, count = ring_init(8)
+    for v in np.linspace(0.1, 0.9, 30):
+        ring, count = ring_push(ring, count, jnp.float32(v))
+        assert not bool(ring_detect(ring, count, jnp.float32(v), 80.0, 20))
+
+
+# ---------------------------------------------------------------------------
+# masked PRNG chain
+# ---------------------------------------------------------------------------
+
+def test_chain_node_keys_masked_skips_masked_slots():
+    key = jax.random.PRNGKey(3)
+    mask = jnp.array([True, False, True, True, False])
+    kend, k1s, k2s = chain_node_keys_masked(key, mask)
+    # reference: plain chain over only the True slots
+    kref, k1r, k2r = chain_node_keys(key, 3)
+    np.testing.assert_array_equal(np.asarray(kend), np.asarray(kref))
+    on = [0, 2, 3]
+    for j, i in enumerate(on):
+        np.testing.assert_array_equal(np.asarray(k1s[i]), np.asarray(k1r[j]))
+        np.testing.assert_array_equal(np.asarray(k2s[i]), np.asarray(k2r[j]))
+
+
+# ---------------------------------------------------------------------------
+# staleness-aware sequential mixing
+# ---------------------------------------------------------------------------
+
+def test_mix_stale_sequence_matches_sequential_application():
+    key = jax.random.PRNGKey(0)
+    tree = {"w": jax.random.normal(key, (4, 3)), "b": jnp.ones((3,))}
+    stack = {"w": jax.random.normal(key, (6, 4, 3)),
+             "b": jax.random.normal(jax.random.PRNGKey(1), (6, 3))}
+    taus = jnp.array([0, 3, 1, 7, 2, 0])
+    final, snaps = mix_stale_sequence(tree, stack, taus, alpha=0.5)
+    ref = tree
+    for i in range(6):
+        ref = mix_stale(ref, jax.tree.map(lambda x: x[i], stack), 0.5,
+                        int(taus[i]))
+        for a, b in zip(jax.tree.leaves(jax.tree.map(lambda x: x[i], snaps)),
+                        jax.tree.leaves(ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+    for a, b in zip(jax.tree.leaves(final), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_mix_stale_sequence_gate_skips_arrivals():
+    tree = {"w": jnp.zeros((2,))}
+    stack = {"w": jnp.ones((3, 2))}
+    gate = jnp.array([True, False, True])
+    final, _ = mix_stale_sequence(tree, stack, jnp.zeros(3, jnp.int32), 0.5,
+                                  gate=gate)
+    ref, _ = mix_stale_sequence(tree, {"w": jnp.ones((2, 2))},
+                                jnp.zeros(2, jnp.int32), 0.5)
+    np.testing.assert_allclose(np.asarray(final["w"]), np.asarray(ref["w"]),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine ≡ sequential event loop (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+def _paired_async_trainers(mode, sigma, sparsify, staleness_adaptive=False):
+    node_data, test, cloud, _ = make_federated_image_data(
+        0, n_nodes=8, n_malicious=2, n_train=640, n_test=256,
+        n_cloud_test=128, hw=(8, 8))
+
+    def mk(use_fleet):
+        cfg = FedConfig(mode=mode, n_nodes=8, rounds=4, local_steps=8,
+                        batch_size=16, lr=0.1, detect=True, sigma=sigma,
+                        sparsify_ratio=sparsify, seed=0, use_fleet=use_fleet,
+                        staleness_adaptive=staleness_adaptive)
+        return FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64),
+                                mlp_loss, mlp_accuracy, node_data, test,
+                                cloud, cfg)
+
+    return mk(True), mk(False)
+
+
+@pytest.mark.parametrize("mode,sigma,sparsify,stale", [
+    ("afl", None, 1.0, False),        # plain async + detection
+    ("aldpfl", 0.05, 1.0, False),     # + LDP noise (shared PRNG chain)
+    ("aldpfl", 0.05, 0.25, False),    # + DGC sparsified uploads
+    ("afl", None, 1.0, True),         # staleness-adaptive mixing
+])
+def test_async_fleet_matches_event_loop(mode, sigma, sparsify, stale):
+    fleet_tr, seq_tr = _paired_async_trainers(mode, sigma, sparsify, stale)
+    hf = fleet_tr.run()
+    hs = seq_tr.run()
+    for a, b in zip(jax.tree.leaves(fleet_tr.params),
+                    jax.tree.leaves(seq_tr.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # same record cadence (one per n_nodes arrivals) and same trajectory
+    assert len(hf) == len(hs)
+    np.testing.assert_allclose([r.accuracy for r in hf],
+                               [r.accuracy for r in hs], atol=2e-3)
+    np.testing.assert_allclose([r.t for r in hf], [r.t for r in hs],
+                               rtol=1e-5)
+    assert [r.comm_bytes for r in hf] == [r.comm_bytes for r in hs]
+    assert [r.n_rejected for r in hf] == [r.n_rejected for r in hs]
+    assert fleet_tr.epsilon_spent() == pytest.approx(seq_tr.epsilon_spent())
+
+
+def test_async_fleet_key_chain_hand_back():
+    """After a fleet-async run the trainer's PRNG key equals the event
+    loop's, so follow-on work stays faithful."""
+    fleet_tr, seq_tr = _paired_async_trainers("afl", None, 1.0)
+    fleet_tr.run()
+    seq_tr.run()
+    np.testing.assert_array_equal(np.asarray(fleet_tr.key),
+                                  np.asarray(seq_tr.key))
+
+
+# ---------------------------------------------------------------------------
+# async metrics accounting (the comm_bytes/kappa fix)
+# ---------------------------------------------------------------------------
+
+def _total_bytes(mode, use_fleet):
+    node_data, test, cloud, _ = make_federated_image_data(
+        0, n_nodes=6, n_malicious=0, n_train=360, n_test=128,
+        n_cloud_test=64, hw=(8, 8))
+    cfg = FedConfig(mode=mode, n_nodes=6, rounds=3, local_steps=4,
+                    batch_size=16, lr=0.1, detect=False, sparsify_ratio=1.0,
+                    seed=0, use_fleet=use_fleet)
+    tr = FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64), mlp_loss,
+                          mlp_accuracy, node_data, test, cloud, cfg)
+    hist = tr.run()
+    return sum(r.comm_bytes for r in hist), tr
+
+
+@pytest.mark.parametrize("use_fleet", [True, False])
+def test_async_total_bytes_match_sync(use_fleet):
+    """rounds×n_nodes arrivals at sparsify=1 move exactly as many bytes as
+    rounds synchronous cohorts — the old per-record accounting understated
+    async traffic by ~n_nodes×."""
+    async_bytes, async_tr = _total_bytes("afl", use_fleet)
+    sync_bytes, _ = _total_bytes("sfl", use_fleet)
+    assert async_bytes == sync_bytes
+    # kappa now reflects per-arrival comp/comm totals, not the last arrival
+    assert 0.0 < async_tr.kappa() < 1.0
+
+
+def test_fedconfig_detection_window_fields():
+    cfg = FedConfig(n_nodes=10)
+    assert cfg.detection_window() == 10 and cfg.detect_warmup == 4
+    assert FedConfig(n_nodes=2).detection_window() == 4
+    assert FedConfig(n_nodes=10, detect_window=6).detection_window() == 6
+
+
+# ---------------------------------------------------------------------------
+# staleness under stragglers at fleet scale
+# ---------------------------------------------------------------------------
+
+def test_straggler_profile_grows_staleness():
+    """A straggler's dispatched model ages while fast nodes keep mixing:
+    max τ under a straggler tail must exceed the homogeneous fleet's."""
+    sc = get_scenario("async_stragglers").with_nodes(12)
+    slow = build_async_engine(sc, seed=0)
+    fast = build_async_engine(
+        dataclasses.replace(sc, straggler_frac=0.0, heterogeneity=0.0),
+        seed=0)
+    slow.run_arrivals(48)
+    fast.run_arrivals(48)
+    tau_slow = max(r.max_staleness for r in slow.history)
+    tau_fast = max(r.max_staleness for r in fast.history)
+    assert tau_slow > tau_fast, (tau_slow, tau_fast)
+    assert tau_slow >= 12          # the straggler misses >= one full fleet pass
+
+
+def test_staleness_adaptive_discounts_stale_arrivals():
+    """mix_stale with growing τ shrinks the new-model weight (FedAsync)."""
+    from repro.core.async_update import staleness_alpha
+    w0 = float(staleness_alpha(0.5, 0))
+    w9 = float(staleness_alpha(0.5, 9))
+    assert w0 == pytest.approx(0.5) and w9 < w0 / 3
+
+
+# ---------------------------------------------------------------------------
+# window semantics
+# ---------------------------------------------------------------------------
+
+def test_auto_window_preserves_arrival_order():
+    """With window=None no processed node can re-arrive inside the window:
+    every window's arrivals all precede the next window's."""
+    eng = build_async_engine(get_scenario("honest").with_nodes(10), seed=0)
+    ends = []
+    for _ in range(6):
+        na_before = np.asarray(eng.state.next_arrival, np.float64)
+        order, proc = eng.select_window()
+        ts = na_before[order[proc]]
+        eng.run_window()
+        ends.append((ts.min(), ts.max()))
+    for (lo1, hi1), (lo2, hi2) in zip(ends, ends[1:]):
+        assert hi1 <= lo2 + 1e-6, (hi1, lo2)
+
+
+def test_run_arrivals_truncates_final_window():
+    eng = build_async_engine(get_scenario("honest").with_nodes(8), seed=0)
+    eng.run_arrivals(11)
+    assert sum(r.n_processed for r in eng.history) == 11
+
+
+def test_buffered_mixing_runs_and_learns():
+    sc = dataclasses.replace(get_scenario("async_buffered"), local_steps=10,
+                             lr=0.2)
+    eng = build_async_engine(sc, seed=0)
+    eng.run_arrivals(60)
+    assert eng.history[-1].accuracy > eng.history[0].accuracy + 0.1, \
+        [r.accuracy for r in eng.history]
+    # buffered mode bumps the version once per non-empty window
+    assert eng.state is not None
+    assert int(eng.state.version) <= len(eng.history)
+
+
+def test_async_scenarios_build_and_run():
+    for name in ("async_stragglers", "async_churn", "async_label_flip",
+                 "async_buffered"):
+        eng = build_async_engine(get_scenario(name).with_nodes(8), seed=0)
+        recs = eng.run(2)
+        assert len(recs) == 2
+        assert all(0.0 <= r.accuracy <= 1.0 for r in recs)
+
+
+def test_async_churn_drops_arrivals():
+    """Unavailable nodes' uploads are lost: fewer mixes than arrivals."""
+    eng = build_async_engine(get_scenario("async_churn").with_nodes(10),
+                             seed=0)
+    eng.run_arrivals(30)
+    processed = sum(r.n_processed for r in eng.history)
+    assert processed == 30
+    # version counts accepted mixes only; churn must have dropped some
+    assert int(eng.state.version) < processed
+
+
+def test_async_cohort_sampler_gates_arrivals():
+    """Any ClientSampler works: a UniformSampler cohort maps to per-node
+    availability, dropping arrivals from unsampled nodes that window."""
+    from repro.fleet import UniformSampler
+    sc = get_scenario("sampled_cohort").with_nodes(12)   # cohort_frac=0.2
+    eng = build_async_engine(sc, seed=0)
+    assert isinstance(eng.sampler, UniformSampler)
+    eng.run_arrivals(24)
+    processed = sum(r.n_processed for r in eng.history)
+    assert processed == 24
+    assert int(eng.state.version) < processed   # unsampled arrivals dropped
+
+
+def test_async_detection_rejects_malicious_nodes():
+    eng = build_async_engine(get_scenario("async_label_flip").with_nodes(10),
+                             seed=0)
+    eng.run_arrivals(40)
+    assert sum(r.n_rejected for r in eng.history) > 0
+
+
+def test_async_engine_rejects_bad_window():
+    sc = get_scenario("honest").with_nodes(4)
+    with pytest.raises(ValueError, match="window"):
+        build_async_engine(dataclasses.replace(sc, async_window=-1.0), seed=0)

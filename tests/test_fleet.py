@@ -287,11 +287,11 @@ def test_pallas_backend_matches_reference_without_noise():
 def test_pallas_backend_noise_magnitude():
     """With σ>0 the pallas noise source differs from jax.random but its
     statistics must match N(0, (σS)²) on the uploaded deltas."""
-    from repro.fleet.engine import _aldp_pallas_cohort
+    from repro.fleet.stages import aldp_pallas_cohort
     zeros = {"w": jnp.zeros((4, 4096))}
     k2s = jax.random.split(jax.random.PRNGKey(0), 4)
     sigma, clip_s = 0.5, 2.0
-    out = _aldp_pallas_cohort(zeros, k2s, sigma, clip_s)["w"]
+    out = aldp_pallas_cohort(zeros, k2s, sigma, clip_s)["w"]
     stds = np.asarray(out).std(axis=1)
     np.testing.assert_allclose(stds, sigma * clip_s, rtol=0.1)
     # node-distinct seeds => node-distinct noise

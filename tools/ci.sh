@@ -35,6 +35,7 @@ EOF
 echo "== 2/3 tier-1 pytest =="
 python -m pytest -q
 
-echo "== 3/3 2-round fleet smoke on synthetic data =="
+echo "== 3/3 fleet smokes on synthetic data (2 sync rounds + 2 async windows) =="
 python -m benchmarks.fleet_scale --smoke
+python -m benchmarks.async_scale --smoke
 echo "CI OK"
