@@ -11,6 +11,10 @@ arrival, streaming detection).
       --nodes 50 --rounds 8
   PYTHONPATH=src python examples/fleet_demo.py --engine async \\
       --scenario async_stragglers --nodes 30 --rounds 6
+
+`--mesh D` shards the node axis over D local devices and runs the round /
+window programs under shard_map (on a CPU-only host, fake the devices with
+XLA_FLAGS=--xla_force_host_platform_device_count=D).
 """
 import argparse
 import os
@@ -18,7 +22,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.fleet import (SCENARIOS, build_async_engine,  # noqa: E402
+from repro.fleet import (SCENARIOS, FleetMesh, build_async_engine,  # noqa: E402
                          build_engine, get_scenario)
 
 
@@ -32,26 +36,31 @@ def main() -> None:
                     help="sync rounds; async processes rounds*nodes arrivals")
     ap.add_argument("--backend", default="reference",
                     choices=["reference", "pallas"])
+    ap.add_argument("--mesh", type=int, default=0, metavar="D",
+                    help="shard the node axis over D local devices "
+                         "(0 = single-device engines)")
     args = ap.parse_args()
     if args.nodes < 0 or args.rounds < 1:
         ap.error("--nodes must be >= 0 and --rounds >= 1")
+    mesh = FleetMesh.create(args.mesh) if args.mesh else None
 
     sc = get_scenario(args.scenario)
     if args.nodes:
         sc = sc.with_nodes(args.nodes)
     print(f"scenario={sc.name} nodes={sc.n_nodes} model={sc.model} "
           f"sigma={sc.sigma} sparsify={sc.sparsify_ratio} "
-          f"detect={sc.detect} engine={args.engine} backend={args.backend}")
+          f"detect={sc.detect} engine={args.engine} backend={args.backend}"
+          + (f" mesh={args.mesh}" if mesh else ""))
 
     if args.engine == "async":
-        eng = build_async_engine(sc, seed=0, backend=args.backend)
+        eng = build_async_engine(sc, seed=0, backend=args.backend, mesh=mesh)
         for rec in eng.run_arrivals(args.rounds * sc.n_nodes):
             print(f"  window={rec.window:3d} t={rec.t:8.2f}s "
                   f"acc={rec.accuracy:.3f} arrivals={rec.n_processed:4d} "
                   f"rejected={rec.n_rejected:3d} tau_max={rec.max_staleness:3d} "
                   f"bytes={rec.comm_bytes / 1e6:.2f}MB")
     else:
-        eng = build_engine(sc, seed=0, backend=args.backend)
+        eng = build_engine(sc, seed=0, backend=args.backend, mesh=mesh)
         for rec in eng.run(args.rounds):
             print(f"  round={rec.round:3d} t={rec.t:8.2f}s "
                   f"acc={rec.accuracy:.3f} participants={rec.n_participating:4d} "

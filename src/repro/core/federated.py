@@ -63,6 +63,10 @@ class FedConfig:
     heterogeneity: float = 0.5      # lognormal sigma of node speeds
     use_fleet: bool = True          # sync path: batched FleetEngine vs
                                     # the sequential per-node reference loop
+    fleet_mesh: Optional[int] = None  # shard the fleet node axis over this
+                                    # many local devices (shard_map'd rounds/
+                                    # windows); None = single-device engines.
+                                    # Requires use_fleet=True.
     seed: int = 0
 
     def detection_window(self) -> int:
@@ -109,6 +113,11 @@ class FederatedTrainer:
                  test_data: Tuple[np.ndarray, np.ndarray],
                  cloud_test: Tuple[np.ndarray, np.ndarray],
                  cfg: FedConfig):
+        if cfg.fleet_mesh is not None and not cfg.use_fleet:
+            raise ValueError(
+                "FedConfig.fleet_mesh shards the fleet engines' node axis "
+                "and requires use_fleet=True; the sequential reference "
+                "paths cannot run sharded")
         self.cfg = cfg
         self.params = init_params
         self.loss_fn = loss_fn
@@ -202,6 +211,13 @@ class FederatedTrainer:
             return self._run_sync_fleet()
         return self._run_sync_sequential()
 
+    def _fleet_mesh(self):
+        """The opt-in node mesh (`cfg.fleet_mesh` devices), or None."""
+        if self.cfg.fleet_mesh is None:
+            return None
+        from ..fleet import FleetMesh  # deferred: fleet depends on repro.core
+        return FleetMesh.create(self.cfg.fleet_mesh)
+
     def _fleet_engine(self):
         """Build a FleetEngine faithful to this trainer: same per-node PRNG
         chain (key_mode="sequential"), same residual/clock state."""
@@ -219,10 +235,8 @@ class FederatedTrainer:
         eng = fleet.FleetEngine(
             self.params, self.loss_fn, self._acc_fn_raw, self.node_data,
             self.test_data, self.cloud_test, fcfg, profile=profile,
-            sampler=fleet.FullParticipation())
-        eng.state = fleet.FleetState(
-            residuals=fleet.stack_trees(self.residuals),
-            chain_key=self.key, round=0)
+            sampler=fleet.FullParticipation(), mesh=self._fleet_mesh())
+        eng.load_state(fleet.stack_trees(self.residuals), self.key)
         return eng
 
     def _run_sync_fleet(self) -> List[RoundRecord]:
@@ -237,9 +251,9 @@ class FederatedTrainer:
                 rec.t, r, rec.accuracy, rec.comm_bytes, rec.comp_time,
                 rec.comm_time, rec.n_rejected))
         # hand node-local state back so follow-on runs stay faithful
-        self.key = eng.state.chain_key
+        self.key = jax.device_get(eng.state.chain_key)
         from ..fleet import unstack_tree
-        self.residuals = unstack_tree(eng.state.residuals, cfg.n_nodes)
+        self.residuals = unstack_tree(eng.export_residuals(), cfg.n_nodes)
         return self.history
 
     def _run_sync_sequential(self) -> List[RoundRecord]:
@@ -300,10 +314,9 @@ class FederatedTrainer:
             bandwidth_bps=np.full(cfg.n_nodes, cfg.bandwidth_bytes_per_s))
         eng = fleet.AsyncFleetEngine(
             self.params, self.loss_fn, self._acc_fn_raw, self.node_data,
-            self.test_data, self.cloud_test, fcfg, profile=profile)
-        eng.state = dataclasses.replace(
-            eng.state, residuals=fleet.stack_trees(self.residuals),
-            chain_key=self.key)
+            self.test_data, self.cloud_test, fcfg, profile=profile,
+            mesh=self._fleet_mesh())
+        eng.load_state(fleet.stack_trees(self.residuals), self.key)
         return eng
 
     def _run_async_fleet(self) -> List[RoundRecord]:
@@ -335,9 +348,9 @@ class FederatedTrainer:
                 span_bytes = span_comp = span_comm = 0.0
                 span_rejected = 0
         # hand node-local state back so follow-on runs stay faithful
-        self.key = eng.state.chain_key
+        self.key = jax.device_get(eng.state.chain_key)
         from ..fleet import unstack_tree
-        self.residuals = unstack_tree(eng.state.residuals, cfg.n_nodes)
+        self.residuals = unstack_tree(eng.export_residuals(), cfg.n_nodes)
         return self.history
 
     def _run_async_sequential(self) -> List[RoundRecord]:

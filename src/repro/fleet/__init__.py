@@ -10,14 +10,15 @@ pluggable pipeline stages), `state` (stacked pytree state and
 gather/scatter), and `scenarios` (declarative node populations).
 """
 from .async_engine import (AsyncFleetConfig, AsyncFleetEngine,  # noqa: F401
-                           AsyncWindowRecord)
+                           AsyncWindowRecord, make_window_folds)
 from .engine import (AvailabilityTrace, ClientSampler, FleetConfig,  # noqa: F401
                      FleetEngine, FleetRoundRecord, FullParticipation,
                      NodeProfile, UniformSampler, detect_masked)
+from .mesh import FleetMesh  # noqa: F401
 from .scenarios import (SCENARIOS, Scenario, build_async_engine,  # noqa: F401
                         build_engine, get_scenario)
 from .state import (FleetData, FleetState, broadcast_tree,  # noqa: F401
                     chain_node_keys, chain_node_keys_masked, gather_nodes,
-                    init_async_fleet_state, init_fleet_state,
-                    parallel_node_keys, scatter_nodes, stack_trees,
-                    unstack_tree)
+                    init_async_fleet_state, init_fleet_state, pad_keys,
+                    pad_node_axis, parallel_node_keys, scatter_nodes,
+                    stack_trees, unstack_tree)

@@ -44,8 +44,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import async_update, detection
+from . import mesh as mesh_lib
 from . import stages
 from .engine import ClientSampler, FleetConfig, NodeProfile
+from .mesh import FleetMesh, MeshStateIO
 from .state import (FleetState, chain_node_keys_masked, gather_nodes,
                     init_async_fleet_state, parallel_node_keys)
 
@@ -78,19 +80,113 @@ class AsyncWindowRecord:
     max_staleness: int              # max τ = version − dispatched_version
 
 
-class AsyncFleetEngine:
+def make_window_folds(cfg: "AsyncFleetConfig"):
+    """(sequential_fold, buffered_fold) — the window-to-global-model mixing
+    programs, shared between the single-device window and the mesh-sharded
+    window (where they run replicated on every device after the in-window
+    arrival set has been `all_gather`-ed)."""
+
+    def sequential_fold(params, version, ring, count, omegas, accs,
+                        vdisp_c, arrived):
+        """Eq. (6)/mix_stale over arrival order with streaming
+        detection — the event loop, as one lax.scan."""
+
+        def body(carry, inp):
+            params, version, ring, count = carry
+            omega_i, acc_i, vdisp_i, arr_i = inp
+            r2, c2 = detection.ring_push(ring, count, acc_i)
+            ring = jnp.where(arr_i, r2, ring)
+            count = jnp.where(arr_i, c2, count)
+            if cfg.detect:
+                rej = arr_i & detection.ring_detect(
+                    ring, count, acc_i, cfg.detect_s, cfg.detect_warmup)
+            else:
+                rej = jnp.zeros((), bool)
+            tau = version - vdisp_i
+            if cfg.staleness_adaptive:
+                mixed = async_update.mix_stale(params, omega_i, cfg.alpha,
+                                               tau, cfg.staleness_a)
+            else:
+                mixed = async_update.mix(params, omega_i, cfg.alpha)
+            do_mix = arr_i & ~rej
+            params = jax.tree.map(lambda m, p: jnp.where(do_mix, m, p),
+                                  mixed, params)
+            version = version + do_mix.astype(jnp.int32)
+            return ((params, version, ring, count),
+                    (params, version, rej, tau))
+
+        (params, version, ring, count), (p_seq, v_seq, rej, taus) = \
+            jax.lax.scan(body, (params, version, ring, count),
+                         (omegas, accs, vdisp_c, arrived))
+        return params, version, ring, count, p_seq, v_seq, rej, taus
+
+    def buffered_fold(params, version, ring, count, omegas, accs,
+                      vdisp_c, arrived):
+        """FedBuff-style: one detection pass over the updated window,
+        one masked-mean Eq. (6) mix for the whole buffer."""
+
+        def push(carry, inp):
+            ring, count = carry
+            acc_i, arr_i = inp
+            r2, c2 = detection.ring_push(ring, count, acc_i)
+            return (jnp.where(arr_i, r2, ring),
+                    jnp.where(arr_i, c2, count)), None
+
+        version0 = version
+        (ring, count), _ = jax.lax.scan(push, (ring, count),
+                                        (accs, arrived))
+        if cfg.detect:
+            thr = detection.ring_threshold(ring, count, cfg.detect_s)
+            held = jnp.minimum(count, ring.shape[0])
+            rej = arrived & (held >= cfg.detect_warmup) & (accs <= thr)
+        else:
+            rej = jnp.zeros_like(arrived)
+        mask = arrived & ~rej
+        omega_mean = detection.masked_mean(omegas, mask)
+        mixed = async_update.mix(params, omega_mean, cfg.alpha)
+        any_mix = mask.any()
+        params = jax.tree.map(lambda m, p: jnp.where(any_mix, m, p),
+                              mixed, params)
+        version = version + any_mix.astype(jnp.int32)
+        taus = version0 - vdisp_c         # staleness at mix time
+        # every processed node receives the post-window model/version
+        c = vdisp_c.shape[0]
+        p_seq = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (c,) + x.shape), params)
+        v_seq = jnp.broadcast_to(version, (c,))
+        return params, version, ring, count, p_seq, v_seq, rej, taus
+
+    return sequential_fold, buffered_fold
+
+
+class AsyncFleetEngine(MeshStateIO):
     """Event-driven async FEL over a stacked node fleet, batched per window.
 
     Args mirror `FleetEngine`; `sampler` (optional) models churn: a node
     whose arrival lands in a window while the sampler marks it unavailable
     loses that upload (no mix, no detection entry) but is redispatched —
     mid-flight churn rather than cohort sampling.
+
+    With ``mesh`` (a `FleetMesh`) the node axis of every per-node state
+    array is sharded across devices and the window runs under `shard_map`:
+    the in-window cohort is gathered out of the shards via collectives,
+    its local SGD / upload pipeline is split over the mesh along the cohort
+    axis, and the (small) arrival set is `all_gather`-ed so the sequential
+    Eq. (6)/`mix_stale` fold and the detection ring run replicated —
+    keeping exact parity with the event-loop processing order.
+
+    Sharded-vs-unsharded PRNG parity: exact with ``key_mode="sequential"``
+    (the masked chain only advances on in-window slots, so the shard-
+    rounded cohort bucket is irrelevant); with ``key_mode="parallel"`` the
+    key split count tracks the bucket size, which the mesh rounds up to a
+    shard multiple — statistically equivalent, but not stream-identical.
     """
 
     def __init__(self, init_params, loss_fn: Callable, acc_fn: Callable,
                  node_data, test_data, cloud_test, cfg: AsyncFleetConfig,
                  profile: Optional[NodeProfile] = None,
-                 sampler: Optional[ClientSampler] = None):
+                 sampler: Optional[ClientSampler] = None,
+                 mesh: Optional[FleetMesh] = None):
         self.cfg = cfg
         self.params = init_params
         self.loss_fn = loss_fn
@@ -99,6 +195,8 @@ class AsyncFleetEngine:
          self.profile, self.n_params) = stages.init_engine_common(
             init_params, node_data, test_data, cloud_test, profile)
         self.sampler = sampler
+        self.mesh = mesh
+        self.n_pad = mesh.padded(self.n_nodes) if mesh else self.n_nodes
         self._bpn = stages.bytes_per_node(self.n_params, cfg.sparsify_ratio)
         # per-node uplink + compute, fixed over the run (device copies feed
         # the jitted clock update; float64 host copies feed window selection)
@@ -110,12 +208,31 @@ class AsyncFleetEngine:
         if self._window_len <= 0:
             raise ValueError(f"window must be positive, got "
                              f"{self._window_len}")
+        # padding rows never arrive (+inf clocks) and never participate
+        first_arrival = np.concatenate(
+            [self._comp_s, np.full(self.n_pad - self.n_nodes, np.inf)])
         self.state = init_async_fleet_state(
-            init_params, self.n_nodes, jax.random.PRNGKey(cfg.seed),
-            first_arrival=self._comp_s, detect_window=cfg.detect_window)
+            init_params, self.n_pad, jax.random.PRNGKey(cfg.seed),
+            first_arrival=first_arrival, detect_window=cfg.detect_window)
         self._window_idx = 0
         self.history: List[AsyncWindowRecord] = []
-        self._window_fn = jax.jit(self._build_window())
+        if mesh is not None:
+            self.data = mesh.put_nodes(self.data.pad_to(self.n_pad))
+            self.state = dataclasses.replace(
+                self.state,
+                residuals=mesh.put_nodes(self.state.residuals),
+                dispatched=mesh.put_nodes(self.state.dispatched),
+                next_arrival=mesh.put_nodes(self.state.next_arrival),
+                dispatched_version=mesh.put_nodes(
+                    self.state.dispatched_version),
+                chain_key=mesh.put_replicated(self.state.chain_key),
+                version=mesh.put_replicated(self.state.version),
+                acc_ring=mesh.put_replicated(self.state.acc_ring),
+                acc_count=mesh.put_replicated(self.state.acc_count))
+            self.params = mesh.put_replicated(self.params)
+            self._window_fn = jax.jit(self._build_window_sharded())
+        else:
+            self._window_fn = jax.jit(self._build_window())
 
     # -- the single-dispatch arrival window ---------------------------------
     def _build_window(self):
@@ -127,76 +244,7 @@ class AsyncFleetEngine:
         comm_s = jnp.asarray(self._comm_s, jnp.float32)
         comp_s = jnp.asarray(self._comp_s, jnp.float32)
         n = self.n_nodes
-
-        def sequential_fold(params, version, ring, count, omegas, accs,
-                            vdisp_c, arrived):
-            """Eq. (6)/mix_stale over arrival order with streaming
-            detection — the event loop, as one lax.scan."""
-
-            def body(carry, inp):
-                params, version, ring, count = carry
-                omega_i, acc_i, vdisp_i, arr_i = inp
-                r2, c2 = detection.ring_push(ring, count, acc_i)
-                ring = jnp.where(arr_i, r2, ring)
-                count = jnp.where(arr_i, c2, count)
-                if cfg.detect:
-                    rej = arr_i & detection.ring_detect(
-                        ring, count, acc_i, cfg.detect_s, cfg.detect_warmup)
-                else:
-                    rej = jnp.zeros((), bool)
-                tau = version - vdisp_i
-                if cfg.staleness_adaptive:
-                    mixed = async_update.mix_stale(params, omega_i, cfg.alpha,
-                                                   tau, cfg.staleness_a)
-                else:
-                    mixed = async_update.mix(params, omega_i, cfg.alpha)
-                do_mix = arr_i & ~rej
-                params = jax.tree.map(lambda m, p: jnp.where(do_mix, m, p),
-                                      mixed, params)
-                version = version + do_mix.astype(jnp.int32)
-                return ((params, version, ring, count),
-                        (params, version, rej, tau))
-
-            (params, version, ring, count), (p_seq, v_seq, rej, taus) = \
-                jax.lax.scan(body, (params, version, ring, count),
-                             (omegas, accs, vdisp_c, arrived))
-            return params, version, ring, count, p_seq, v_seq, rej, taus
-
-        def buffered_fold(params, version, ring, count, omegas, accs,
-                          vdisp_c, arrived):
-            """FedBuff-style: one detection pass over the updated window,
-            one masked-mean Eq. (6) mix for the whole buffer."""
-
-            def push(carry, inp):
-                ring, count = carry
-                acc_i, arr_i = inp
-                r2, c2 = detection.ring_push(ring, count, acc_i)
-                return (jnp.where(arr_i, r2, ring),
-                        jnp.where(arr_i, c2, count)), None
-
-            version0 = version
-            (ring, count), _ = jax.lax.scan(push, (ring, count),
-                                            (accs, arrived))
-            if cfg.detect:
-                thr = detection.ring_threshold(ring, count, cfg.detect_s)
-                held = jnp.minimum(count, ring.shape[0])
-                rej = arrived & (held >= cfg.detect_warmup) & (accs <= thr)
-            else:
-                rej = jnp.zeros_like(arrived)
-            mask = arrived & ~rej
-            omega_mean = detection.masked_mean(omegas, mask)
-            mixed = async_update.mix(params, omega_mean, cfg.alpha)
-            any_mix = mask.any()
-            params = jax.tree.map(lambda m, p: jnp.where(any_mix, m, p),
-                                  mixed, params)
-            version = version + any_mix.astype(jnp.int32)
-            taus = version0 - vdisp_c         # staleness at mix time
-            # every processed node receives the post-window model/version
-            c = vdisp_c.shape[0]
-            p_seq = jax.tree.map(
-                lambda x: jnp.broadcast_to(x[None], (c,) + x.shape), params)
-            v_seq = jnp.broadcast_to(version, (c,))
-            return params, version, ring, count, p_seq, v_seq, rej, taus
+        sequential_fold, buffered_fold = make_window_folds(cfg)
 
         def window_fn(params, state: FleetState, x, y, sizes,
                       order, proc, avail):
@@ -260,24 +308,135 @@ class AsyncFleetEngine:
 
         return window_fn
 
+    # -- the sharded window: one shard_map over the node mesh ---------------
+    def _build_window_sharded(self):
+        """The arrival window as a `shard_map` program over the node mesh.
+
+        Data flow per window (cohort size C, devices D, node blocks B):
+          1. gather the C cohort rows (dispatched params, residuals, clocks,
+             data shards) out of the node-sharded fleet arrays — a masked
+             `psum` reconstructs them replicated on every device;
+          2. each device trains its C/D cohort block (local SGD -> DGC ->
+             ALDP -> cloud eval), embarrassingly parallel;
+          3. `all_gather` the per-arrival models/accuracies back to cohort
+             order and run the sequential Eq. (6)/`mix_stale` fold (or the
+             buffered FedBuff mix) replicated — identical on every device,
+             so the global model/version/ring need no further collective;
+          4. scatter redispatched models, residuals, versions and fresh
+             clocks back to whichever device owns each processed node.
+
+        The transient replicated cohort (step 1) is the price of arbitrary
+        arrival order; it is bounded by the power-of-two arrival bucket,
+        not the fleet size, so per-device memory stays O(N/D + C).
+        """
+        cfg = self.cfg
+        mesh = self.mesh
+        raw_acc_fn = self.acc_fn
+        local_train = stages.make_local_train(self.loss_fn, cfg.local_steps,
+                                              cfg.lr, cfg.batch_size)
+        pad = self.n_pad - self.n_nodes
+        comm_s = jnp.asarray(np.concatenate([self._comm_s,
+                                             np.zeros(pad)]), jnp.float32)
+        comp_s = jnp.asarray(np.concatenate([self._comp_s,
+                                             np.full(pad, np.inf)]),
+                             jnp.float32)
+        d, axis = mesh.n_devices, mesh.axis
+        b = self.n_pad // d
+        sequential_fold, buffered_fold = make_window_folds(cfg)
+
+        def window_body(params, residuals, chain_key, dispatched,
+                        next_arrival, dispatched_version, version, ring,
+                        count, x, y, sizes, order, proc, avail, cx, cy):
+            # 1. cohort gather: node-sharded -> replicated (C, ...) rows
+            t_arr = mesh_lib.gather_rows(next_arrival, order, axis, b)
+            vdisp_c = mesh_lib.gather_rows(dispatched_version, order,
+                                           axis, b)
+            disp_c = mesh_lib.gather_rows_tree(dispatched, order, axis, b)
+            res_c = mesh_lib.gather_rows_tree(residuals, order, axis, b)
+            xg = mesh_lib.gather_rows(x, order, axis, b)
+            yg = mesh_lib.gather_rows(y, order, axis, b)
+            sz = mesh_lib.gather_rows(sizes, order, axis, b)
+
+            if cfg.key_mode == "sequential":
+                chain_key, k1s, k2s = chain_node_keys_masked(chain_key, proc)
+            else:
+                chain_key, k1s, k2s = parallel_node_keys(chain_key,
+                                                         order.shape[0])
+
+            # 2. this device's cohort block through the upload pipeline
+            blk = lambda t: mesh_lib.my_block_tree(t, axis, d)
+            disp_b, res_b = blk(disp_c), blk(res_c)
+            local = jax.vmap(local_train)(disp_b, blk(xg), blk(yg), blk(sz),
+                                          blk(k1s))
+            deltas = jax.tree.map(lambda l, dd: l - dd.astype(l.dtype),
+                                  local, disp_b)
+            deltas, res_b = stages.upload_pipeline(cfg, deltas, res_b,
+                                                   blk(k2s))
+            omegas_b, accs_b = stages.rebuild_and_evaluate(
+                raw_acc_fn, disp_b, deltas, cx, cy)
+
+            # 3. gather the arrival set; fold replicated
+            omegas = mesh_lib.all_gather_tree(omegas_b, axis)
+            accs = jax.lax.all_gather(accs_b, axis, tiled=True)
+            res_c = mesh_lib.all_gather_tree(res_b, axis)
+
+            arrived = proc & avail
+            fold = (sequential_fold if cfg.mixing == "sequential"
+                    else buffered_fold)
+            params, version, ring, count, p_seq, v_seq, rej, taus = fold(
+                params, version, ring, count, omegas, accs, vdisp_c, arrived)
+
+            # 4. redispatch: scatter processed rows back to their owners
+            dispatched = mesh_lib.scatter_rows_tree(dispatched, order, p_seq,
+                                                    proc, axis, b)
+            residuals = mesh_lib.scatter_rows_tree(residuals, order, res_c,
+                                                   proc, axis, b)
+            dispatched_version = mesh_lib.scatter_rows(
+                dispatched_version, order, v_seq, proc, axis, b)
+            t_next = t_arr + jnp.take(comm_s, order) + jnp.take(comp_s,
+                                                                order)
+            next_arrival = mesh_lib.scatter_rows(next_arrival, order, t_next,
+                                                 proc, axis, b)
+            metrics = {
+                "n_rejected": (rej & arrived).sum(),
+                "max_staleness": jnp.where(arrived, taus, 0).max(),
+            }
+            return (params, residuals, chain_key, dispatched, next_arrival,
+                    dispatched_version, version, ring, count, metrics)
+
+        pn, pr = mesh.spec_nodes(), mesh.spec_replicated()
+        return mesh.shard_map(
+            window_body,
+            in_specs=(pr, pn, pr, pn, pn, pn, pr, pr, pr,
+                      pn, pn, pn, pr, pr, pr, pr, pr),
+            out_specs=(pr, pn, pr, pn, pn, pn, pr, pr, pr,
+                       {"n_rejected": pr, "max_staleness": pr}))
+
     # -- host-side driver ---------------------------------------------------
     def select_window(self, max_arrivals: Optional[int] = None
                       ) -> Tuple[np.ndarray, np.ndarray]:
         """(order, proc): node ids sorted by (arrival, id) and in-window
-        flags — every pending arrival inside [t0, t0 + window)."""
+        flags — every pending arrival inside [t0, t0 + window). Padding
+        rows of a sharded fleet carry +inf clocks: they sort last and are
+        never in-window."""
         na = np.asarray(self.state.next_arrival, np.float64)
-        order = np.lexsort((np.arange(self.n_nodes), na))
+        order = np.lexsort((np.arange(self.n_pad), na))
         proc = na[order] < na[order[0]] + self._window_len
         if max_arrivals is not None:
             proc &= np.cumsum(proc) <= max_arrivals
         # in-window arrivals are a prefix of the sort: truncate the cohort
         # to the smallest power-of-two bucket covering them so the device
         # program only trains nodes that can arrive (one compile per bucket;
-        # floored at 16 — small fleets get a single full-size program)
+        # floored at 16 — small fleets get a single full-size program). On a
+        # mesh the bucket is additionally rounded up to a shard multiple so
+        # the cohort axis splits evenly across devices.
         c = 16
         while c < int(proc.sum()):
             c *= 2
-        c = min(c, self.n_nodes)
+        c = min(c, self.n_pad)
+        if self.mesh is not None:
+            d = self.mesh.n_devices
+            c = min(self.n_pad, ((c + d - 1) // d) * d)
         return order[:c], proc[:c]
 
     def run_window(self, max_arrivals: Optional[int] = None,
@@ -294,16 +453,29 @@ class AsyncFleetEngine:
             # per-node availability mask (a node absent from the cohort, or
             # present but invalid, loses arrivals this window)
             idx_s, up = self.sampler.cohort(w, self.n_nodes)
-            up_by_node = np.zeros(self.n_nodes, bool)
-            up_by_node[np.asarray(idx_s)[np.asarray(up)]] = True
-            avail = up_by_node[order]
+            avail = self._participation_mask(idx_s, up)[order]
         else:
             avail = np.ones(order.size, bool)
 
-        self.params, self.state, m = self._window_fn(
-            self.params, self.state, self.data.x, self.data.y,
-            self.data.sizes, jnp.asarray(order, jnp.int32),
-            jnp.asarray(proc), jnp.asarray(avail))
+        if self.mesh is not None:
+            st = self.state
+            (self.params, residuals, chain_key, dispatched, next_arrival,
+             dispatched_version, version, ring, count, m) = self._window_fn(
+                self.params, st.residuals, st.chain_key, st.dispatched,
+                st.next_arrival, st.dispatched_version, st.version,
+                st.acc_ring, st.acc_count, self.data.x, self.data.y,
+                self.data.sizes, jnp.asarray(order, jnp.int32),
+                jnp.asarray(proc), jnp.asarray(avail), *self.cloud_test)
+            self.state = dataclasses.replace(
+                st, residuals=residuals, chain_key=chain_key,
+                dispatched=dispatched, next_arrival=next_arrival,
+                dispatched_version=dispatched_version, version=version,
+                acc_ring=ring, acc_count=count)
+        else:
+            self.params, self.state, m = self._window_fn(
+                self.params, self.state, self.data.x, self.data.y,
+                self.data.sizes, jnp.asarray(order, jnp.int32),
+                jnp.asarray(proc), jnp.asarray(avail))
         self._window_idx = w + 1
 
         # host-side clock/traffic accounting over the processed arrivals

@@ -27,6 +27,7 @@ implementation.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Callable, List, Optional, Sequence, Tuple
@@ -36,10 +37,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import async_update, detection
+from . import mesh as mesh_lib
 from . import stages
+from .mesh import FleetMesh, MeshStateIO
 from .stages import detect_masked  # noqa: F401  (public re-export)
 from .state import (FleetState, chain_node_keys, gather_nodes,
-                    init_fleet_state, parallel_node_keys)
+                    init_fleet_state, pad_keys, parallel_node_keys)
 
 
 # ---------------------------------------------------------------------------
@@ -184,7 +187,7 @@ class FleetRoundRecord:
 # engine
 # ---------------------------------------------------------------------------
 
-class FleetEngine:
+class FleetEngine(MeshStateIO):
     """Cohort-batched synchronous FEL over a stacked node fleet.
 
     Args:
@@ -196,12 +199,23 @@ class FleetEngine:
       cfg: `FleetConfig`.
       profile: `NodeProfile` (defaults to a homogeneous 1 s / 100 Mbit fleet).
       sampler: `ClientSampler` (defaults to `FullParticipation`).
+      mesh: optional `FleetMesh` — shard the node axis across its devices
+        and run the round under `shard_map` (node-parallel local SGD /
+        upload pipeline per shard, detection + aggregation over collectives).
+        The node axis is padded to a shard multiple; padding rows never
+        participate. Sequential-chain PRNG parity with the single-device
+        engine holds for arange-style cohorts (`FullParticipation`,
+        `AvailabilityTrace`): the sharded round consumes one chain split per
+        node in node order, exactly like an arange cohort. `UniformSampler`
+        cohorts still run correctly but consume the chain in node order
+        instead of cohort order.
     """
 
     def __init__(self, init_params, loss_fn: Callable, acc_fn: Callable,
                  node_data, test_data, cloud_test, cfg: FleetConfig,
                  profile: Optional[NodeProfile] = None,
-                 sampler: Optional[ClientSampler] = None):
+                 sampler: Optional[ClientSampler] = None,
+                 mesh: Optional[FleetMesh] = None):
         self.cfg = cfg
         self.params = init_params
         self.loss_fn = loss_fn
@@ -210,10 +224,20 @@ class FleetEngine:
          self.profile, self.n_params) = stages.init_engine_common(
             init_params, node_data, test_data, cloud_test, profile)
         self.sampler = sampler or FullParticipation()
-        self.state = init_fleet_state(init_params, self.n_nodes,
+        self.mesh = mesh
+        self.n_pad = mesh.padded(self.n_nodes) if mesh else self.n_nodes
+        self.state = init_fleet_state(init_params, self.n_pad,
                                       jax.random.PRNGKey(cfg.seed))
         self.history: List[FleetRoundRecord] = []
-        self._round_fn = jax.jit(self._build_round())
+        if mesh is not None:
+            self.data = mesh.put_nodes(self.data.pad_to(self.n_pad))
+            self.state = dataclasses.replace(
+                self.state, residuals=mesh.put_nodes(self.state.residuals),
+                chain_key=mesh.put_replicated(self.state.chain_key))
+            self.params = mesh.put_replicated(self.params)
+            self._round_fn = jax.jit(self._build_round_sharded())
+        else:
+            self._round_fn = jax.jit(self._build_round())
 
     # -- per-node upload bytes (wire format: values, or values+indices) -----
     def bytes_per_node(self) -> float:
@@ -266,20 +290,112 @@ class FleetEngine:
 
         return round_fn
 
+    # -- the sharded round: one shard_map over the node mesh ----------------
+    def _build_round_sharded(self):
+        """The round as a `shard_map` program over the node mesh.
+
+        Each device trains its shard of nodes (local SGD -> DGC -> ALDP ->
+        cloud eval) with no communication; detection needs the global
+        accuracy set, so the (n_pad,) accuracies are `all_gather`-ed and
+        thresholded replicated; the masked-mean aggregate is a per-shard
+        partial sum + `psum`. Cohorts arrive as a per-node participation
+        mask instead of an index list — gather/scatter of cohort rows
+        across shards is thereby avoided entirely for the synchronous
+        barrier (every padded slot simply trains and is masked out).
+        """
+        cfg = self.cfg
+        mesh = self.mesh
+        raw_acc_fn = self.acc_fn
+        cloud_x, cloud_y = self.cloud_test
+        local_train = stages.make_local_train(self.loss_fn, cfg.local_steps,
+                                              cfg.lr, cfg.batch_size)
+        n, n_pad, d, axis = self.n_nodes, self.n_pad, mesh.n_devices, mesh.axis
+
+        def round_body(params, residuals, chain_key, x, y, sizes, valid,
+                       cx, cy):
+            # local leaves: residuals/x/y/sizes/valid lead with B = n_pad/d
+            # keys are derived over the *true* node count then padded, so
+            # both modes yield the exact per-node streams the single-device
+            # engine draws for an arange cohort (padding rows reuse the last
+            # real key for their masked-out dummy updates)
+            if cfg.key_mode == "sequential":
+                chain_key, k1s, k2s = chain_node_keys(chain_key, n)
+            else:
+                chain_key, k1s, k2s = parallel_node_keys(chain_key, n)
+            k1s, k2s = pad_keys(k1s, n_pad), pad_keys(k2s, n_pad)
+            k1 = mesh_lib.my_block(k1s, axis, d)
+            k2 = mesh_lib.my_block(k2s, axis, d)
+
+            local = jax.vmap(local_train, in_axes=(None, 0, 0, 0, 0))(
+                params, x, y, sizes, k1)
+            deltas = jax.tree.map(lambda l, g: l - g[None].astype(l.dtype),
+                                  local, params)
+            deltas, res_new = stages.upload_pipeline(cfg, deltas, residuals,
+                                                     k2)
+            omegas, accs = stages.rebuild_and_evaluate(
+                raw_acc_fn, params, deltas, cx, cy)
+
+            # cloud side, replicated: global accuracy set -> Alg. 2 mask
+            accs_all = jax.lax.all_gather(accs, axis, tiled=True)
+            valid_all = jax.lax.all_gather(valid, axis, tiled=True)
+            if cfg.detect:
+                mask_all, thr = detect_masked(accs_all, valid_all,
+                                              cfg.detect_s)
+            else:
+                mask_all, thr = valid_all, jnp.zeros((), jnp.float32)
+            mask = mesh_lib.my_block(mask_all, axis, d)
+
+            # masked mean: per-shard weighted partial sums + psum
+            w = mask.astype(jnp.float32)
+            denom = jnp.maximum(jax.lax.psum(w.sum(), axis), 1.0)
+
+            def agg(o):
+                wf = w.reshape((-1,) + (1,) * (o.ndim - 1))
+                return jax.lax.psum((o.astype(jnp.float32) * wf).sum(0),
+                                    axis) / denom
+
+            omega_mean = jax.tree.map(agg, omegas)
+            new_params = async_update.mix(params, omega_mean, cfg.alpha)
+
+            # participants' residuals advance; everyone else's stay put
+            residuals = jax.tree.map(
+                lambda old, new: jnp.where(
+                    valid.reshape((-1,) + (1,) * (old.ndim - 1)), new, old),
+                residuals, res_new)
+            return new_params, residuals, chain_key, {
+                "accs": accs_all, "mask": mask_all, "thr": thr}
+
+        pn, pr = mesh.spec_nodes(), mesh.spec_replicated()
+        return mesh.shard_map(
+            round_body,
+            in_specs=(pr, pn, pr, pn, pn, pn, pn, pr, pr),
+            out_specs=(pr, pn, pr, {"accs": pr, "mask": pr, "thr": pr}))
+
     # -- host-side driver ---------------------------------------------------
     def run_round(self) -> FleetRoundRecord:
         cfg = self.cfg
         r = self.state.round
         idx, valid = self.sampler.cohort(r, self.n_nodes)
-        self.params, residuals, chain_key, m = self._round_fn(
-            self.params, self.state.residuals, self.state.chain_key,
-            self.data.x, self.data.y, self.data.sizes,
-            jnp.asarray(idx, jnp.int32), jnp.asarray(valid))
+        if self.mesh is not None:
+            up = self._participation_mask(idx, valid)
+            self.params, residuals, chain_key, m = self._round_fn(
+                self.params, self.state.residuals, self.state.chain_key,
+                self.data.x, self.data.y, self.data.sizes,
+                self.mesh.put_nodes(jnp.asarray(up)), *self.cloud_test)
+        else:
+            self.params, residuals, chain_key, m = self._round_fn(
+                self.params, self.state.residuals, self.state.chain_key,
+                self.data.x, self.data.y, self.data.sizes,
+                jnp.asarray(idx, jnp.int32), jnp.asarray(valid))
         self.state = FleetState(residuals=residuals, chain_key=chain_key,
                                 round=r + 1)
 
         n_part = int(valid.sum())
-        n_rejected = int((np.asarray(valid) & ~np.asarray(m["mask"])).sum())
+        if self.mesh is not None:   # sharded mask is per-node over n_pad
+            n_rejected = int((up & ~np.asarray(m["mask"])).sum())
+        else:
+            n_rejected = int((np.asarray(valid)
+                              & ~np.asarray(m["mask"])).sum())
         bpn = self.bytes_per_node()
         comp, comm = self.profile.round_times(np.asarray(idx),
                                               np.asarray(valid), bpn)

@@ -23,6 +23,7 @@ from .async_engine import AsyncFleetConfig, AsyncFleetEngine
 from .engine import (AvailabilityTrace, ClientSampler, FleetConfig,
                      FleetEngine, FullParticipation, NodeProfile,
                      UniformSampler)
+from .mesh import FleetMesh
 
 
 @dataclass(frozen=True)
@@ -114,8 +115,12 @@ def _population(sc: Scenario, seed: int):
 
 def build_engine(sc: Scenario, seed: int = 0,
                  sampler: Optional[ClientSampler] = None,
-                 backend: str = "reference") -> FleetEngine:
-    """Scenario -> FleetEngine on synthetic federated image data."""
+                 backend: str = "reference",
+                 mesh: Optional["FleetMesh"] = None) -> FleetEngine:
+    """Scenario -> FleetEngine on synthetic federated image data.
+
+    ``mesh`` (a `fleet.FleetMesh`) shards the node axis across devices and
+    runs the round under shard_map."""
     params, loss_fn, acc_fn, node_data, test, cloud, profile = \
         _population(sc, seed)
     cfg = FleetConfig(local_steps=sc.local_steps, batch_size=sc.batch_size,
@@ -135,12 +140,14 @@ def build_engine(sc: Scenario, seed: int = 0,
             sampler = FullParticipation()
 
     return FleetEngine(params, loss_fn, acc_fn, node_data, test, cloud, cfg,
-                       profile=profile, sampler=sampler)
+                       profile=profile, sampler=sampler, mesh=mesh)
 
 
 def build_async_engine(sc: Scenario, seed: int = 0,
                        sampler: Optional[ClientSampler] = None,
-                       backend: str = "reference") -> AsyncFleetEngine:
+                       backend: str = "reference",
+                       mesh: Optional["FleetMesh"] = None
+                       ) -> AsyncFleetEngine:
     """Scenario -> AsyncFleetEngine (virtual-time arrival windows).
 
     `availability < 1` models mid-flight churn: arrivals from unavailable
@@ -168,4 +175,4 @@ def build_async_engine(sc: Scenario, seed: int = 0,
                 max(1, int(round(sc.cohort_frac * sc.n_nodes))), seed=seed)
 
     return AsyncFleetEngine(params, loss_fn, acc_fn, node_data, test, cloud,
-                            cfg, profile=profile, sampler=sampler)
+                            cfg, profile=profile, sampler=sampler, mesh=mesh)

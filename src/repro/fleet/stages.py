@@ -13,6 +13,15 @@ parameterized by `FleetConfig` with a pluggable backend: "reference"
 (pure-jnp `accumulator`/`aldp`, bit-compatible with the sequential
 trainer) or "pallas" (the node-batched fused `sparsify`/`ldp_noise`
 kernels).
+
+Every stage here is *shard-oblivious*: all math is per-node along the
+leading axis with no cross-node reduction, so the mesh-sharded engines
+(`fleet.mesh.FleetMesh`) call the very same functions inside `shard_map`
+on each device's node/cohort block — only detection thresholds and
+aggregation (which do cross nodes) pick up collectives, and those live in
+the engines' sharded round/window builders, not here. `detect_masked`
+below is the one cross-node stage: sharded callers hand it the
+`all_gather`-ed accuracy set.
 """
 from __future__ import annotations
 

@@ -12,12 +12,18 @@ fleet and write its updated state back.
 from __future__ import annotations
 
 import dataclasses
+import os
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# When true (or REPRO_FLEET_DEBUG=1), host-side `scatter_nodes` calls verify
+# the duplicate-index contract (see `scatter_nodes`) instead of silently
+# letting the last write win. Traced calls can't be checked and are skipped.
+DEBUG_SCATTER = os.environ.get("REPRO_FLEET_DEBUG", "") not in ("", "0")
 
 
 # ---------------------------------------------------------------------------
@@ -45,13 +51,49 @@ def gather_nodes(tree, idx: jnp.ndarray):
     return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), tree)
 
 
-def scatter_nodes(tree, idx: jnp.ndarray, values):
+def scatter_nodes(tree, idx: jnp.ndarray, values, *,
+                  debug: Optional[bool] = None):
     """Write cohort rows back into the fleet (inverse of gather).
 
-    When ``idx`` contains duplicates (padded cohorts) the last write wins,
-    which is correct because duplicated rows carry identical values.
+    Contract: when ``idx`` contains duplicates (padded cohorts that repeat a
+    node), `.at[idx].set` resolves them last-write-wins — which is only
+    correct if every duplicated slot carries **identical** values, i.e. the
+    cohort rows for a repeated node are copies of one another. Callers that
+    pad cohorts by repeating indices must therefore also duplicate the
+    corresponding value rows (a `gather_nodes` of the same ``idx`` does this
+    by construction).
+
+    With ``debug=True`` (default: the module flag `DEBUG_SCATTER`, settable
+    via ``REPRO_FLEET_DEBUG=1``) concrete (non-traced) calls verify the
+    contract and raise ``ValueError`` on duplicated indices whose value rows
+    differ. Traced calls (inside jit) cannot be checked and are skipped.
     """
+    if debug is None:
+        debug = DEBUG_SCATTER
+    if debug and not isinstance(idx, jax.core.Tracer):
+        _check_duplicate_scatter(idx, values)
     return jax.tree.map(lambda x, v: x.at[idx].set(v), tree, values)
+
+
+def _check_duplicate_scatter(idx, values) -> None:
+    """Raise if duplicated scatter indices carry differing value rows."""
+    idx_h = np.asarray(idx)
+    uniq, counts = np.unique(idx_h, return_counts=True)
+    dups = uniq[counts > 1]
+    if dups.size == 0:
+        return
+    for leaf in jax.tree.leaves(values):
+        if isinstance(leaf, jax.core.Tracer):
+            continue                    # traced leaf: cannot verify this one
+        leaf_h = np.asarray(leaf)
+        for u in dups:
+            rows = leaf_h[idx_h == u]
+            if not np.array_equal(rows, np.broadcast_to(rows[:1],
+                                                        rows.shape)):
+                raise ValueError(
+                    f"scatter_nodes: duplicated index {int(u)} carries "
+                    f"differing value rows — duplicate cohort slots must be "
+                    f"identical copies (last write wins)")
 
 
 # ---------------------------------------------------------------------------
@@ -151,7 +193,16 @@ class FleetData:
     @classmethod
     def from_node_data(cls, node_data: Sequence[Tuple[np.ndarray, np.ndarray]]
                        ) -> "FleetData":
+        if len(node_data) == 0:
+            raise ValueError("FleetData.from_node_data: empty node list — "
+                             "a fleet needs at least one node shard")
         sizes = np.array([len(y) for _, y in node_data], np.int32)
+        if (sizes == 0).any():
+            empty = np.nonzero(sizes == 0)[0].tolist()
+            raise ValueError(
+                f"FleetData.from_node_data: node(s) {empty} have empty data "
+                f"shards; every node needs at least one sample (batched "
+                f"minibatch sampling draws indices in [0, size))")
         m = int(sizes.max())
         xs, ys = [], []
         for x, y in node_data:
@@ -170,9 +221,55 @@ class FleetData:
                          y=jnp.take(self.y, idx, axis=0),
                          sizes=jnp.take(self.sizes, idx, axis=0))
 
+    def pad_to(self, n_total: int) -> "FleetData":
+        """Append dummy nodes up to `n_total` rows (mesh shard multiples).
+
+        Padding nodes carry a single zero sample (``sizes=1``) so batched
+        `randint(0, size)` minibatch sampling stays well defined; sharded
+        engines mask them out of every aggregate, so their (garbage)
+        updates never land anywhere.
+        """
+        pad = n_total - self.n_nodes
+        if pad < 0:
+            raise ValueError(f"pad_to: fleet already has {self.n_nodes} "
+                             f"nodes > requested {n_total}")
+        if pad == 0:
+            return self
+        x = jnp.concatenate(
+            [self.x, jnp.zeros((pad,) + self.x.shape[1:], self.x.dtype)])
+        y = jnp.concatenate(
+            [self.y, jnp.zeros((pad,) + self.y.shape[1:], self.y.dtype)])
+        sizes = jnp.concatenate(
+            [self.sizes, jnp.ones((pad,), self.sizes.dtype)])
+        return FleetData(x=x, y=y, sizes=sizes)
+
 
 jax.tree_util.register_dataclass(
     FleetData, data_fields=["x", "y", "sizes"], meta_fields=[])
+
+
+def pad_node_axis(tree, n_total: int):
+    """Zero-pad every leaf's leading node axis up to ``n_total`` rows —
+    the stacked-pytree analogue of `FleetData.pad_to`, used to grow
+    residual/dispatched stacks to a mesh shard multiple."""
+    def one(x):
+        pad = n_total - x.shape[0]
+        if pad < 0:
+            raise ValueError(f"pad_node_axis: leading axis {x.shape[0]} "
+                             f"> requested {n_total}")
+        if pad == 0:
+            return x
+        return jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+
+    return jax.tree.map(one, tree)
+
+
+def pad_keys(keys: jnp.ndarray, n_total: int) -> jnp.ndarray:
+    """Pad a stacked per-node PRNG-key array to ``n_total`` rows by
+    repeating the last real key — padding rows only ever feed masked-out
+    dummy computations, but must still be *valid* keys."""
+    n = keys.shape[0]
+    return jnp.take(keys, jnp.minimum(jnp.arange(n_total), n - 1), axis=0)
 
 
 # ---------------------------------------------------------------------------

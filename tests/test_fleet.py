@@ -37,6 +37,34 @@ def test_stack_gather_scatter_roundtrip():
     np.testing.assert_array_equal(np.asarray(back["w"][0]), 0.0)  # untouched
 
 
+def test_scatter_nodes_debug_rejects_conflicting_duplicates():
+    """Duplicate scatter indices must carry identical values (the padded-
+    cohort contract); the debug check catches silent last-write-wins."""
+    tree = {"w": jnp.zeros((4, 2))}
+    idx = jnp.array([1, 1, 3])
+    same = {"w": jnp.ones((3, 2)).at[2].set(5.0)}
+    out = scatter_nodes(tree, idx, same, debug=True)     # identical dups: ok
+    np.testing.assert_array_equal(np.asarray(out["w"][1]), [1.0, 1.0])
+
+    differing = {"w": jnp.asarray([[1.0, 1.0], [2.0, 2.0], [5.0, 5.0]])}
+    with pytest.raises(ValueError, match="duplicated index 1"):
+        scatter_nodes(tree, idx, differing, debug=True)
+    # debug off: documented last-write-wins, no check
+    out = scatter_nodes(tree, idx, differing, debug=False)
+    np.testing.assert_array_equal(np.asarray(out["w"][1]), [2.0, 2.0])
+
+
+def test_fleet_data_rejects_empty_shards():
+    """`from_node_data` must fail loudly — not with `sizes.max()` blowing up
+    or a padded size-0 shard poisoning randint — on empty input."""
+    with pytest.raises(ValueError, match="empty node list"):
+        FleetData.from_node_data([])
+    good = (np.ones((3, 2), np.float32), np.ones(3, np.int32))
+    empty = (np.zeros((0, 2), np.float32), np.zeros(0, np.int32))
+    with pytest.raises(ValueError, match=r"node\(s\) \[1\]"):
+        FleetData.from_node_data([good, empty])
+
+
 def test_fleet_data_pads_unequal_shards():
     node_data = [(np.ones((4, 2), np.float32), np.ones(4, np.int32)),
                  (np.ones((7, 2), np.float32), np.ones(7, np.int32))]

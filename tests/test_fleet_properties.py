@@ -1,0 +1,111 @@
+"""Hypothesis property tests for the fleet stacking/indexing layer
+(`repro.fleet.state`) and the streaming detection ring — skipped cleanly
+when hypothesis is absent (see tests/_optional.py)."""
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _optional import given, settings, st  # hypothesis, optional
+
+from repro.core import detection
+from repro.fleet import (chain_node_keys, chain_node_keys_masked,
+                         gather_nodes, scatter_nodes)
+
+
+# ---------------------------------------------------------------------------
+# gather/scatter round-trip — including duplicate (padded) cohort indices
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(2, 12),
+       st.lists(st.integers(0, 11), min_size=1, max_size=20),
+       st.integers(0, 10_000))
+def test_gather_scatter_roundtrip_with_duplicates(n, raw_idx, seed):
+    """Scattering back exactly what was gathered is the identity, even when
+    the cohort repeats node indices (padded cohorts): duplicated slots are
+    identical copies by construction, so last-write-wins is harmless."""
+    idx = jnp.asarray([i % n for i in raw_idx], jnp.int32)
+    key = jax.random.PRNGKey(seed)
+    tree = {"w": jax.random.normal(key, (n, 3)),
+            "b": {"c": jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                         (n, 2, 2))}}
+    cohort = gather_nodes(tree, idx)
+    back = scatter_nodes(tree, idx, cohort, debug=True)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(2, 12),
+       st.lists(st.integers(0, 11), min_size=2, max_size=20),
+       st.integers(0, 10_000))
+def test_scatter_overwrites_exactly_the_indexed_rows(n, raw_idx, seed):
+    """Rows named by idx end up holding the (shared) new value; every other
+    row is untouched."""
+    idx_h = np.asarray([i % n for i in raw_idx], np.int32)
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(seed), (n, 4))}
+    new_rows = jnp.zeros((len(idx_h), 4)) + 7.0
+    out = scatter_nodes(tree, jnp.asarray(idx_h), {"w": new_rows},
+                        debug=True)
+    out_h = np.asarray(out["w"])
+    ref = np.asarray(tree["w"]).copy()
+    ref[idx_h] = 7.0
+    np.testing.assert_array_equal(out_h, ref)
+
+
+# ---------------------------------------------------------------------------
+# masked PRNG chain ≡ plain chain on an all-True mask
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 24), st.integers(0, 10_000))
+def test_chain_masked_all_true_equals_plain_chain(n, seed):
+    key = jax.random.PRNGKey(seed)
+    ke, k1, k2 = chain_node_keys(key, n)
+    km, m1, m2 = chain_node_keys_masked(key, jnp.ones(n, bool))
+    np.testing.assert_array_equal(np.asarray(ke), np.asarray(km))
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(m1))
+    np.testing.assert_array_equal(np.asarray(k2), np.asarray(m2))
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.lists(st.booleans(), min_size=1, max_size=24),
+       st.integers(0, 10_000))
+def test_chain_masked_advances_only_on_true_slots(mask, seed):
+    """The end key after a masked chain equals a plain chain over just the
+    True slots — masked-out slots must leave the chain untouched."""
+    key = jax.random.PRNGKey(seed)
+    ke, _, _ = chain_node_keys_masked(key, jnp.asarray(mask))
+    k = key
+    for _ in range(sum(mask)):
+        k, _, _ = jax.random.split(k, 3)
+    np.testing.assert_array_equal(np.asarray(ke), np.asarray(k))
+
+
+# ---------------------------------------------------------------------------
+# streaming detection ring ≡ a Python deque reference
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 9),
+       st.lists(st.floats(0.0, 1.0, width=32), min_size=1, max_size=30),
+       st.integers(1, 12))
+def test_ring_matches_deque_reference(window, values, warmup):
+    """`ring_push`/`ring_threshold`/`ring_detect` must track a plain
+    bounded deque across arbitrary push sequences."""
+    s = 80.0
+    ring, count = detection.ring_init(window)
+    dq = collections.deque(maxlen=window)
+    for v in values:
+        ring, count = detection.ring_push(ring, count, jnp.float32(v))
+        dq.append(np.float32(v))
+        thr_ref = float(detection.detection_threshold(
+            jnp.asarray(list(dq)), s))
+        assert float(detection.ring_threshold(ring, count, s)) == \
+            pytest.approx(thr_ref, abs=1e-6)
+        rej_ref = len(dq) >= warmup and np.float32(v) <= np.float32(thr_ref)
+        rej = bool(detection.ring_detect(ring, count, jnp.float32(v), s,
+                                         warmup))
+        assert rej == bool(rej_ref), (v, list(dq), thr_ref)

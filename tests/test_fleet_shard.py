@@ -1,0 +1,199 @@
+"""Mesh-sharded fleet tests: padding/placement helpers, single-host mesh
+parity, and the multi-device parity suite run in a subprocess with 8 forced
+host devices (sharded sync rounds and async windows must float-close the
+single-device engines at n=64, including uneven n % n_devices != 0)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fleet import FleetData, FleetMesh, pad_keys, pad_node_axis
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# mesh + padding helpers (single device is a valid 1-mesh)
+# ---------------------------------------------------------------------------
+
+def test_fleet_mesh_create_and_padding():
+    mesh = FleetMesh.create()
+    assert mesh.n_devices == len(jax.devices())
+    d = mesh.n_devices
+    assert mesh.padded(d) == d
+    assert mesh.padded(d + 1) == 2 * d
+    assert mesh.padded(1) == d
+
+
+def test_fleet_mesh_too_many_devices_raises():
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        FleetMesh.create(len(jax.devices()) + 1)
+
+
+def test_fleet_data_pad_to_adds_dummy_nodes():
+    fd = FleetData.from_node_data(
+        [(np.ones((3, 2), np.float32), np.ones(3, np.int32))] * 2)
+    padded = fd.pad_to(5)
+    assert padded.x.shape == (5, 3, 2)
+    np.testing.assert_array_equal(np.asarray(padded.sizes), [3, 3, 1, 1, 1])
+    assert float(padded.x[2:].sum()) == 0.0
+    with pytest.raises(ValueError, match="already has"):
+        fd.pad_to(1)
+
+
+def test_pad_node_axis_and_keys():
+    tree = {"w": jnp.ones((3, 4)), "b": jnp.ones((3,))}
+    p = pad_node_axis(tree, 8)
+    assert p["w"].shape == (8, 4) and p["b"].shape == (8,)
+    assert float(p["w"][3:].sum()) == 0.0
+    with pytest.raises(ValueError):
+        pad_node_axis(tree, 2)
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    kp = pad_keys(ks, 6)
+    assert kp.shape[0] == 6
+    np.testing.assert_array_equal(np.asarray(kp[3]), np.asarray(ks[2]))
+
+
+# ---------------------------------------------------------------------------
+# sharded engines on the host's own mesh (1 device in plain tier-1; the CI
+# matrix job re-runs this file with 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+def _diff_params(a, b):
+    return max(float(jnp.abs(x - y).max()) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _population(n):
+    from repro.data import make_federated_image_data
+    from repro.models.mlp import init_mlp
+    node_data, test, cloud, _ = make_federated_image_data(
+        0, n_nodes=n, n_malicious=2, n_train=40 * n, n_test=128,
+        n_cloud_test=64, hw=(8, 8))
+    return init_mlp(jax.random.PRNGKey(0), 64), node_data, test, cloud
+
+
+def test_sharded_sync_engine_matches_unsharded_on_host_mesh():
+    """n=10 is uneven against any multi-device host mesh. key_mode
+    "sequential" makes parity exact regardless of padding (the chain is
+    consumed per real node)."""
+    from repro.fleet import FleetConfig, FleetEngine
+    from repro.models.mlp import mlp_accuracy, mlp_loss
+    params, node_data, test, cloud = _population(10)
+    cfg = FleetConfig(local_steps=3, batch_size=16, lr=0.1, detect=True,
+                      key_mode="sequential", seed=0)
+    args = (params, mlp_loss, mlp_accuracy, node_data, test, cloud, cfg)
+    ref = FleetEngine(*args)
+    sh = FleetEngine(*args, mesh=FleetMesh.create())
+    hr = ref.run(2)
+    hs = sh.run(2)
+    np.testing.assert_allclose([r.accuracy for r in hr],
+                               [r.accuracy for r in hs], atol=2e-3)
+    assert [r.n_rejected for r in hr] == [r.n_rejected for r in hs]
+    assert _diff_params(ref.params, sh.params) < 1e-5
+
+
+def test_sharded_async_engine_matches_unsharded_on_host_mesh():
+    from repro.fleet import AsyncFleetConfig, AsyncFleetEngine
+    from repro.models.mlp import mlp_accuracy, mlp_loss
+    params, node_data, test, cloud = _population(10)
+    cfg = AsyncFleetConfig(local_steps=3, batch_size=16, lr=0.1, detect=True,
+                           key_mode="sequential", seed=0, detect_window=10)
+    args = (params, mlp_loss, mlp_accuracy, node_data, test, cloud, cfg)
+    ref = AsyncFleetEngine(*args)
+    sh = AsyncFleetEngine(*args, mesh=FleetMesh.create())
+    ref.run_arrivals(20)
+    sh.run_arrivals(20)
+    assert int(ref.state.version) == int(sh.state.version)
+    assert _diff_params(ref.params, sh.params) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# the 8-device parity suite (subprocess, forced host platform device count —
+# pattern from test_system.py)
+# ---------------------------------------------------------------------------
+
+def test_sharded_parity_on_8_devices_in_subprocess():
+    """Sharded sync round + async window float-close the single-device
+    engines at n=64 on an 8-device host mesh, including the uneven padded
+    case (n=61, 61 % 8 != 0)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, numpy as np
+        from repro.fleet import (AsyncFleetConfig, AsyncFleetEngine,
+                                 FleetConfig, FleetEngine, FleetMesh,
+                                 FullParticipation, NodeProfile)
+        from repro.data import make_federated_image_data
+        from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+
+        def diff(a, b):
+            return max(float(np.abs(np.asarray(x) - np.asarray(y)).max())
+                       for x, y in zip(jax.tree.leaves(a),
+                                       jax.tree.leaves(b)))
+
+        def population(n):
+            node_data, test, cloud, _ = make_federated_image_data(
+                0, n_nodes=n, n_malicious=n // 5, n_train=40 * n,
+                n_test=256, n_cloud_test=128, hw=(8, 8))
+            profile = NodeProfile.lognormal(n, 1.0, 0.5, 12.5e6, seed=0)
+            params = init_mlp(jax.random.PRNGKey(0), 64)
+            return params, node_data, test, cloud, profile
+
+        out = {"n_devices": len(jax.devices())}
+        mesh = FleetMesh.create(8)
+        for n in (64, 61):                     # even and uneven padding
+            params, node_data, test, cloud, profile = population(n)
+            cfg = FleetConfig(local_steps=4, batch_size=16, lr=0.1,
+                              detect=True, sigma=0.05, sparsify_ratio=0.5,
+                              key_mode="sequential", seed=0)
+            args = (params, mlp_loss, mlp_accuracy, node_data, test, cloud,
+                    cfg)
+            ref = FleetEngine(*args, profile=profile,
+                              sampler=FullParticipation())
+            sh = FleetEngine(*args, profile=profile,
+                             sampler=FullParticipation(), mesh=mesh)
+            hr, hs = ref.run(3), sh.run(3)
+            out[f"sync{n}_acc"] = max(abs(a.accuracy - b.accuracy)
+                                      for a, b in zip(hr, hs))
+            out[f"sync{n}_rej"] = int(sum(a.n_rejected != b.n_rejected
+                                          for a, b in zip(hr, hs)))
+            out[f"sync{n}_params"] = diff(ref.params, sh.params)
+
+            acfg = AsyncFleetConfig(local_steps=4, batch_size=16, lr=0.1,
+                                    detect=True, sigma=0.05,
+                                    sparsify_ratio=0.5,
+                                    key_mode="sequential", seed=0,
+                                    detect_window=max(n, 4))
+            aargs = (params, mlp_loss, mlp_accuracy, node_data, test, cloud,
+                     acfg)
+            aref = AsyncFleetEngine(*aargs, profile=profile)
+            ash = AsyncFleetEngine(*aargs, profile=profile, mesh=mesh)
+            aref.run_arrivals(2 * n)
+            ash.run_arrivals(2 * n)
+            out[f"async{n}_version"] = abs(int(aref.state.version)
+                                           - int(ash.state.version))
+            out[f"async{n}_params"] = diff(aref.params, ash.params)
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)          # the child forces its own devices
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    assert rec["n_devices"] == 8
+    for n in (64, 61):
+        assert rec[f"sync{n}_acc"] < 2e-3, rec
+        assert rec[f"sync{n}_rej"] == 0, rec
+        assert rec[f"sync{n}_params"] < 1e-5, rec
+        assert rec[f"async{n}_version"] == 0, rec
+        assert rec[f"async{n}_params"] < 1e-4, rec

@@ -35,7 +35,10 @@ EOF
 echo "== 2/3 tier-1 pytest =="
 python -m pytest -q
 
-echo "== 3/3 fleet smokes on synthetic data (2 sync rounds + 2 async windows) =="
+echo "== 3/4 fleet smokes on synthetic data (2 sync rounds + 2 async windows) =="
 python -m benchmarks.fleet_scale --smoke
 python -m benchmarks.async_scale --smoke
+
+echo "== 4/4 multi-device sharded fleet smoke (4 forced host devices) =="
+python -m benchmarks.fleet_shard --smoke
 echo "CI OK"
