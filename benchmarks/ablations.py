@@ -5,49 +5,35 @@ non-IID and heterogeneous, so we measure how the framework holds up.
 """
 from __future__ import annotations
 
-import jax
+from repro import api
 
-from .common import HW, N_NODES, ROUNDS, Timer, emit
-
-from repro.core import FedConfig, FederatedTrainer
-from repro.data import make_federated_image_data
-from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+from .common import Timer, emit, prepare_mode
 
 
-def _trainer(iid: bool, staleness_adaptive: bool, alpha: float = 0.5):
-    node_data, test, cloud, _ = make_federated_image_data(
-        0, n_nodes=N_NODES, n_malicious=0, n_train=1500, n_test=400,
-        n_cloud_test=300, hw=HW, iid=iid, dirichlet_alpha=0.3)
-    cfg = FedConfig(mode="aldpfl", n_nodes=N_NODES, rounds=ROUNDS,
-                    local_steps=12, batch_size=32, lr=0.1, alpha=alpha,
-                    detect=False, sigma=0.05,
-                    staleness_adaptive=staleness_adaptive,
-                    heterogeneity=1.0)
-    return FederatedTrainer(init_cnn(jax.random.PRNGKey(0), in_hw=HW),
-                            cnn_loss, cnn_accuracy, node_data, test, cloud,
-                            cfg)
+def _run(iid: bool, staleness_adaptive: bool, alpha: float = 0.5):
+    plan, pop = prepare_mode("aldpfl", n_malicious=0, detect=False,
+                             iid=iid, staleness_adaptive=staleness_adaptive,
+                             alpha=alpha, heterogeneity=1.0)
+    with Timer() as t:
+        rep = api.run(plan, population=pop)
+    return rep, t
 
 
 def run() -> None:
     for iid in (True, False):
-        tr = _trainer(iid, False)
-        with Timer() as t:
-            hist = tr.run()
-        emit(f"ablation_{'iid' if iid else 'noniid'}", t.us / len(hist),
-             f"accuracy={hist[-1].accuracy:.3f}")
+        rep, t = _run(iid, False)
+        emit(f"ablation_{'iid' if iid else 'noniid'}",
+             t.us / len(rep.records),
+             f"accuracy={rep.final_accuracy:.3f}")
     for adaptive in (False, True):
-        tr = _trainer(True, adaptive)
-        with Timer() as t:
-            hist = tr.run()
+        rep, t = _run(True, adaptive)
         tag = "adaptive" if adaptive else "fixed"
-        emit(f"ablation_staleness_{tag}", t.us / len(hist),
-             f"accuracy={hist[-1].accuracy:.3f}")
+        emit(f"ablation_staleness_{tag}", t.us / len(rep.records),
+             f"accuracy={rep.final_accuracy:.3f}")
     for alpha in (0.1, 0.3, 0.5, 0.7, 0.9):
-        tr = _trainer(True, False, alpha=alpha)
-        with Timer() as t:
-            hist = tr.run()
-        emit(f"ablation_alpha{alpha}", t.us / len(hist),
-             f"accuracy={hist[-1].accuracy:.3f}")
+        rep, t = _run(True, False, alpha=alpha)
+        emit(f"ablation_alpha{alpha}", t.us / len(rep.records),
+             f"accuracy={rep.final_accuracy:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,73 @@
+"""API smoke: compile and run a tiny spec for each schedule × topology.
+
+Covers the declarative surface end-to-end — every `SchedulePolicy.kind`
+(sync / async / buffered) against every `Topology.kind` the host can run:
+the sequential reference loops, the single-device fleet engines, and
+(with ``--mesh D``, under ``XLA_FLAGS=--xla_force_host_platform_
+device_count=D``) the mesh-sharded engines.  Each combination compiles,
+runs, and must produce a JSON-round-trippable `RunReport`.
+
+  PYTHONPATH=src python -m benchmarks.api_smoke               # seq + single
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
+      PYTHONPATH=src python -m benchmarks.api_smoke --mesh 2  # + mesh combos
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro import api
+
+from .common import Timer, emit
+
+
+def tiny_spec(kind: str, topology: str,
+              devices: int | None = None) -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        fleet=api.FleetSpec(n_nodes=4, samples_per_node=24, n_test=64,
+                            n_cloud_test=32,
+                            attack=api.AttackMix(malicious_frac=0.25)),
+        schedule=api.SchedulePolicy(kind=kind),
+        privacy=api.PrivacySpec(sigma=0.05),
+        compression=api.CompressionSpec(sparsify_ratio=0.5),
+        defense=api.DefenseSpec(detect=True),
+        topology=api.Topology(kind=topology, devices=devices),
+        train=api.TrainSpec(local_steps=2, batch_size=8, lr=0.1),
+        rounds=2, seed=0)
+
+
+def _combos(mesh_devices: int):
+    for kind in ("sync", "async", "buffered"):
+        for topology in ("sequential", "single"):
+            if kind == "buffered" and topology == "sequential":
+                continue        # buffered has no sequential reference loop
+            yield kind, topology, None
+        if mesh_devices:
+            yield kind, "mesh", mesh_devices
+
+
+def run(mesh_devices: int = 0) -> None:
+    for kind, topology, devices in _combos(mesh_devices):
+        spec = tiny_spec(kind, topology, devices)
+        plan = api.compile_plan(spec)
+        with Timer() as t:
+            rep = api.run(plan)
+        assert rep.records, f"{kind}/{topology}: empty report"
+        assert api.RunReport.from_json(rep.to_json()).records == rep.records
+        tag = topology if devices is None else f"mesh{devices}"
+        emit(f"api_smoke_{kind}_{tag}", t.us / len(rep.records),
+             f"engine={rep.engine};acc={rep.final_accuracy:.3f};"
+             f"records={len(rep.records)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", type=int, default=0, metavar="D",
+                    help="also run mesh-topology combos over D local "
+                         "devices (force them with XLA_FLAGS on CPU)")
+    args = ap.parse_args()
+    run(mesh_devices=args.mesh)
+    print("API SMOKE OK")
+
+
+if __name__ == "__main__":
+    main()

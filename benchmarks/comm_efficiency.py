@@ -2,27 +2,30 @@
 container at different keep ratios (the paper's communication levers)."""
 from __future__ import annotations
 
-from .common import Timer, build_trainer, emit
+from repro import api
+
+from .common import Timer, emit, prepare_mode
 
 
 def run() -> None:
     for mode in ("sfl", "afl"):
-        tr = build_trainer(mode, n_malicious=0, detect=False, rounds=3)
+        plan, pop = prepare_mode(mode, n_malicious=0, detect=False,
+                                 rounds=3)
         with Timer() as t:
-            hist = tr.run()
-        comp = sum(r.comp_time for r in hist)
-        comm = sum(r.comm_time for r in hist)
-        emit(f"comm_kappa_{mode}", t.us / len(hist),
-             f"kappa={tr.kappa():.4f};comp_s={comp:.2f};comm_s={comm:.3f}")
+            rep = api.run(plan, population=pop)
+        comp = sum(r.comp_time for r in rep.records)
+        comm = sum(r.comm_time for r in rep.records)
+        emit(f"comm_kappa_{mode}", t.us / len(rep.records),
+             f"kappa={rep.kappa:.4f};comp_s={comp:.2f};comm_s={comm:.3f}")
     for ratio in (1.0, 0.25, 0.1, 0.01):
-        tr = build_trainer("aldpfl", n_malicious=0, detect=False, rounds=2,
-                           sparsify=ratio)
+        plan, pop = prepare_mode("aldpfl", n_malicious=0, detect=False,
+                                 rounds=2, sparsify=ratio)
         with Timer() as t:
-            hist = tr.run()
-        total_bytes = sum(r.comm_bytes for r in hist)
-        emit(f"comm_sparsify_r{ratio}", t.us / len(hist),
-             f"bytes_per_round={total_bytes/len(hist):.0f};"
-             f"final_acc={hist[-1].accuracy:.3f}")
+            rep = api.run(plan, population=pop)
+        total_bytes = sum(r.comm_bytes for r in rep.records)
+        emit(f"comm_sparsify_r{ratio}", t.us / len(rep.records),
+             f"bytes_per_round={total_bytes/len(rep.records):.0f};"
+             f"final_acc={rep.final_accuracy:.3f}")
 
 
 if __name__ == "__main__":

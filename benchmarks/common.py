@@ -1,41 +1,78 @@
-"""Shared helpers for the benchmark harness (CPU-sized paper reproductions)."""
+"""Shared helpers for the benchmark harness (CPU-sized paper reproductions).
+
+Benchmarks describe experiments declaratively through `repro.api`
+(`spec_for_mode` -> `compile_plan` -> `run`) and write every trajectory
+record through the api's schema-stamped serializer
+(`api.append_json_records`), so ``results/*.json`` share one versioned
+format with `RunReport`.
+"""
 from __future__ import annotations
 
-import json
 import os
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax  # noqa: E402
-
-from repro.core import FedConfig, FederatedTrainer           # noqa: E402
-from repro.data import make_federated_image_data             # noqa: E402
-from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn  # noqa: E402
+from repro import api                                        # noqa: E402
 
 HW = (14, 14)          # reduced MNIST-shaped images (CPU budget)
 N_NODES = 10
 ROUNDS = 4
 LOCAL_STEPS = 12
 
+_SCHEDULE = {"sfl": "sync", "afl": "async",
+             "sldpfl": "sync", "aldpfl": "async"}
 
-def build_trainer(mode: str, *, n_malicious: int = 3, detect: bool = True,
+
+def spec_for_mode(mode: str, *, n_malicious: int = 3, detect: bool = True,
                   detect_s: float = 80.0, rounds: int = ROUNDS,
                   sparsify: float = 1.0, seed: int = 0,
-                  sigma: float | None = 0.05) -> FederatedTrainer:
-    """sigma=0.05 default (workable SNR); pass sigma=None for the paper's
-    ε=8 calibration — the sigma-tradeoff bench sweeps both."""
-    node_data, test, cloud, _ = make_federated_image_data(
-        seed, n_nodes=N_NODES, n_malicious=n_malicious, n_train=1500,
-        n_test=400, n_cloud_test=300, hw=HW)
-    cfg = FedConfig(mode=mode, n_nodes=N_NODES, rounds=rounds,
-                    local_steps=LOCAL_STEPS, batch_size=32, lr=0.1,
-                    detect=detect, detect_s=detect_s, sparsify_ratio=sparsify,
-                    sigma=sigma, seed=seed)
-    params = init_cnn(jax.random.PRNGKey(seed), in_hw=HW)
-    return FederatedTrainer(params, cnn_loss, cnn_accuracy, node_data, test,
-                            cloud, cfg)
+                  sigma: float | None = 0.05,
+                  alpha: float = 0.5, staleness_adaptive: bool = False,
+                  heterogeneity: float = 0.5, iid: bool = True,
+                  topology: str = "single") -> api.ExperimentSpec:
+    """The benchmark CNN population as a declarative spec.
+
+    sigma=0.05 default (workable SNR); pass sigma=None for the paper's
+    ε=8 calibration — the sigma-tradeoff bench sweeps both.  The no-noise
+    modes (sfl/afl) run with σ=0 regardless, like `FedConfig` did.
+    """
+    kind = _SCHEDULE[mode]
+    return api.ExperimentSpec(
+        fleet=api.FleetSpec(
+            n_nodes=N_NODES,
+            profile=api.NodeHeterogeneity(heterogeneity=heterogeneity),
+            attack=api.AttackMix(malicious_frac=n_malicious / N_NODES),
+            model="cnn", hw=HW, samples_per_node=1500 // N_NODES,
+            n_test=400, n_cloud_test=300, iid=iid, dirichlet_alpha=0.3),
+        schedule=api.SchedulePolicy(
+            kind=kind, alpha=alpha,
+            staleness_adaptive=(staleness_adaptive if kind == "async"
+                                else False)),
+        privacy=api.PrivacySpec(
+            sigma=(0.0 if mode in ("sfl", "afl") else sigma)),
+        compression=api.CompressionSpec(sparsify_ratio=sparsify),
+        defense=api.DefenseSpec(detect=detect, detect_s=detect_s),
+        topology=api.Topology(kind=topology),
+        train=api.TrainSpec(local_steps=LOCAL_STEPS, batch_size=32, lr=0.1),
+        rounds=rounds, seed=seed)
+
+
+def prepare_mode(mode: str, **kw):
+    """(plan, population) for one of the paper's four schemes — compiled
+    and materialized up front so callers time only `api.run` (matching
+    the pre-redesign benches, which built the trainer outside the
+    Timer)."""
+    spec = spec_for_mode(mode, **kw)
+    plan = api.compile_plan(spec)
+    return plan, api.materialize(spec)
+
+
+def run_mode(mode: str, **kw) -> api.RunReport:
+    """spec -> plan -> run for one of the paper's four schemes."""
+    plan, pop = prepare_mode(mode, **kw)
+    return api.run(plan, population=pop)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
@@ -43,16 +80,10 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
 
 
 def append_trajectory(path: str, records) -> None:
-    """Append benchmark records to a JSON trajectory file (one shared
-    format across fleet_scale/async_scale/fig7_compare)."""
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    traj = []
-    if os.path.exists(path):
-        with open(path) as f:
-            traj = json.load(f)
-    traj.extend(records)
-    with open(path, "w") as f:
-        json.dump(traj, f, indent=1)
+    """Append benchmark records to a JSON trajectory file through the
+    api's schema-stamped writer (one shared, versioned format across
+    fleet_scale/async_scale/fig7_compare)."""
+    api.append_json_records(path, records)
 
 
 class Timer:

@@ -5,23 +5,25 @@
 """
 from __future__ import annotations
 
-from .common import Timer, build_trainer, emit
+from repro import api
+
+from .common import N_NODES, Timer, emit, prepare_mode
 
 
 def run() -> None:
     for s in (50, 60, 70, 80, 90):
-        tr = build_trainer("aldpfl", n_malicious=3, detect=True,
-                           detect_s=float(s))
+        plan, pop = prepare_mode("aldpfl", n_malicious=3, detect=True,
+                                 detect_s=float(s))
         with Timer() as t:
-            hist = tr.run()
-        total = len(hist) * tr.cfg.n_nodes
-        rejected = sum(r.n_rejected for r in hist)
+            rep = api.run(plan, population=pop)
+        total = len(rep.records) * N_NODES
+        rejected = sum(r.n_rejected for r in rep.records)
         # proxy ASR: malicious updates not rejected / malicious updates sent
-        sent_malicious = len(hist) * 3
+        sent_malicious = len(rep.records) * 3
         asr = max(0.0, (sent_malicious - rejected) / sent_malicious)
         emit(f"fig6a_asr_s{s}", t.us / max(total, 1), f"asr={asr:.3f}")
         emit(f"fig6b_acc_s{s}", t.us / max(total, 1),
-             f"accuracy={hist[-1].accuracy:.3f}")
+             f"accuracy={rep.final_accuracy:.3f}")
 
 
 if __name__ == "__main__":

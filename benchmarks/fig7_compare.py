@@ -1,7 +1,7 @@
 """Paper Fig. 7: ALDPFL vs SLDPFL vs AFL vs SFL — accuracy and running time.
 
 The async schemes (afl/aldpfl) are emitted twice: through the per-arrival
-event loop (`use_fleet=False`, the seed reference) and through the
+event loop (``topology="sequential"``, the seed reference) and through the
 window-batched `AsyncFleetEngine` (the default path). Both land in the
 ``results/async_scale.json`` trajectory (tagged ``"bench": "fig7"``) so the
 event-loop/fleet agreement and their wall-clocks are tracked across commits.
@@ -11,7 +11,9 @@ from __future__ import annotations
 import os
 import time
 
-from .common import Timer, append_trajectory, build_trainer, emit
+from repro import api
+
+from .common import Timer, append_trajectory, emit, prepare_mode
 
 RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
                             "async_scale.json")
@@ -21,24 +23,25 @@ def run() -> None:
     stamp = time.strftime("%Y-%m-%dT%H:%M:%S")
     records = []
     for mode in ("sfl", "afl", "sldpfl", "aldpfl"):
-        paths = ((True, "fleet"), (False, "loop")) \
-            if mode in ("afl", "aldpfl") else ((True, "fleet"),)
-        for use_fleet, path in paths:
-            tr = build_trainer(mode, n_malicious=0, detect=False)
-            tr.cfg.use_fleet = use_fleet
+        paths = (("single", "fleet"), ("sequential", "loop")) \
+            if mode in ("afl", "aldpfl") else (("single", "fleet"),)
+        for topology, path in paths:
+            plan, pop = prepare_mode(mode, n_malicious=0, detect=False,
+                                     topology=topology)
             with Timer() as t:
-                hist = tr.run()
-            tag = mode if use_fleet else f"{mode}_loop"
+                rep = api.run(plan, population=pop)
+            hist = rep.records
+            tag = mode if path == "fleet" else f"{mode}_loop"
             emit(f"fig7a_accuracy_{tag}", t.us / len(hist),
-                 f"accuracy={hist[-1].accuracy:.3f}")
+                 f"accuracy={rep.final_accuracy:.3f}")
             emit(f"fig7b_runtime_{tag}", t.us / len(hist),
-                 f"sim_clock_s={hist[-1].t:.2f};kappa={tr.kappa():.4f};"
-                 f"eps={tr.epsilon_spent():.2f}")
+                 f"sim_clock_s={hist[-1].t:.2f};kappa={rep.kappa:.4f};"
+                 f"eps={rep.epsilon_spent:.2f}")
             if mode in ("afl", "aldpfl"):
                 records.append({
                     "ts": stamp, "bench": "fig7", "mode": mode, "path": path,
-                    "accuracy": hist[-1].accuracy,
-                    "sim_clock_s": hist[-1].t, "kappa": tr.kappa(),
+                    "accuracy": rep.final_accuracy,
+                    "sim_clock_s": hist[-1].t, "kappa": rep.kappa,
                     "wall_s": t.us / 1e6,
                     "comm_bytes_total": sum(r.comm_bytes for r in hist),
                 })

@@ -1,14 +1,16 @@
 """Paper Fig. 8: label-flipping robustness vs malicious proportion p.
 
 General task = overall accuracy; special task = accuracy on the attacked
-class (digit '1' analogue: class 1 flipped to 7).
+class (digit '1' analogue: class 1 flipped to 7).  Per-class accuracy needs
+the final params and the test set, so this bench runs the compiled plan
+over an explicitly materialized population and reads
+``report.final_params``.
 """
 from __future__ import annotations
 
-import jax
-import numpy as np
+from repro import api
 
-from .common import HW, Timer, build_trainer, emit
+from .common import Timer, emit, prepare_mode
 
 
 def run() -> None:
@@ -16,15 +18,17 @@ def run() -> None:
     for p in (10, 20, 30):
         n_mal = max(1, round(p / 100 * 10))
         for detect in (True, False):
-            tr = build_trainer("aldpfl", n_malicious=n_mal, detect=detect)
+            plan, pop = prepare_mode("aldpfl", n_malicious=n_mal,
+                                     detect=detect)
             with Timer() as t:
-                hist = tr.run()
-            x_te, y_te = tr.test_data
-            special = float(per_class_accuracy(tr.params, x_te, y_te, 1))
+                rep = api.run(plan, population=pop)
+            x_te, y_te = pop.test_data
+            special = float(per_class_accuracy(rep.final_params, x_te,
+                                               y_te, 1))
             tag = "with" if detect else "without"
-            emit(f"fig8a_general_p{p}_{tag}", t.us / len(hist),
-                 f"accuracy={hist[-1].accuracy:.3f}")
-            emit(f"fig8b_special_p{p}_{tag}", t.us / len(hist),
+            emit(f"fig8a_general_p{p}_{tag}", t.us / len(rep.records),
+                 f"accuracy={rep.final_accuracy:.3f}")
+            emit(f"fig8b_special_p{p}_{tag}", t.us / len(rep.records),
                  f"class1_acc={special:.3f}")
 
 

@@ -3,21 +3,22 @@ accountant ε at δ=1e-3). σ≈0.47 is the paper's own ε=8 calibration — our
 honest reproduction shows its accuracy cost (see EXPERIMENTS.md §Paper)."""
 from __future__ import annotations
 
-from .common import Timer, build_trainer, emit
+from repro import api
+
+from .common import Timer, emit, prepare_mode
 
 
 def run() -> None:
     for sigma in (0.0, 0.01, 0.05, 0.1, 0.4716):
+        # σ=0 is exactly the no-noise async scheme (afl)
         mode = "afl" if sigma == 0.0 else "aldpfl"
-        tr = build_trainer(mode, n_malicious=0, detect=False, rounds=3,
-                           sigma=(sigma if sigma > 0 else None))
-        if sigma == 0.0:
-            tr.sigma = 0.0
+        plan, pop = prepare_mode(mode, n_malicious=0, detect=False,
+                                 rounds=3, sigma=sigma)
         with Timer() as t:
-            hist = tr.run()
-        eps = tr.epsilon_spent()
-        emit(f"privacy_sigma{sigma}", t.us / len(hist),
-             f"accuracy={hist[-1].accuracy:.3f};eps={eps:.2f};delta=0.001")
+            rep = api.run(plan, population=pop)
+        emit(f"privacy_sigma{sigma}", t.us / len(rep.records),
+             f"accuracy={rep.final_accuracy:.3f};"
+             f"eps={rep.epsilon_spent:.2f};delta=0.001")
 
 
 if __name__ == "__main__":

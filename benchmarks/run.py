@@ -11,6 +11,7 @@ import sys
 import traceback
 
 MODULES = {
+    "api": "api_smoke",
     "fig6": "fig6_detection",
     "fig7": "fig7_compare",
     "fig8": "fig8_flip",

@@ -15,30 +15,35 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.core import FedConfig, FederatedTrainer
+from repro import api
 from repro.core.aldp import add_gaussian_noise
 from repro.core.attacks import dlg_attack, reconstruction_mse
-from repro.data import make_federated_image_data
-from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn, per_class_accuracy
+from repro.models.cnn import per_class_accuracy
 
 
 def label_flip_experiment() -> None:
     print("=== 1. label-flipping attack (p=30%) ===")
-    node_data, test, cloud, _ = make_federated_image_data(
-        seed=0, n_nodes=10, n_malicious=3, n_train=1500, n_test=400,
-        n_cloud_test=300, hw=(14, 14))
     for detect in (False, True):
-        cfg = FedConfig(mode="aldpfl", n_nodes=10, rounds=4, local_steps=12,
-                        batch_size=32, lr=0.1, detect=detect, sigma=0.05)
-        tr = FederatedTrainer(init_cnn(jax.random.PRNGKey(0), in_hw=(14, 14)),
-                              cnn_loss, cnn_accuracy, node_data, test, cloud,
-                              cfg)
-        hist = tr.run()
-        special = float(per_class_accuracy(tr.params, *tr.test_data, 1))
+        spec = api.ExperimentSpec(
+            fleet=api.FleetSpec(n_nodes=10,
+                                attack=api.AttackMix(malicious_frac=0.3),
+                                model="cnn", hw=(14, 14),
+                                samples_per_node=150, n_test=400,
+                                n_cloud_test=300),
+            schedule=api.SchedulePolicy(kind="async"),
+            privacy=api.PrivacySpec(sigma=0.05),
+            defense=api.DefenseSpec(detect=detect),
+            train=api.TrainSpec(local_steps=12, batch_size=32, lr=0.1),
+            rounds=4, seed=0)
+        plan = api.compile_plan(spec)
+        pop = api.materialize(spec)
+        rep = api.run(plan, population=pop)
+        special = float(per_class_accuracy(rep.final_params,
+                                           *pop.test_data, 1))
         print(f"  detection={'ON ' if detect else 'OFF'}  "
-              f"general acc={hist[-1].accuracy:.3f}  "
+              f"general acc={rep.final_accuracy:.3f}  "
               f"class-1 acc={special:.3f}  "
-              f"rejected={sum(r.n_rejected for r in hist)} updates")
+              f"rejected={sum(r.n_rejected for r in rep.records)} updates")
 
 
 def dlg_experiment() -> None:

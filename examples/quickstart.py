@@ -1,10 +1,11 @@
 """Quickstart: the paper's ALDPFL framework end-to-end in ~a minute on CPU.
 
-Trains the paper's CNN (2 conv + 1 FC) across 10 simulated edge nodes
-(3 label-flipping adversaries) with:
-  * asynchronous α-mixing model updates (Eq. 6),
-  * node-level LDP via clipped+noised deltas (Eq. 8, ε=8, δ=1e-3),
-  * cloud-side top-s% malicious-node detection (Alg. 2, s=80).
+Declares the experiment once through `repro.api` — population (10 edge
+nodes, 3 label-flipping adversaries), schedule (asynchronous Eq. 6
+α-mixing), privacy (node-level LDP, Eq. 8), defense (cloud-side top-s%
+detection, Alg. 2 with s=80) — then compiles and runs it:
+
+    spec -> compile_plan(spec) -> run(plan) -> RunReport
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,43 +14,51 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-
+from repro import api
 from repro.configs.paper_cnn import config as paper_config
-from repro.core import FedConfig, FederatedTrainer
-from repro.data import make_federated_image_data
-from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
 
 
 def main() -> None:
     pc = paper_config()
-    node_data, test, cloud, malicious = make_federated_image_data(
-        seed=0, n_nodes=pc.n_nodes, n_malicious=pc.n_malicious,
-        n_train=2000, n_test=500, n_cloud_test=300, hw=(14, 14),
-        flip_src=pc.flip_src, flip_dst=pc.flip_dst)
-    print(f"nodes={pc.n_nodes} (malicious: {malicious}), "
-          f"attack: label {pc.flip_src} -> {pc.flip_dst}")
-
     # sigma=0.05 keeps a workable signal-to-noise ratio at this scale; the
     # paper's own ε=8 calibration (σ≈0.47) collapses accuracy to chance —
     # see EXPERIMENTS.md §Paper "honest finding" and `benchmarks/privacy_tradeoff`.
-    cfg = FedConfig(mode="aldpfl", n_nodes=pc.n_nodes, rounds=6,
-                    local_steps=15, batch_size=32, lr=0.1,
-                    alpha=pc.alpha, epsilon=pc.epsilon, delta=pc.delta,
-                    sigma=0.05, detect=True, detect_s=pc.detect_s)
-    trainer = FederatedTrainer(
-        init_cnn(jax.random.PRNGKey(0), in_hw=(14, 14)), cnn_loss,
-        cnn_accuracy, node_data, test, cloud, cfg)
+    spec = api.ExperimentSpec(
+        fleet=api.FleetSpec(
+            n_nodes=pc.n_nodes,
+            attack=api.AttackMix(malicious_frac=pc.n_malicious / pc.n_nodes,
+                                 flip_src=pc.flip_src, flip_dst=pc.flip_dst),
+            model="cnn", hw=(14, 14), samples_per_node=200,
+            n_test=500, n_cloud_test=300),
+        schedule=api.SchedulePolicy(kind="async", alpha=pc.alpha),
+        privacy=api.PrivacySpec(sigma=0.05, epsilon=pc.epsilon,
+                                delta=pc.delta),
+        defense=api.DefenseSpec(detect=True, detect_s=pc.detect_s),
+        train=api.TrainSpec(local_steps=15, batch_size=32, lr=0.1),
+        rounds=6, seed=0)
 
-    print(f"LDP noise multiplier σ = {trainer.sigma:.4f} "
-          f"(calibrated for ε={pc.epsilon}, δ={pc.delta})")
-    for rec in trainer.run():
+    plan = api.compile_plan(spec)
+    print(f"nodes={pc.n_nodes} (malicious_frac="
+          f"{spec.fleet.attack.malicious_frac}), "
+          f"attack: label {pc.flip_src} -> {pc.flip_dst}")
+    print(f"plan: {plan.describe()}")
+    print(f"LDP noise multiplier σ = {plan.sigma:.4f}")
+
+    report = api.run(plan)
+    for rec in report.records:
         print(f"  t={rec.t:7.2f}s  acc={rec.accuracy:.3f} "
               f"rejected={rec.n_rejected}")
-    print(f"final accuracy: {trainer.history[-1].accuracy:.3f}")
-    print(f"privacy spent:  ε = {trainer.epsilon_spent():.2f} "
-          f"(δ = {cfg.delta})")
-    print(f"communication efficiency κ = {trainer.kappa():.4f}")
+    print(f"final accuracy: {report.final_accuracy:.3f}")
+    print(f"privacy spent:  ε = {report.epsilon_spent:.2f} "
+          f"(δ = {spec.privacy.delta})")
+    print(f"communication efficiency κ = {report.kappa:.4f}")
+
+    # the whole result round-trips through JSON (schema-versioned), so it
+    # can be archived next to the spec that produced it
+    payload = report.to_json()
+    assert api.RunReport.from_json(payload).records == report.records
+    print(f"report JSON: {len(payload)} bytes, "
+          f"schema v{report.schema_version}")
 
 
 if __name__ == "__main__":

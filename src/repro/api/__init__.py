@@ -1,0 +1,39 @@
+"""Declarative experiment API: spec -> plan -> run.
+
+One typed entry layer over the whole framework — population
+(`FleetSpec`), schedule (`SchedulePolicy` + pluggable `WindowPolicy`),
+privacy (`PrivacySpec`), communication (`CompressionSpec`), defense
+(`DefenseSpec`) and placement (`Topology`) — compiled once
+(`compile_plan`, with cross-field validation) and executed uniformly
+(`run`, returning a JSON-round-trippable `RunReport`).
+
+    from repro import api
+
+    spec = api.ExperimentSpec(
+        fleet=api.FleetSpec(n_nodes=50,
+                            attack=api.AttackMix(malicious_frac=0.2)),
+        schedule=api.SchedulePolicy(kind="async"),
+        privacy=api.PrivacySpec(sigma=0.05),
+        defense=api.DefenseSpec(detect=True),
+        rounds=8)
+    report = api.run(api.compile_plan(spec))
+    print(report.final_accuracy, report.kappa, report.epsilon_spent)
+
+The legacy `FederatedTrainer(FedConfig(...))` surface is a deprecation
+shim over this layer (`compat.plan_from_fed_config`).
+"""
+from .compat import plan_from_fed_config, spec_from_fed_config  # noqa: F401
+from .plan import (BACKENDS, SCHEDULE_KINDS, TOPOLOGY_KINDS,  # noqa: F401
+                   ExperimentPlan, SpecError, compile_plan)
+from .population import (Population, default_sampler,  # noqa: F401
+                         materialize)
+from .report import (RunReport, append_json_records,  # noqa: F401
+                     detection_log)
+from .run import RunState, execute, init_state, make_engine, run  # noqa: F401
+from .spec import (SCHEMA_VERSION, AttackMix, CompressionSpec,  # noqa: F401
+                   DefenseSpec, ExperimentSpec, FleetSpec,
+                   NodeHeterogeneity, PrivacySpec, SchedulePolicy, Topology,
+                   TrainSpec)
+from .window import (AutoWindow, FixedWindow,  # noqa: F401
+                     TargetArrivalsWindow, WindowPolicy,
+                     window_policy_from_dict)

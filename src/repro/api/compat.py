@@ -1,0 +1,67 @@
+"""FedConfig -> ExperimentSpec: the migration path off the flag soup.
+
+`FederatedTrainer` is now a thin shim: its `run()` lowers the legacy
+`FedConfig` through `spec_from_fed_config` / `plan_from_fed_config` and
+executes via `run.execute`.  The mapping is exact — mode strings become a
+`SchedulePolicy`, the σ/ε/δ tangle becomes a `PrivacySpec` with the noise
+multiplier resolved by the same rule (`FedConfig.noise_multiplier`: 0 for
+the no-noise schemes regardless of the sigma field), `use_fleet` /
+`fleet_mesh` become a `Topology` — so shimmed runs reproduce the
+pre-redesign trajectories bit-equal-to-float-close.
+"""
+from __future__ import annotations
+
+from .plan import ExperimentPlan, compile_plan
+from .spec import (AttackMix, CompressionSpec, DefenseSpec, ExperimentSpec,
+                   FleetSpec, NodeHeterogeneity, PrivacySpec, SchedulePolicy,
+                   Topology, TrainSpec)
+
+MODE_TO_SCHEDULE = {"sfl": "sync", "sldpfl": "sync",
+                    "afl": "async", "aldpfl": "async"}
+
+
+def spec_from_fed_config(cfg) -> ExperimentSpec:
+    """Lower a legacy `FedConfig` to the declarative spec it denotes.
+
+    Raises ValueError (via `FedConfig.validate`) on the cross-field gaps
+    the old constructor let through silently — unknown modes, a mesh
+    without the fleet engines, out-of-range knobs.
+    """
+    cfg.validate()
+    kind = MODE_TO_SCHEDULE[cfg.mode]
+    if not cfg.use_fleet:
+        topology = Topology(kind="sequential")
+    elif cfg.fleet_mesh is not None:
+        topology = Topology(kind="mesh", devices=cfg.fleet_mesh)
+    else:
+        topology = Topology(kind="single")
+    return ExperimentSpec(
+        fleet=FleetSpec(
+            n_nodes=cfg.n_nodes,
+            profile=NodeHeterogeneity(
+                base_compute_s=cfg.base_compute_s,
+                heterogeneity=cfg.heterogeneity,
+                bandwidth_bps=cfg.bandwidth_bytes_per_s),
+            attack=AttackMix()),
+        schedule=SchedulePolicy(
+            kind=kind, alpha=cfg.alpha,
+            staleness_adaptive=(cfg.staleness_adaptive
+                                if kind == "async" else False)),
+        # noise_multiplier() already applies the mode rule (0 for sfl/afl)
+        # and the (epsilon, delta) calibration when sigma is None
+        privacy=PrivacySpec(sigma=cfg.noise_multiplier(),
+                            epsilon=cfg.epsilon, delta=cfg.delta,
+                            clip_s=cfg.clip_s),
+        compression=CompressionSpec(sparsify_ratio=cfg.sparsify_ratio),
+        defense=DefenseSpec(detect=cfg.detect, detect_s=cfg.detect_s,
+                            detect_warmup=cfg.detect_warmup,
+                            detect_window=cfg.detection_window()),
+        topology=topology,
+        train=TrainSpec(local_steps=cfg.local_steps,
+                        batch_size=cfg.batch_size, lr=cfg.lr),
+        rounds=cfg.rounds, seed=cfg.seed)
+
+
+def plan_from_fed_config(cfg) -> ExperimentPlan:
+    """`spec_from_fed_config` + `compile_plan` in one step."""
+    return compile_plan(spec_from_fed_config(cfg))

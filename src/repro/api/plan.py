@@ -1,0 +1,203 @@
+"""Spec -> plan: validate cross-field constraints once, select the engine.
+
+`compile_plan` is the single choke point between a declarative
+`ExperimentSpec` and execution: it checks every cross-field constraint
+(mesh topology needs the fleet engines, no accountant when σ=0, window
+policies only on windowed schedules, ...) with explicit errors, resolves
+derived quantities (the calibrated noise multiplier, the detection window)
+and returns an `ExperimentPlan` naming the engine and the pipeline stages
+that will run.  `run.run` consumes plans, never raw specs — so invalid
+axis combinations fail loudly at compile time, not silently mid-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from ..core import aldp, detection
+from .spec import ExperimentSpec
+from .window import AutoWindow, FixedWindow, TargetArrivalsWindow
+
+SCHEDULE_KINDS = ("sync", "async", "buffered")
+TOPOLOGY_KINDS = ("sequential", "single", "mesh")
+BACKENDS = ("reference", "pallas")
+
+
+class SpecError(ValueError):
+    """An `ExperimentSpec` with contradictory or out-of-range fields."""
+
+
+@dataclass(frozen=True)
+class ExperimentPlan:
+    """A validated, lowered experiment: which engine, which stages.
+
+    Plans are produced by `compile_plan` only; the runner trusts them.
+    """
+    spec: ExperimentSpec
+    mode: str                   # "sync" | "async" (execution family)
+    engine: str                 # "sequential" | "fleet"
+    mixing: str                 # "barrier" | "sequential" | "buffered"
+    mesh_devices: Optional[int]  # None = unsharded; 0 = all local devices
+    sigma: float                # resolved noise multiplier
+    detect_window: int          # resolved async detection ring capacity
+    total_arrivals: int         # async arrival budget (rounds * n_nodes)
+    accountant: bool            # spend privacy budget? (sigma > 0)
+    key_mode: str               # engine PRNG chain mode
+    stages: Tuple[str, ...]     # descriptive upload/aggregate pipeline
+
+    def describe(self) -> str:
+        placement = ("sequential reference loop" if self.engine == "sequential"
+                     else "fleet engine"
+                     + (f" over {self.mesh_devices or 'all'}-device mesh"
+                        if self.mesh_devices is not None else ""))
+        return (f"{self.spec.schedule.kind} schedule on {placement}: "
+                + " -> ".join(self.stages))
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise SpecError(msg)
+
+
+def compile_plan(spec: ExperimentSpec) -> ExperimentPlan:
+    """Validate ``spec`` and lower it to an `ExperimentPlan`.
+
+    Raises `SpecError` (a ValueError) on any contradictory or out-of-range
+    field combination.
+    """
+    f, sch, priv = spec.fleet, spec.schedule, spec.privacy
+    comp, dfs, topo, tr = (spec.compression, spec.defense, spec.topology,
+                           spec.train)
+
+    # -- enumerations -------------------------------------------------------
+    _require(sch.kind in SCHEDULE_KINDS,
+             f"schedule.kind {sch.kind!r} not in {SCHEDULE_KINDS}")
+    _require(topo.kind in TOPOLOGY_KINDS,
+             f"topology.kind {topo.kind!r} not in {TOPOLOGY_KINDS}")
+    _require(topo.backend in BACKENDS,
+             f"topology.backend {topo.backend!r} not in {BACKENDS}")
+    _require(f.model in ("mlp", "cnn"),
+             f"fleet.model {f.model!r} not in ('mlp', 'cnn')")
+
+    # -- ranges -------------------------------------------------------------
+    _require(f.n_nodes >= 1, f"fleet.n_nodes must be >= 1, got {f.n_nodes}")
+    _require(spec.rounds >= 1, f"rounds must be >= 1, got {spec.rounds}")
+    _require(tr.local_steps >= 1 and tr.batch_size >= 1,
+             "train.local_steps and train.batch_size must be >= 1")
+    _require(tr.lr > 0, f"train.lr must be > 0, got {tr.lr}")
+    _require(0.0 <= sch.alpha <= 1.0,
+             f"schedule.alpha must be in [0, 1], got {sch.alpha}")
+    _require(0.0 < comp.sparsify_ratio <= 1.0,
+             f"compression.sparsify_ratio must be in (0, 1], got "
+             f"{comp.sparsify_ratio}")
+    _require(0.0 < dfs.detect_s < 100.0,
+             f"defense.detect_s is a percentile in (0, 100), got "
+             f"{dfs.detect_s}")
+    _require(dfs.detect_warmup >= 1,
+             f"defense.detect_warmup must be >= 1, got {dfs.detect_warmup}")
+    _require(dfs.detect_window is None or dfs.detect_window >= 1,
+             f"defense.detect_window must be >= 1, got {dfs.detect_window}")
+    _require(0.0 < f.availability <= 1.0,
+             f"fleet.availability must be in (0, 1], got {f.availability}")
+    _require(0.0 < f.cohort_frac <= 1.0,
+             f"fleet.cohort_frac must be in (0, 1], got {f.cohort_frac}")
+    _require(0.0 <= f.attack.malicious_frac <= 1.0,
+             "fleet.attack.malicious_frac must be in [0, 1]")
+    _require(0.0 <= f.profile.straggler_frac <= 1.0,
+             "fleet.profile.straggler_frac must be in [0, 1]")
+    _require(f.profile.base_compute_s > 0 and f.profile.bandwidth_bps > 0,
+             "fleet.profile.base_compute_s and bandwidth_bps must be > 0")
+    _require(f.profile.heterogeneity >= 0,
+             "fleet.profile.heterogeneity must be >= 0")
+    _require(f.samples_per_node >= 1,
+             "fleet.samples_per_node must be >= 1")
+    _require(f.dirichlet_alpha > 0,
+             f"fleet.dirichlet_alpha must be > 0, got {f.dirichlet_alpha}")
+
+    # -- cross-field contradictions -----------------------------------------
+    _require(not (f.availability < 1.0 and f.cohort_frac < 1.0),
+             "fleet.availability < 1 and fleet.cohort_frac < 1 are two "
+             "different participation models — declare exactly one")
+    _require(not (topo.kind == "mesh" and topo.devices is not None
+                  and topo.devices < 1),
+             f"topology.devices must be >= 1, got {topo.devices}")
+    _require(not (topo.kind != "mesh" and topo.devices is not None),
+             f"topology.devices={topo.devices} is set but topology.kind="
+             f"{topo.kind!r} is not 'mesh' — a mesh size without a mesh "
+             f"is a contradiction, not a default")
+    _require(not (topo.kind == "sequential" and sch.kind == "buffered"),
+             "buffered aggregation has no sequential reference loop — use "
+             "topology.kind='single' or 'mesh'")
+    _require(not (topo.kind == "sequential" and topo.backend == "pallas"),
+             "the sequential reference loop has no pallas upload pipeline — "
+             "use topology.kind='single' or 'mesh'")
+    _require(not (sch.kind == "sync" and sch.staleness_adaptive),
+             "schedule.staleness_adaptive weights staleness τ, which a "
+             "synchronous barrier never has — use kind='async'")
+    _require(sch.staleness_a > 0,
+             f"schedule.staleness_a must be > 0, got {sch.staleness_a}")
+
+    # -- window policy ------------------------------------------------------
+    win = sch.window
+    if sch.kind == "sync":
+        _require(isinstance(win, AutoWindow),
+                 f"schedule.window={type(win).__name__} but kind='sync' has "
+                 f"no arrival windows — window policies apply to "
+                 f"async/buffered schedules")
+    if isinstance(win, FixedWindow):
+        _require(win.seconds > 0,
+                 f"FixedWindow: window must be positive, got {win.seconds}")
+    if isinstance(win, TargetArrivalsWindow):
+        _require(sch.kind == "buffered",
+                 "TargetArrivalsWindow batches many arrivals per window, "
+                 "which reorders them vs the event loop — only the buffered "
+                 "schedule (order-free masked-mean mix) supports it")
+        _require(win.target_arrivals >= 1,
+                 f"TargetArrivalsWindow.target_arrivals must be >= 1, got "
+                 f"{win.target_arrivals}")
+    if not isinstance(win, AutoWindow) and topo.kind == "sequential":
+        raise SpecError("the sequential reference loop processes arrivals "
+                        "one at a time — window policies need the fleet "
+                        "engines (topology.kind='single' or 'mesh')")
+
+    # -- privacy resolution -------------------------------------------------
+    if priv.sigma is None:
+        _require(priv.epsilon > 0 and 0.0 < priv.delta < 1.0,
+                 f"privacy.sigma=None calibrates from (epsilon, delta); "
+                 f"need epsilon > 0 and delta in (0, 1), got "
+                 f"({priv.epsilon}, {priv.delta})")
+        sigma = aldp.sigma_for_epsilon(priv.epsilon, priv.delta)
+    else:
+        _require(priv.sigma >= 0,
+                 f"privacy.sigma must be >= 0 (0 = no noise), got "
+                 f"{priv.sigma}")
+        sigma = float(priv.sigma)
+    _require(priv.clip_s > 0, f"privacy.clip_s must be > 0, got "
+             f"{priv.clip_s}")
+
+    # -- lowering -----------------------------------------------------------
+    mode = "sync" if sch.kind == "sync" else "async"
+    engine = "sequential" if topo.kind == "sequential" else "fleet"
+    mixing = {"sync": "barrier", "async": "sequential",
+              "buffered": "buffered"}[sch.kind]
+    mesh_devices = ((topo.devices if topo.devices is not None else 0)
+                    if topo.kind == "mesh" else None)
+    detect_window = (dfs.detect_window if dfs.detect_window is not None
+                     else detection.default_window(f.n_nodes))
+
+    stages = ["local_sgd"]
+    if comp.sparsify_ratio < 1.0:
+        stages.append("dgc_sparsify")
+    if sigma > 0:
+        stages.append("aldp_perturb")
+    if dfs.detect:
+        stages.append("cloud_detect")
+    stages.append({"barrier": "masked_mean_mix",
+                   "sequential": "eq6_arrival_mix",
+                   "buffered": "fedbuff_window_mix"}[mixing])
+
+    return ExperimentPlan(
+        spec=spec, mode=mode, engine=engine, mixing=mixing,
+        mesh_devices=mesh_devices, sigma=sigma, detect_window=detect_window,
+        total_arrivals=spec.rounds * f.n_nodes, accountant=sigma > 0,
+        key_mode="sequential", stages=tuple(stages))

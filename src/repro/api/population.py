@@ -1,0 +1,91 @@
+"""Materialize a `FleetSpec` into an executable population.
+
+A `Population` is everything the runner needs that is *not* declarative:
+model params, loss/accuracy callables, per-node data shards, eval sets and
+the materialized `NodeProfile`.  `materialize(spec)` builds one from the
+spec's synthetic-data section (the same generator the scenario builders
+and the sequential trainer use, seeded identically); callers with real
+data construct a `Population` directly and hand it to `run.run` — the
+declarative spec then describes the regime while the population carries
+the arrays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..data import make_federated_image_data
+from ..fleet.engine import (AvailabilityTrace, ClientSampler, NodeProfile,
+                            UniformSampler)
+from ..models.cnn import cnn_accuracy, cnn_loss, init_cnn
+from ..models.mlp import init_mlp, mlp_accuracy, mlp_loss
+from .spec import ExperimentSpec
+
+
+@dataclass
+class Population:
+    """A concrete fleet: params, callables, data, system profile."""
+    params: Any
+    loss_fn: Callable
+    acc_fn: Callable
+    node_data: Sequence[Tuple[np.ndarray, np.ndarray]]
+    test_data: Tuple[np.ndarray, np.ndarray]
+    cloud_test: Tuple[np.ndarray, np.ndarray]
+    profile: NodeProfile
+    sampler: Optional[ClientSampler] = None
+    malicious_ids: Tuple[int, ...] = ()
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.node_data)
+
+
+def default_sampler(spec: ExperimentSpec) -> Optional[ClientSampler]:
+    """The participation model the spec declares: an availability/churn
+    trace, a uniform 'm of K' cohort, or None (full participation)."""
+    f = spec.fleet
+    if f.availability < 1.0:
+        return AvailabilityTrace(probs=np.full(f.n_nodes, f.availability),
+                                 seed=spec.seed)
+    if f.cohort_frac < 1.0:
+        return UniformSampler(max(1, int(round(f.cohort_frac * f.n_nodes))),
+                              seed=spec.seed)
+    return None
+
+
+def materialize(spec: ExperimentSpec) -> Population:
+    """`FleetSpec` -> `Population` on synthetic federated image data.
+
+    Deterministic in ``spec.seed``: the data partition, the model init and
+    the lognormal compute profile all derive from it, so two materialize
+    calls of the same spec are identical.
+    """
+    f = spec.fleet
+    n_malicious = int(round(f.attack.malicious_frac * f.n_nodes))
+    node_data, test, cloud, malicious = make_federated_image_data(
+        spec.seed, n_nodes=f.n_nodes, n_malicious=n_malicious,
+        n_train=f.samples_per_node * f.n_nodes, n_test=f.n_test,
+        n_cloud_test=f.n_cloud_test, hw=f.hw,
+        flip_src=f.attack.flip_src, flip_dst=f.attack.flip_dst,
+        iid=f.iid, dirichlet_alpha=f.dirichlet_alpha)
+
+    key = jax.random.PRNGKey(spec.seed)
+    if f.model == "cnn":
+        params = init_cnn(key, in_hw=f.hw)
+        loss_fn, acc_fn = cnn_loss, cnn_accuracy
+    else:
+        params = init_mlp(key, in_dim=f.hw[0] * f.hw[1])
+        loss_fn, acc_fn = mlp_loss, mlp_accuracy
+
+    p = f.profile
+    profile = NodeProfile.lognormal(
+        f.n_nodes, p.base_compute_s, p.heterogeneity, p.bandwidth_bps,
+        seed=spec.seed, straggler_frac=p.straggler_frac,
+        straggler_slowdown=p.straggler_slowdown)
+    return Population(params=params, loss_fn=loss_fn, acc_fn=acc_fn,
+                      node_data=node_data, test_data=test, cloud_test=cloud,
+                      profile=profile, sampler=default_sampler(spec),
+                      malicious_ids=tuple(int(m) for m in malicious))

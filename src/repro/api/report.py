@@ -1,0 +1,115 @@
+"""Structured, JSON-round-trippable run results.
+
+`RunReport` is the single result schema for every execution path — the
+sequential reference loops, the fleet engines, and the mesh-sharded
+engines all produce the same record stream (one `RoundRecord` per
+n_nodes arrivals / per barrier round), plus the derived quantities the
+paper reports: κ (Eq. 5), ε spent, and the detection log.  Reports carry
+a ``schema_version`` and round-trip through JSON, so `benchmarks/` and
+``results/*.json`` consume one schema instead of hand-rolling their own.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from ..core.federated import RoundRecord
+from .spec import SCHEMA_VERSION
+
+
+@dataclass
+class RunReport:
+    """The structured result of `run.run`.
+
+    ``final_params`` is execution-side state (a pytree) — available on
+    fresh reports for follow-on evaluation, never serialized, and None
+    after a JSON round trip.
+    """
+    mode: str                           # sync | async
+    engine: str                         # sequential | fleet | fleet-mesh
+    records: List[RoundRecord] = field(default_factory=list)
+    kappa: float = 0.0                  # Eq. (5) over the whole run
+    epsilon_spent: float = 0.0          # 0 exactly for no-noise runs
+    final_accuracy: float = 0.0
+    detections: List[Dict] = field(default_factory=list)
+    spec: Optional[Dict] = None         # ExperimentSpec.to_dict(), if known
+    schema_version: int = SCHEMA_VERSION
+    final_params: Any = field(default=None, repr=False, compare=False)
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> Dict:
+        return {
+            "schema_version": self.schema_version,
+            "mode": self.mode,
+            "engine": self.engine,
+            "records": [dataclasses.asdict(r) for r in self.records],
+            "kappa": self.kappa,
+            "epsilon_spent": self.epsilon_spent,
+            "final_accuracy": self.final_accuracy,
+            "detections": self.detections,
+            "spec": self.spec,
+        }
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "RunReport":
+        version = d.get("schema_version")
+        if version != SCHEMA_VERSION:
+            raise ValueError(f"RunReport schema_version {version!r} != "
+                             f"supported {SCHEMA_VERSION}")
+        return cls(mode=d["mode"], engine=d["engine"],
+                   records=[RoundRecord(**r) for r in d["records"]],
+                   kappa=d["kappa"], epsilon_spent=d["epsilon_spent"],
+                   final_accuracy=d["final_accuracy"],
+                   detections=list(d.get("detections", [])),
+                   spec=d.get("spec"))
+
+    @classmethod
+    def from_json(cls, s: str) -> "RunReport":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=1))
+
+    @classmethod
+    def load(cls, path: str) -> "RunReport":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def detection_log(records: List[RoundRecord]) -> List[Dict]:
+    """The rounds where the cloud rejected updates (Alg. 2 firing)."""
+    return [{"round": i, "t": r.t, "n_rejected": r.n_rejected}
+            for i, r in enumerate(records) if r.n_rejected]
+
+
+def append_json_records(path: str, records: List[Dict]) -> None:
+    """Append schema-stamped result records to a JSON trajectory file —
+    the one write path for ``results/*.json`` (benchmarks route through
+    this instead of hand-rolling their own schemas)."""
+    if not records:
+        return
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    traj = []
+    if os.path.exists(path):
+        with open(path) as f:
+            traj = json.load(f)
+        if not isinstance(traj, list):
+            raise ValueError(
+                f"append_json_records: {path} holds a JSON "
+                f"{type(traj).__name__}, not a trajectory list — single "
+                f"RunReports written by RunReport.save live in their own "
+                f"files")
+    for rec in records:
+        stamped = dict(rec)
+        stamped.setdefault("schema_version", SCHEMA_VERSION)
+        traj.append(stamped)
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1)

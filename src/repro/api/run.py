@@ -1,0 +1,437 @@
+"""Execute an `ExperimentPlan`: plan -> engines -> `RunReport`.
+
+This is the one execution layer behind every entry point — the
+declarative `run(compile_plan(spec))` surface, the `FederatedTrainer`
+compatibility shim, and the scenario builders all land here.  The four
+execution paths (sync/async × sequential reference loop / fleet engines)
+are the trainer's former ``_run_*`` branches, ported verbatim so the
+round-record trajectories stay bit-equal-to-float-close with the
+pre-redesign implementation (enforced by tests/test_api.py):
+
+  * ``engine="fleet"``      — the cohort-batched `FleetEngine` (sync) or
+    window-batched `AsyncFleetEngine` (async/buffered), optionally
+    node-sharded over a `FleetMesh`;
+  * ``engine="sequential"`` — the per-node / per-arrival reference loops
+    (the seed implementation: one Python dispatch per update, kept as the
+    bit-exact ground truth the engines are tested against).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import accumulator as accum
+from ..core import aldp, async_update, detection
+from ..core.accountant import MomentsAccountant
+from ..core.federated import RoundRecord
+from .. import fleet
+from ..fleet import stages as fleet_stages
+from .plan import ExperimentPlan, SpecError
+from .population import Population, materialize
+from .report import RunReport, detection_log
+
+
+# ---------------------------------------------------------------------------
+# mutable run state (what the trainer used to keep on `self`)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RunState:
+    """Everything that evolves over a run and survives it: the global
+    model, the host-side PRNG chain key, per-node DGC residuals, the
+    privacy accountant, and the record history.  The `FederatedTrainer`
+    shim aliases its own attributes into one of these so repeated runs
+    stay faithful."""
+    params: Any
+    key: Any
+    residuals: List[Any]
+    accountant: Optional[MomentsAccountant]
+    history: List[RoundRecord] = field(default_factory=list)
+
+
+def init_state(plan: ExperimentPlan, population: Population) -> RunState:
+    """Fresh run state: ω_0 from the population, chain key from the spec
+    seed, zero residuals, and an accountant only when σ > 0 (no-noise runs
+    must spend exactly zero privacy budget)."""
+    return RunState(
+        params=population.params,
+        key=jax.random.PRNGKey(plan.spec.seed),
+        residuals=[accum.init_residual(population.params)
+                   for _ in range(population.n_nodes)],
+        accountant=(MomentsAccountant(plan.sigma, 1.0)
+                    if plan.sigma > 0 else None))
+
+
+# ---------------------------------------------------------------------------
+# engine construction (shared with the scenario builders)
+# ---------------------------------------------------------------------------
+
+def make_engine(plan: ExperimentPlan, population: Population,
+                mesh: Optional["fleet.FleetMesh"] = None):
+    """Build the fleet engine a plan selects, faithful to the trainer's
+    construction (sequential PRNG chain, reference/pallas backend, the
+    population's profile/sampler).  ``mesh`` overrides the plan's
+    topology-derived mesh (scenario builders pass prebuilt meshes)."""
+    if plan.engine != "fleet":
+        raise ValueError("make_engine: plan selects the sequential "
+                         "reference loop, which has no engine object")
+    spec = plan.spec
+    if mesh is None and plan.mesh_devices is not None:
+        mesh = fleet.FleetMesh.create(plan.mesh_devices or None)
+
+    common = dict(
+        local_steps=spec.train.local_steps, batch_size=spec.train.batch_size,
+        lr=spec.train.lr, alpha=spec.schedule.alpha,
+        clip_s=spec.privacy.clip_s, sigma=plan.sigma,
+        detect=spec.defense.detect, detect_s=spec.defense.detect_s,
+        sparsify_ratio=spec.compression.sparsify_ratio,
+        key_mode=plan.key_mode, backend=spec.topology.backend,
+        seed=spec.seed)
+    args = (population.params, population.loss_fn, population.acc_fn,
+            population.node_data, population.test_data, population.cloud_test)
+
+    if plan.mode == "sync":
+        cfg = fleet.FleetConfig(**common)
+        return fleet.FleetEngine(
+            *args, cfg, profile=population.profile,
+            sampler=population.sampler or fleet.FullParticipation(),
+            mesh=mesh)
+
+    n_params = sum(x.size for x in jax.tree.leaves(population.params))
+    bpn = fleet_stages.bytes_per_node(n_params,
+                                      spec.compression.sparsify_ratio)
+    cfg = fleet.AsyncFleetConfig(
+        **common,
+        window=spec.schedule.window.resolve(population.profile, bpn),
+        mixing="buffered" if plan.mixing == "buffered" else "sequential",
+        staleness_adaptive=spec.schedule.staleness_adaptive,
+        staleness_a=spec.schedule.staleness_a,
+        detect_warmup=spec.defense.detect_warmup,
+        detect_window=plan.detect_window)
+    return fleet.AsyncFleetEngine(*args, cfg, profile=population.profile,
+                                  sampler=population.sampler, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# fleet-engine execution (the trainer's _run_sync_fleet / _run_async_fleet)
+# ---------------------------------------------------------------------------
+
+def _run_sync_fleet(plan, pop, state, eng) -> None:
+    n = pop.n_nodes
+    eng.load_state(fleet.stack_trees(state.residuals), state.key)
+    for r in range(plan.spec.rounds):
+        rec = eng.run_round()
+        if state.accountant is not None:
+            # charge only the nodes that actually uploaded a noised delta
+            # (cohort sampling / availability: n_participating <= n_nodes)
+            state.accountant.step(rec.n_participating)
+        state.params = eng.params
+        state.history.append(RoundRecord(
+            rec.t, r, rec.accuracy, rec.comm_bytes, rec.comp_time,
+            rec.comm_time, rec.n_rejected))
+    # hand node-local state back so follow-on runs stay faithful
+    state.key = jax.device_get(eng.state.chain_key)
+    state.residuals = fleet.unstack_tree(eng.export_residuals(), n)
+
+
+def _run_async_fleet(plan, pop, state, eng, acc_fn, test_dev) -> None:
+    n = pop.n_nodes
+    eng.load_state(fleet.stack_trees(state.residuals), state.key)
+    total = plan.total_arrivals
+    processed = 0
+    # one RoundRecord per n_nodes arrivals, exactly like the event loop
+    # (downstream benchmarks normalize by len(history)): windows are capped
+    # so they never straddle a record boundary — a cap only truncates the
+    # arrival prefix, so the processed order is unchanged
+    span_bytes = span_comp = span_comm = 0.0
+    span_rejected = 0
+    while processed < total:
+        boundary = n - processed % n
+        rec = eng.run_window(max_arrivals=boundary, evaluate=False)
+        processed += rec.n_processed
+        if state.accountant is not None:
+            state.accountant.step(rec.n_processed)
+        state.params = eng.params
+        span_bytes += rec.comm_bytes
+        span_comp += rec.comp_time
+        span_comm += rec.comm_time
+        span_rejected += rec.n_rejected
+        if processed % n == 0:
+            state.history.append(RoundRecord(
+                rec.t, rec.version, float(acc_fn(state.params, *test_dev)),
+                span_bytes, span_comp, span_comm, span_rejected))
+            span_bytes = span_comp = span_comm = 0.0
+            span_rejected = 0
+    # hand node-local state back so follow-on runs stay faithful
+    state.key = jax.device_get(eng.state.chain_key)
+    state.residuals = fleet.unstack_tree(eng.export_residuals(), n)
+
+
+def _run_buffered_fleet(plan, pop, state, eng, acc_fn, test_dev) -> None:
+    """Buffered (FedBuff-style) windows: process the arrival budget window
+    by window without the event-loop record boundary — one record per
+    window (load-aware policies make windows fat on purpose)."""
+    n = pop.n_nodes
+    eng.load_state(fleet.stack_trees(state.residuals), state.key)
+    total = plan.total_arrivals
+    processed = 0
+    while processed < total:
+        rec = eng.run_window(max_arrivals=total - processed, evaluate=False)
+        processed += rec.n_processed
+        if state.accountant is not None:
+            state.accountant.step(rec.n_processed)
+        state.params = eng.params
+        state.history.append(RoundRecord(
+            rec.t, rec.version, float(acc_fn(state.params, *test_dev)),
+            rec.comm_bytes, rec.comp_time, rec.comm_time, rec.n_rejected))
+    state.key = jax.device_get(eng.state.chain_key)
+    state.residuals = fleet.unstack_tree(eng.export_residuals(), n)
+
+
+# ---------------------------------------------------------------------------
+# sequential reference loops (the seed implementation, kept bit-exact)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _jitted_local_train(loss_fn, steps, lr, bs):
+    """One jitted local-SGD program per (loss_fn, hyperparams) — repeated
+    `execute` calls (the trainer shim's run-again pattern, benchmark
+    timing loops) reuse the trace instead of recompiling."""
+    return jax.jit(partial(_local_train_impl, loss_fn, steps, lr, bs))
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_acc(acc_fn):
+    return jax.jit(acc_fn)
+
+
+def _local_train_impl(loss_fn, steps, lr, bs, params, x, y, key):
+    n = x.shape[0]
+
+    def body(carry, k):
+        p, = carry
+        idx = jax.random.randint(k, (bs,), 0, n)
+        batch = {"x": x[idx], "y": y[idx]}
+        g = jax.grad(lambda pp: loss_fn(pp, batch)[0])(p)
+        p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+        return (p,), None
+
+    keys = jax.random.split(key, steps)
+    (p,), _ = jax.lax.scan(body, (params,), keys)
+    return p
+
+
+class _SequentialRunner:
+    """The per-node upload pipeline + both reference loops, operating on a
+    (plan, population, state) triple instead of trainer attributes."""
+
+    def __init__(self, plan: ExperimentPlan, pop: Population,
+                 state: RunState):
+        spec = plan.spec
+        self.plan, self.pop, self.state, self.spec = plan, pop, state, spec
+        self.node_data = [(jnp.asarray(x), jnp.asarray(y))
+                          for x, y in pop.node_data]
+        self.test_data = (jnp.asarray(pop.test_data[0]),
+                          jnp.asarray(pop.test_data[1]))
+        self.cloud_test = (jnp.asarray(pop.cloud_test[0]),
+                           jnp.asarray(pop.cloud_test[1]))
+        self.acc_fn = _jitted_acc(pop.acc_fn)
+        self.n_params = sum(x.size for x in jax.tree.leaves(pop.params))
+        self.node_time = np.asarray(pop.profile.compute_s, np.float64)
+        self.node_bw = np.asarray(pop.profile.bandwidth_bps, np.float64)
+        self._local_train = _jitted_local_train(
+            pop.loss_fn, spec.train.local_steps, spec.train.lr,
+            spec.train.batch_size)
+
+    # -- per-node upload pipeline ------------------------------------------
+    def node_update(self, node: int, start_params):
+        """Local train -> delta -> [accumulate/sparsify] -> [ALDP] -> ω_new.
+        Returns (uploaded model, upload_bytes, cloud-test accuracy)."""
+        plan, spec, state = self.plan, self.spec, self.state
+        x, y = self.node_data[node]
+        state.key, k1, k2 = jax.random.split(state.key, 3)
+        local = self._local_train(start_params, x, y, k1)
+        delta = jax.tree.map(lambda a, b: a - b, local, start_params)
+
+        ratio = spec.compression.sparsify_ratio
+        if ratio < 1.0:
+            delta, state.residuals[node], _ = accum.accumulate_and_sparsify(
+                state.residuals[node], delta, ratio)
+            bytes_up = accum.upload_bytes(delta, ratio)
+        else:
+            bytes_up = self.n_params * 4
+
+        if plan.sigma > 0:
+            delta, _ = aldp.aldp_perturb(delta, k2, plan.sigma,
+                                         spec.privacy.clip_s)
+            state.accountant.step()   # accountant exists whenever sigma > 0
+
+        omega_new = jax.tree.map(lambda a, b: a + b, start_params, delta)
+        acc = float(self.acc_fn(omega_new, *self.cloud_test))
+        return omega_new, bytes_up, acc
+
+    def global_accuracy(self) -> float:
+        return float(self.acc_fn(self.state.params, *self.test_data))
+
+    # -- synchronous barrier loop ------------------------------------------
+    def run_sync(self) -> None:
+        plan, spec, state = self.plan, self.spec, self.state
+        n = self.pop.n_nodes
+        alpha = spec.schedule.alpha
+        clock = 0.0
+        for r in range(spec.rounds):
+            uploads, accs, nbytes = [], [], 0.0
+            for node in range(n):
+                w, b, a = self.node_update(node, state.params)
+                uploads.append(w)
+                accs.append(a)
+                nbytes += b
+            accs = jnp.asarray(accs)
+            if spec.defense.detect:
+                mask, _ = detection.detect(accs, spec.defense.detect_s)
+            else:
+                mask = jnp.ones(n, bool)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *uploads)
+            omega_new = detection.masked_mean(stacked, mask)
+            state.params = async_update.mix(state.params, omega_new, alpha)
+            comp = float(np.max(self.node_time))         # barrier: slowest
+            comm = float(np.max((nbytes / n) / self.node_bw))  # parallel up
+            clock += comp + comm
+            state.history.append(RoundRecord(
+                clock, r, self.global_accuracy(), nbytes, comp, comm,
+                int(n - mask.sum())))
+
+    # -- asynchronous per-arrival event loop --------------------------------
+    def run_async(self) -> None:
+        plan, spec, state = self.plan, self.spec, self.state
+        n = self.pop.n_nodes
+        alpha = spec.schedule.alpha
+        version = 0
+        # (arrival_time, node, dispatched_version, seq) heap
+        events = []
+        for node in range(n):
+            heapq.heappush(events, (self.node_time[node], node, 0, node))
+        dispatched_params = {k: state.params for k in range(n)}
+        acc_window: List[float] = []
+        seq = n
+        processed = 0
+        # per-record accumulators: a RoundRecord spans n_nodes arrivals, so
+        # traffic/time must be summed over the span, not the last arrival
+        span_bytes = span_comp = span_comm = 0.0
+        span_rejected = 0
+        while processed < plan.total_arrivals:
+            t, node, v_disp, _ = heapq.heappop(events)
+            w, b, a = self.node_update(node, dispatched_params[node])
+            comm = float(b / self.node_bw[node])
+            t_arrive = t + comm
+            acc_window.append(a)
+            acc_window = acc_window[-plan.detect_window:]
+            rejected = 0
+            if spec.defense.detect and \
+                    len(acc_window) >= spec.defense.detect_warmup:
+                accs = jnp.asarray(acc_window)
+                thr = detection.detection_threshold(accs,
+                                                    spec.defense.detect_s)
+                if a <= float(thr):
+                    rejected = 1
+            if not rejected:
+                staleness = version - v_disp
+                if spec.schedule.staleness_adaptive:
+                    state.params = async_update.mix_stale(
+                        state.params, w, alpha, staleness)
+                else:
+                    state.params = async_update.mix(state.params, w, alpha)
+                version += 1
+            processed += 1
+            span_bytes += b
+            span_comp += float(self.node_time[node])
+            span_comm += comm
+            span_rejected += rejected
+            # redispatch node with the fresh global model
+            dispatched_params[node] = state.params
+            heapq.heappush(events,
+                           (t_arrive + self.node_time[node], node, version,
+                            seq))
+            seq += 1
+            if processed % n == 0:
+                state.history.append(RoundRecord(
+                    t_arrive, version, self.global_accuracy(), span_bytes,
+                    span_comp, span_comm, span_rejected))
+                span_bytes = span_comp = span_comm = 0.0
+                span_rejected = 0
+
+
+# ---------------------------------------------------------------------------
+# top-level execution
+# ---------------------------------------------------------------------------
+
+def execute(plan: ExperimentPlan, population: Population,
+            state: RunState) -> List[RoundRecord]:
+    """Run ``plan`` over ``population``, mutating ``state`` (records are
+    appended to ``state.history``; params/key/residuals/accountant advance
+    in place).  The `FederatedTrainer` shim calls this with state aliased
+    to its own attributes."""
+    if population.n_nodes != plan.spec.fleet.n_nodes:
+        raise SpecError(
+            f"population has {population.n_nodes} nodes but the plan was "
+            f"compiled for fleet.n_nodes={plan.spec.fleet.n_nodes} — the "
+            f"arrival budget and record cadence derive from the spec, so "
+            f"a mismatched population would run the wrong experiment")
+    if plan.engine == "fleet":
+        eng = make_engine(plan, population)
+        if plan.mode == "sync":
+            _run_sync_fleet(plan, population, state, eng)
+        else:
+            acc_fn = eng.acc_fn
+            test_dev = eng.test_data
+            if plan.mixing == "buffered":
+                _run_buffered_fleet(plan, population, state, eng, acc_fn,
+                                    test_dev)
+            else:
+                _run_async_fleet(plan, population, state, eng, acc_fn,
+                                 test_dev)
+    else:
+        runner = _SequentialRunner(plan, population, state)
+        if plan.mode == "sync":
+            runner.run_sync()
+        else:
+            runner.run_async()
+    return state.history
+
+
+def run(plan: ExperimentPlan, population: Optional[Population] = None,
+        sampler=None) -> RunReport:
+    """Execute a compiled plan and return a structured `RunReport`.
+
+    ``population`` defaults to `population.materialize(plan.spec)` (the
+    declarative synthetic fleet); pass one explicitly to run the plan over
+    real params/data.  ``sampler`` overrides the population's declared
+    participation model.
+    """
+    pop = population if population is not None else materialize(plan.spec)
+    if sampler is not None:
+        pop = dataclasses.replace(pop, sampler=sampler)
+    state = init_state(plan, pop)
+    records = execute(plan, pop, state)
+
+    comm = sum(r.comm_time for r in records)
+    comp = sum(r.comp_time for r in records)
+    engine_name = ("fleet-mesh" if plan.mesh_devices is not None
+                   else plan.engine)
+    return RunReport(
+        mode=plan.mode, engine=engine_name, records=list(records),
+        kappa=async_update.communication_efficiency(comm, comp),
+        epsilon_spent=(state.accountant.epsilon(plan.spec.privacy.delta)
+                       if state.accountant is not None else 0.0),
+        final_accuracy=records[-1].accuracy if records else 0.0,
+        detections=detection_log(records),
+        spec=plan.spec.to_dict(),
+        final_params=state.params)

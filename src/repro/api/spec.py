@@ -1,0 +1,252 @@
+"""Declarative experiment specs: one typed object per framework axis.
+
+The paper's framework is one system with four composable axes — schedule
+(sync/async/buffered), privacy (ALDP), communication (DGC sparsify) and
+defense (cloud-side detection) — plus a population and a placement.  An
+`ExperimentSpec` states each axis once:
+
+  * `FleetSpec`      — population: size, per-node heterogeneity
+                       (`NodeHeterogeneity`), attack mix (`AttackMix`),
+                       availability/cohort sampling, synthetic-data shape;
+  * `SchedulePolicy` — sync | async | buffered, Eq. (6) α, staleness
+                       weighting, and a pluggable `WindowPolicy`;
+  * `PrivacySpec`    — ALDP noise multiplier (explicit, calibrated from
+                       (ε, δ), or off);
+  * `CompressionSpec`— DGC sparsified uploads;
+  * `DefenseSpec`    — Alg. 2 detection threshold/warmup/window;
+  * `Topology`       — sequential reference loop | single-device fleet
+                       engines | node-axis `FleetMesh` sharding;
+  * `TrainSpec`      — node-local SGD hyperparameters.
+
+`plan.compile_plan` validates cross-field constraints once and lowers a
+spec to an `ExperimentPlan`; `run.run` executes a plan.  Specs are plain
+frozen dataclasses and JSON-round-trippable (`to_dict`/`from_dict`, with a
+``schema_version`` field) so experiment definitions can live in files
+instead of flag soup.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from .window import AutoWindow, WindowPolicy, window_policy_from_dict
+
+SCHEMA_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# population
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class NodeHeterogeneity:
+    """Per-node system model: lognormal compute speeds around
+    ``base_compute_s`` plus an optional straggler tail, uniform uplink
+    bandwidth (matches `fleet.NodeProfile.lognormal`)."""
+    base_compute_s: float = 1.0
+    heterogeneity: float = 0.5          # lognormal sigma of node speeds
+    bandwidth_bps: float = 12.5e6       # 100 Mbit/s edge uplink
+    straggler_frac: float = 0.0
+    straggler_slowdown: float = 10.0
+
+
+@dataclass(frozen=True)
+class AttackMix:
+    """Adversary composition: ``malicious_frac`` of nodes flip labels
+    ``flip_src`` -> ``flip_dst`` in their local shards (the paper's
+    poisoning attack)."""
+    malicious_frac: float = 0.0
+    flip_src: int = 1
+    flip_dst: int = 7
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """The node population and its synthetic federated dataset."""
+    n_nodes: int = 10
+    profile: NodeHeterogeneity = field(default_factory=NodeHeterogeneity)
+    attack: AttackMix = field(default_factory=AttackMix)
+    availability: float = 1.0       # per-round P(node reachable); <1 => churn
+    cohort_frac: float = 1.0        # uniform 'm of K' sampling; <1 => sampled
+    # synthetic data shape (materialized by `population.materialize`)
+    model: str = "mlp"              # mlp | cnn
+    hw: Tuple[int, int] = (8, 8)
+    samples_per_node: int = 60
+    n_test: int = 256
+    n_cloud_test: int = 128
+    iid: bool = True                # False => Dirichlet(alpha) partition
+    dirichlet_alpha: float = 0.5
+
+
+# ---------------------------------------------------------------------------
+# the four framework axes + placement
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SchedulePolicy:
+    """When updates meet the global model.
+
+    ``kind="sync"``     — FedAvg barrier rounds;
+    ``kind="async"``    — Eq. (6) α-mix per arrival, in arrival order;
+    ``kind="buffered"`` — FedBuff-style: one masked-mean Eq. (6) mix per
+                          arrival window (pairs naturally with a
+                          load-aware `WindowPolicy`).
+    """
+    kind: str = "sync"
+    alpha: float = 0.5                  # Eq. (6) mixing weight
+    staleness_adaptive: bool = False    # FedAsync (τ+1)^-a weighting
+    staleness_a: float = 0.5
+    window: WindowPolicy = field(default_factory=AutoWindow)
+
+
+@dataclass(frozen=True)
+class PrivacySpec:
+    """ALDP (§5.2): ``sigma=0`` disables noise (and the accountant);
+    ``sigma=None`` calibrates the multiplier from (ε, δ) per Definition 2;
+    an explicit ``sigma>0`` is used as-is."""
+    sigma: Optional[float] = 0.0
+    epsilon: float = 8.0
+    delta: float = 1e-3
+    clip_s: float = 1.0
+
+
+@dataclass(frozen=True)
+class CompressionSpec:
+    """DGC gradient-accumulation uploads (§5.1): keep the top
+    ``sparsify_ratio`` of delta magnitude, accumulate the rest locally."""
+    sparsify_ratio: float = 1.0
+
+
+@dataclass(frozen=True)
+class DefenseSpec:
+    """Cloud-side malicious-update detection (§5.4, Alg. 2)."""
+    detect: bool = False
+    detect_s: float = 80.0              # top-s percentile threshold
+    detect_warmup: int = 4              # async: min arrivals before detecting
+    detect_window: Optional[int] = None  # async ring; None => default_window
+
+
+@dataclass(frozen=True)
+class Topology:
+    """Where the simulation runs.
+
+    ``kind="sequential"`` — the per-node/per-arrival reference loops
+    (the seed implementation; slow, bit-exact ground truth);
+    ``kind="single"``     — the cohort/window-batched fleet engines on one
+    device; ``kind="mesh"`` — node axis sharded over ``devices`` local
+    devices via `fleet.FleetMesh` (None = all local devices).
+    """
+    kind: str = "single"
+    devices: Optional[int] = None
+    backend: str = "reference"          # reference | pallas upload pipeline
+
+
+@dataclass(frozen=True)
+class TrainSpec:
+    """Node-local minibatch SGD."""
+    local_steps: int = 5
+    batch_size: int = 16
+    lr: float = 0.1
+
+
+# ---------------------------------------------------------------------------
+# the whole experiment
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    fleet: FleetSpec = field(default_factory=FleetSpec)
+    schedule: SchedulePolicy = field(default_factory=SchedulePolicy)
+    privacy: PrivacySpec = field(default_factory=PrivacySpec)
+    compression: CompressionSpec = field(default_factory=CompressionSpec)
+    defense: DefenseSpec = field(default_factory=DefenseSpec)
+    topology: Topology = field(default_factory=Topology)
+    train: TrainSpec = field(default_factory=TrainSpec)
+    rounds: int = 10        # sync rounds; async runs rounds*n_nodes arrivals
+    seed: int = 0
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> Dict:
+        d = {"schema_version": SCHEMA_VERSION}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, WindowPolicy):
+                v = v.to_dict()
+            elif dataclasses.is_dataclass(v):
+                v = _section_to_dict(v)
+            d[f.name] = v
+        return d
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ExperimentSpec":
+        d = dict(d)
+        version = d.pop("schema_version", None)
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"ExperimentSpec schema_version {version!r} != supported "
+                f"{SCHEMA_VERSION}")
+        kw = {}
+        for f in dataclasses.fields(cls):
+            if f.name not in d:
+                continue
+            v = d[f.name]
+            if f.name == "fleet":
+                v = _fleet_from_dict(v)
+            elif f.name == "schedule":
+                v = _schedule_from_dict(v)
+            elif f.name in _SECTION_TYPES:
+                v = _SECTION_TYPES[f.name](**v)
+            kw[f.name] = v
+        return cls(**kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
+
+
+_SECTION_TYPES = {
+    "privacy": PrivacySpec,
+    "compression": CompressionSpec,
+    "defense": DefenseSpec,
+    "topology": Topology,
+    "train": TrainSpec,
+}
+
+
+def _section_to_dict(v) -> Dict:
+    """dataclasses.asdict, but tuples stay JSON-friendly lists and nested
+    dataclasses recurse."""
+    out = {}
+    for f in dataclasses.fields(v):
+        x = getattr(v, f.name)
+        if isinstance(x, WindowPolicy):
+            x = x.to_dict()
+        elif dataclasses.is_dataclass(x):
+            x = _section_to_dict(x)
+        elif isinstance(x, tuple):
+            x = list(x)
+        out[f.name] = x
+    return out
+
+
+def _fleet_from_dict(d: Dict) -> FleetSpec:
+    d = dict(d)
+    if "profile" in d:
+        d["profile"] = NodeHeterogeneity(**d["profile"])
+    if "attack" in d:
+        d["attack"] = AttackMix(**d["attack"])
+    if "hw" in d:
+        d["hw"] = tuple(d["hw"])
+    return FleetSpec(**d)
+
+
+def _schedule_from_dict(d: Dict) -> SchedulePolicy:
+    d = dict(d)
+    if "window" in d and not isinstance(d["window"], WindowPolicy):
+        d["window"] = window_policy_from_dict(d["window"])
+    return SchedulePolicy(**d)

@@ -1,39 +1,39 @@
-"""FederatedTrainer: the paper's four schemes on real (host-level) nodes.
+"""FederatedTrainer: the legacy entry point, now a shim over `repro.api`.
 
 Implements SFL (sync FedAvg), AFL (async, Eq. 6), SLDPFL (sync + LDP) and
 ALDPFL (the paper's framework: async + LDP + detection + accumulation) over
 K simulated edge nodes with heterogeneous compute speeds.
 
-Asynchrony is simulated with an event queue: each node trains from the global
-model version it last received and its update arrives after its (heterogeneous)
-compute time; the cloud mixes it immediately (Eq. 6) without waiting for other
-nodes. The simulated clock gives the paper's running-time comparison (Fig. 7b)
-and κ = Comm/(Comp+Comm) (Eq. 5); training math runs in JAX (jitted local SGD).
+.. deprecated::
+    `FederatedTrainer(FedConfig(...)).run()` is a compatibility shim: the
+    `FedConfig` is lowered to a declarative `repro.api.ExperimentSpec`
+    (`api.plan_from_fed_config`) and executed by `api.execute` — the same
+    runner behind ``api.run(api.compile_plan(spec))``.  The lowering is
+    exact (tested bit-equal-to-float-close for all four modes in
+    tests/test_api.py), and `run()` emits a single `DeprecationWarning`.
+    New code should use the spec -> plan -> run surface directly; see
+    README "The experiment API".
 
-Both scheme families route through `repro.fleet` by default: the
-synchronous ones (sfl/sldpfl) through the cohort-batched `FleetEngine` (one
-device dispatch per round instead of K), the asynchronous ones
-(afl/aldpfl) through the window-batched `AsyncFleetEngine` (one dispatch
-per virtual-time arrival window instead of per arrival), each with a
-per-node PRNG chain identical to the sequential reference paths (kept under
-`cfg.use_fleet=False` and tested equivalent in tests/test_fleet.py and
-tests/test_async_fleet.py).
+The four execution paths the old trainer branched over (sync/async ×
+sequential reference loop / fleet engines, selected by ``use_fleet`` and
+``fleet_mesh``) live in `repro.api.run` now — the spec's `Topology` picks
+them.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import accumulator as accum
-from . import aldp, async_update, detection
+from . import aldp, detection
 from .accountant import MomentsAccountant
+
+_VALID_MODES = ("sfl", "afl", "sldpfl", "aldpfl")
 
 
 @dataclass
@@ -68,6 +68,71 @@ class FedConfig:
                                     # windows); None = single-device engines.
                                     # Requires use_fleet=True.
     seed: int = 0
+
+    def validate(self) -> None:
+        """Cross-field validation, surfaced by the `repro.api` redesign.
+
+        The old trainer accepted several silently-broken combinations —
+        an unknown ``mode`` fell through to the async branch, a
+        ``fleet_mesh`` with ``use_fleet=False`` had nothing to shard,
+        out-of-range knobs failed deep inside a jitted round.  All of
+        them are explicit errors now (see tests/test_api.py)."""
+        if self.mode not in _VALID_MODES:
+            raise ValueError(f"FedConfig.mode {self.mode!r} is not one of "
+                             f"{_VALID_MODES}")
+        if self.fleet_mesh is not None and not self.use_fleet:
+            raise ValueError(
+                "FedConfig.fleet_mesh shards the fleet engines' node axis "
+                "and requires use_fleet=True; the sequential reference "
+                "paths cannot run sharded")
+        if self.fleet_mesh is not None and self.fleet_mesh < 1:
+            raise ValueError(f"FedConfig.fleet_mesh must be >= 1, got "
+                             f"{self.fleet_mesh}")
+        if self.n_nodes < 1 or self.rounds < 1:
+            raise ValueError(f"FedConfig needs n_nodes >= 1 and rounds >= 1, "
+                             f"got n_nodes={self.n_nodes}, "
+                             f"rounds={self.rounds}")
+        if self.local_steps < 1 or self.batch_size < 1:
+            raise ValueError(f"FedConfig needs local_steps >= 1 and "
+                             f"batch_size >= 1, got {self.local_steps}, "
+                             f"{self.batch_size}")
+        if self.lr <= 0:
+            raise ValueError(f"FedConfig.lr must be > 0, got {self.lr}")
+        if not 0.0 <= self.alpha <= 1.0:
+            raise ValueError(f"FedConfig.alpha must be in [0, 1], got "
+                             f"{self.alpha}")
+        if not 0.0 < self.sparsify_ratio <= 1.0:
+            raise ValueError(f"FedConfig.sparsify_ratio must be in (0, 1], "
+                             f"got {self.sparsify_ratio}")
+        if not 0.0 < self.detect_s < 100.0:
+            raise ValueError(f"FedConfig.detect_s is a percentile in "
+                             f"(0, 100), got {self.detect_s}")
+        if self.detect_warmup < 1:
+            raise ValueError(f"FedConfig.detect_warmup must be >= 1, got "
+                             f"{self.detect_warmup}")
+        if self.detect_window is not None and self.detect_window < 1:
+            raise ValueError(f"FedConfig.detect_window must be >= 1, got "
+                             f"{self.detect_window}")
+        if self.sigma is not None and self.sigma < 0:
+            raise ValueError(f"FedConfig.sigma must be >= 0, got "
+                             f"{self.sigma}")
+        if self.sigma is None and self.mode in ("sldpfl", "aldpfl") and \
+                not (self.epsilon > 0 and 0.0 < self.delta < 1.0):
+            raise ValueError(
+                f"FedConfig.sigma=None calibrates the noise multiplier "
+                f"from (epsilon, delta); need epsilon > 0 and delta in "
+                f"(0, 1), got ({self.epsilon}, {self.delta})")
+        if self.clip_s <= 0:
+            raise ValueError(f"FedConfig.clip_s must be > 0, got "
+                             f"{self.clip_s}")
+        if self.bandwidth_bytes_per_s <= 0 or self.base_compute_s <= 0:
+            raise ValueError(
+                f"FedConfig.bandwidth_bytes_per_s and base_compute_s must "
+                f"be > 0, got {self.bandwidth_bytes_per_s}, "
+                f"{self.base_compute_s}")
+        if self.heterogeneity < 0:
+            raise ValueError(f"FedConfig.heterogeneity must be >= 0, got "
+                             f"{self.heterogeneity}")
 
     def detection_window(self) -> int:
         """Length of the async sliding accuracy window (was a magic
@@ -106,6 +171,9 @@ class FederatedTrainer:
       node_data: list of (x, y) arrays per node (possibly label-flipped).
       test_data: (x, y) for global accuracy reporting.
       cloud_test: (x, y) the cloud's detection testing dataset (§5.4).
+
+    Deprecated — a compatibility shim over `repro.api`; see the module
+    docstring.
     """
 
     def __init__(self, init_params, loss_fn: Callable, acc_fn: Callable,
@@ -113,11 +181,7 @@ class FederatedTrainer:
                  test_data: Tuple[np.ndarray, np.ndarray],
                  cloud_test: Tuple[np.ndarray, np.ndarray],
                  cfg: FedConfig):
-        if cfg.fleet_mesh is not None and not cfg.use_fleet:
-            raise ValueError(
-                "FedConfig.fleet_mesh shards the fleet engines' node axis "
-                "and requires use_fleet=True; the sequential reference "
-                "paths cannot run sharded")
+        cfg.validate()
         self.cfg = cfg
         self.params = init_params
         self.loss_fn = loss_fn
@@ -140,278 +204,49 @@ class FederatedTrainer:
         # heterogeneous node speeds (lognormal around base_compute_s)
         self.node_time = cfg.base_compute_s * np.exp(
             self.rng.normal(0.0, cfg.heterogeneity, cfg.n_nodes))
-        self._local_train = jax.jit(partial(self._local_train_impl, loss_fn,
-                                            cfg.local_steps, cfg.lr,
-                                            cfg.batch_size))
-
-    # -- jitted node-local SGD ------------------------------------------------
-    @staticmethod
-    def _local_train_impl(loss_fn, steps, lr, bs, params, x, y, key):
-        n = x.shape[0]
-
-        def body(carry, k):
-            p, = carry
-            idx = jax.random.randint(k, (bs,), 0, n)
-            batch = {"x": x[idx], "y": y[idx]}
-            g = jax.grad(lambda pp: loss_fn(pp, batch)[0])(p)
-            p = jax.tree.map(lambda a, b: a - lr * b, p, g)
-            return (p,), None
-
-        keys = jax.random.split(key, steps)
-        (p,), _ = jax.lax.scan(body, (params,), keys)
-        return p
-
-    # -- per-node upload pipeline --------------------------------------------
-    def _node_update(self, node: int, start_params) -> Tuple[dict, float, float]:
-        """Local train -> delta -> [accumulate/sparsify] -> [ALDP] -> ω_new.
-
-        Returns (uploaded model ω_new, upload_bytes, node accuracy on the
-        cloud testing dataset)."""
-        cfg = self.cfg
-        x, y = self.node_data[node]
-        self.key, k1, k2 = jax.random.split(self.key, 3)
-        local = self._local_train(start_params, x, y, k1)
-        delta = jax.tree.map(lambda a, b: a - b, local, start_params)
-
-        if cfg.sparsify_ratio < 1.0:
-            delta, self.residuals[node], _ = accum.accumulate_and_sparsify(
-                self.residuals[node], delta, cfg.sparsify_ratio)
-            bytes_up = accum.upload_bytes(delta, cfg.sparsify_ratio)
-        else:
-            bytes_up = self.n_params * 4
-
-        if self.sigma > 0:
-            delta, _ = aldp.aldp_perturb(delta, k2, self.sigma, cfg.clip_s)
-            self.accountant.step()  # accountant exists whenever sigma > 0
-
-        omega_new = jax.tree.map(lambda a, b: a + b, start_params, delta)
-        acc = float(self.acc_fn(omega_new, *self.cloud_test))
-        return omega_new, bytes_up, acc
 
     def global_accuracy(self) -> float:
         return float(self.acc_fn(self.params, *self.test_data))
 
-    # -- schemes ---------------------------------------------------------------
+    # -- the shim ------------------------------------------------------------
     def run(self) -> List[RoundRecord]:
-        if self.cfg.mode in ("sfl", "sldpfl"):
-            return self._run_sync()
-        return self._run_async()
+        """Lower `self.cfg` to an `ExperimentPlan` and execute it with this
+        trainer's params/data/state aliased in, so trajectories (and the
+        handed-back PRNG chain/residuals) match the pre-redesign trainer
+        exactly."""
+        warnings.warn(
+            "FederatedTrainer is deprecated: use the repro.api surface — "
+            "report = api.run(api.compile_plan(spec)) — or lower an "
+            "existing FedConfig with api.plan_from_fed_config(cfg). "
+            "See README 'Migrating from FedConfig'.",
+            DeprecationWarning, stacklevel=2)
+        from .. import api
+        from ..fleet import NodeProfile
 
-    def _comm_time(self, nbytes: float) -> float:
-        return nbytes / self.cfg.bandwidth_bytes_per_s
-
-    def _run_sync(self) -> List[RoundRecord]:
-        """Synchronous FedAvg (barrier per round).
-
-        Default path is the cohort-batched `repro.fleet.FleetEngine` (one
-        device dispatch per round); `cfg.use_fleet=False` keeps the original
-        per-node reference loop, which the engine is tested against.
-        """
-        if self.cfg.use_fleet:
-            return self._run_sync_fleet()
-        return self._run_sync_sequential()
-
-    def _fleet_mesh(self):
-        """The opt-in node mesh (`cfg.fleet_mesh` devices), or None."""
-        if self.cfg.fleet_mesh is None:
-            return None
-        from ..fleet import FleetMesh  # deferred: fleet depends on repro.core
-        return FleetMesh.create(self.cfg.fleet_mesh)
-
-    def _fleet_engine(self):
-        """Build a FleetEngine faithful to this trainer: same per-node PRNG
-        chain (key_mode="sequential"), same residual/clock state."""
-        from .. import fleet  # deferred: fleet depends on repro.core
         cfg = self.cfg
-        fcfg = fleet.FleetConfig(
-            local_steps=cfg.local_steps, batch_size=cfg.batch_size,
-            lr=cfg.lr, alpha=cfg.alpha, clip_s=cfg.clip_s, sigma=self.sigma,
-            detect=cfg.detect, detect_s=cfg.detect_s,
-            sparsify_ratio=cfg.sparsify_ratio, key_mode="sequential",
-            backend="reference", seed=cfg.seed)
-        profile = fleet.NodeProfile(
-            compute_s=self.node_time,
-            bandwidth_bps=np.full(cfg.n_nodes, cfg.bandwidth_bytes_per_s))
-        eng = fleet.FleetEngine(
-            self.params, self.loss_fn, self._acc_fn_raw, self.node_data,
-            self.test_data, self.cloud_test, fcfg, profile=profile,
-            sampler=fleet.FullParticipation(), mesh=self._fleet_mesh())
-        eng.load_state(fleet.stack_trees(self.residuals), self.key)
-        return eng
-
-    def _run_sync_fleet(self) -> List[RoundRecord]:
-        cfg = self.cfg
-        eng = self._fleet_engine()
-        for r in range(cfg.rounds):
-            rec = eng.run_round()
-            if self.accountant is not None:
-                self.accountant.step(cfg.n_nodes)
-            self.params = eng.params
-            self.history.append(RoundRecord(
-                rec.t, r, rec.accuracy, rec.comm_bytes, rec.comp_time,
-                rec.comm_time, rec.n_rejected))
-        # hand node-local state back so follow-on runs stay faithful
-        self.key = jax.device_get(eng.state.chain_key)
-        from ..fleet import unstack_tree
-        self.residuals = unstack_tree(eng.export_residuals(), cfg.n_nodes)
-        return self.history
-
-    def _run_sync_sequential(self) -> List[RoundRecord]:
-        cfg = self.cfg
-        clock = 0.0
-        for r in range(cfg.rounds):
-            uploads, accs, nbytes = [], [], 0.0
-            for node in range(cfg.n_nodes):
-                w, b, a = self._node_update(node, self.params)
-                uploads.append(w)
-                accs.append(a)
-                nbytes += b
-            accs = jnp.asarray(accs)
-            if cfg.detect:
-                mask, _ = detection.detect(accs, cfg.detect_s)
-            else:
-                mask = jnp.ones(cfg.n_nodes, bool)
-            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *uploads)
-            omega_new = detection.masked_mean(stacked, mask)
-            self.params = async_update.mix(self.params, omega_new, cfg.alpha)
-            comp = float(np.max(self.node_time))          # barrier: slowest node
-            comm = self._comm_time(nbytes / cfg.n_nodes)  # parallel uplinks
-            clock += comp + comm
-            self.history.append(RoundRecord(
-                clock, r, self.global_accuracy(), nbytes, comp, comm,
-                int(cfg.n_nodes - mask.sum())))
-        return self.history
-
-    def _run_async(self) -> List[RoundRecord]:
-        """Asynchronous: Eq. (6) mix on every arrival.
-
-        Default path is the window-batched `repro.fleet.AsyncFleetEngine`
-        in parity mode (auto window + sequential mixing + the trainer's
-        PRNG chain); `cfg.use_fleet=False` keeps the original per-arrival
-        event loop, which the engine is tested against.
-        """
-        if self.cfg.use_fleet:
-            return self._run_async_fleet()
-        return self._run_async_sequential()
-
-    def _async_fleet_engine(self):
-        """Build an AsyncFleetEngine faithful to this trainer: same node
-        clocks, same per-arrival PRNG chain, same detection window."""
-        from .. import fleet  # deferred: fleet depends on repro.core
-        cfg = self.cfg
-        fcfg = fleet.AsyncFleetConfig(
-            local_steps=cfg.local_steps, batch_size=cfg.batch_size,
-            lr=cfg.lr, alpha=cfg.alpha, clip_s=cfg.clip_s, sigma=self.sigma,
-            detect=cfg.detect, detect_s=cfg.detect_s,
-            sparsify_ratio=cfg.sparsify_ratio, key_mode="sequential",
-            backend="reference", seed=cfg.seed,
-            window=None, mixing="sequential",
-            staleness_adaptive=cfg.staleness_adaptive,
-            detect_warmup=cfg.detect_warmup,
-            detect_window=cfg.detection_window())
-        profile = fleet.NodeProfile(
-            compute_s=self.node_time,
-            bandwidth_bps=np.full(cfg.n_nodes, cfg.bandwidth_bytes_per_s))
-        eng = fleet.AsyncFleetEngine(
-            self.params, self.loss_fn, self._acc_fn_raw, self.node_data,
-            self.test_data, self.cloud_test, fcfg, profile=profile,
-            mesh=self._fleet_mesh())
-        eng.load_state(fleet.stack_trees(self.residuals), self.key)
-        return eng
-
-    def _run_async_fleet(self) -> List[RoundRecord]:
-        cfg = self.cfg
-        eng = self._async_fleet_engine()
-        total = cfg.rounds * cfg.n_nodes
-        processed = 0
-        # one RoundRecord per n_nodes arrivals, exactly like the event loop
-        # (downstream benchmarks normalize by len(history)): windows are
-        # capped so they never straddle a record boundary — a cap only
-        # truncates the arrival prefix, so the processed order is unchanged
-        span_bytes = span_comp = span_comm = 0.0
-        span_rejected = 0
-        while processed < total:
-            boundary = cfg.n_nodes - processed % cfg.n_nodes
-            rec = eng.run_window(max_arrivals=boundary, evaluate=False)
-            processed += rec.n_processed
-            if self.accountant is not None:
-                self.accountant.step(rec.n_processed)
-            self.params = eng.params
-            span_bytes += rec.comm_bytes
-            span_comp += rec.comp_time
-            span_comm += rec.comm_time
-            span_rejected += rec.n_rejected
-            if processed % cfg.n_nodes == 0:
-                self.history.append(RoundRecord(
-                    rec.t, rec.version, self.global_accuracy(), span_bytes,
-                    span_comp, span_comm, span_rejected))
-                span_bytes = span_comp = span_comm = 0.0
-                span_rejected = 0
-        # hand node-local state back so follow-on runs stay faithful
-        self.key = jax.device_get(eng.state.chain_key)
-        from ..fleet import unstack_tree
-        self.residuals = unstack_tree(eng.export_residuals(), cfg.n_nodes)
-        return self.history
-
-    def _run_async_sequential(self) -> List[RoundRecord]:
-        """The per-arrival event-queue reference loop."""
-        cfg = self.cfg
-        version = 0
-        # (arrival_time, node, dispatched_version, seq) heap
-        events = []
-        for node in range(cfg.n_nodes):
-            heapq.heappush(events, (self.node_time[node], node, 0, node))
-        dispatched_params = {n: self.params for n in range(cfg.n_nodes)}
-        total_updates = cfg.rounds * cfg.n_nodes
-        acc_window: List[float] = []
-        seq = cfg.n_nodes
-        processed = 0
-        # per-record accumulators: a RoundRecord spans n_nodes arrivals, so
-        # traffic/time must be summed over the span, not the last arrival
-        span_bytes = span_comp = span_comm = 0.0
-        span_rejected = 0
-        while processed < total_updates:
-            t, node, v_disp, _ = heapq.heappop(events)
-            w, b, a = self._node_update(node, dispatched_params[node])
-            comm = self._comm_time(b)
-            t_arrive = t + comm
-            acc_window.append(a)
-            acc_window = acc_window[-cfg.detection_window():]
-            rejected = 0
-            if cfg.detect and len(acc_window) >= cfg.detect_warmup:
-                accs = jnp.asarray(acc_window)
-                thr = detection.detection_threshold(accs, cfg.detect_s)
-                if a <= float(thr):
-                    rejected = 1
-            if not rejected:
-                staleness = version - v_disp
-                if cfg.staleness_adaptive:
-                    self.params = async_update.mix_stale(
-                        self.params, w, cfg.alpha, staleness)
-                else:
-                    self.params = async_update.mix(self.params, w, cfg.alpha)
-                version += 1
-            processed += 1
-            span_bytes += b
-            span_comp += float(self.node_time[node])
-            span_comm += comm
-            span_rejected += rejected
-            # redispatch node with the fresh global model
-            dispatched_params[node] = self.params
-            heapq.heappush(events,
-                           (t_arrive + self.node_time[node], node, version, seq))
-            seq += 1
-            if processed % cfg.n_nodes == 0:
-                self.history.append(RoundRecord(
-                    t_arrive, version, self.global_accuracy(), span_bytes,
-                    span_comp, span_comm, span_rejected))
-                span_bytes = span_comp = span_comm = 0.0
-                span_rejected = 0
+        plan = api.plan_from_fed_config(cfg)
+        pop = api.Population(
+            params=self.params, loss_fn=self.loss_fn,
+            acc_fn=self._acc_fn_raw, node_data=self.node_data,
+            test_data=self.test_data, cloud_test=self.cloud_test,
+            profile=NodeProfile(
+                compute_s=self.node_time,
+                bandwidth_bps=np.full(cfg.n_nodes,
+                                      cfg.bandwidth_bytes_per_s)))
+        state = api.RunState(params=self.params, key=self.key,
+                             residuals=self.residuals,
+                             accountant=self.accountant,
+                             history=self.history)
+        api.execute(plan, pop, state)
+        self.params = state.params
+        self.key = state.key
+        self.residuals = state.residuals
         return self.history
 
     # -- reporting --------------------------------------------------------------
     def kappa(self) -> float:
         """Eq. (5) over the whole run."""
+        from . import async_update
         comm = sum(r.comm_time for r in self.history)
         comp = sum(r.comp_time for r in self.history)
         return async_update.communication_efficiency(comm, comp)

@@ -1,28 +1,22 @@
 """Declarative fleet scenarios: enumerate node populations, don't hand-wire.
 
-A `Scenario` describes a whole population — size, adversary fraction,
-straggler tail, availability/churn, cohort sampling, privacy/communication
-knobs — and `build_engine` turns it into a ready-to-run `FleetEngine` on
-synthetic federated data. Benchmarks, examples and tests pick scenarios by
-name from `SCENARIOS` instead of re-assembling trainers by hand.
+A `Scenario` is a named preset over the `repro.api` experiment spec: it
+describes a whole population — size, adversary fraction, straggler tail,
+availability/churn, cohort sampling, privacy/communication knobs — and
+`to_spec()` emits the corresponding `api.ExperimentSpec`.  The engine
+builders are thin wrappers over the api pipeline
+(``compile_plan`` -> ``materialize`` -> ``make_engine``); benchmarks,
+examples and tests pick scenarios by name from `SCENARIOS` instead of
+re-assembling experiments by hand.
 """
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
-import jax
-import numpy as np
-
-from ..core import detection
-from ..data import make_federated_image_data
-from ..models.cnn import cnn_accuracy, cnn_loss, init_cnn
-from ..models.mlp import init_mlp, mlp_accuracy, mlp_loss
-from .async_engine import AsyncFleetConfig, AsyncFleetEngine
-from .engine import (AvailabilityTrace, ClientSampler, FleetConfig,
-                     FleetEngine, FullParticipation, NodeProfile,
-                     UniformSampler)
+from .async_engine import AsyncFleetEngine
+from .engine import ClientSampler, FleetEngine
 from .mesh import FleetMesh
 
 
@@ -64,6 +58,64 @@ class Scenario:
     def with_nodes(self, n_nodes: int) -> "Scenario":
         return dataclasses.replace(self, n_nodes=n_nodes)
 
+    def to_spec(self, kind: Optional[str] = None, rounds: int = 10,
+                seed: int = 0, backend: str = "reference",
+                mesh_devices: Optional[int] = None):
+        """Emit the `api.ExperimentSpec` this scenario denotes.
+
+        ``kind`` is the schedule ("sync" | "async" | "buffered"); None
+        picks "sync", or the scenario's own async mixing when it declares
+        async knobs.  ``mesh_devices`` selects a mesh topology.
+        """
+        from ..api import spec as s
+        from ..api.window import AutoWindow, FixedWindow
+
+        if kind is None:
+            declares_async = (self.async_mixing != "sequential"
+                              or self.async_window is not None
+                              or self.staleness_adaptive)
+            kind = self.async_kind() if declares_async else "sync"
+        window = (FixedWindow(self.async_window)
+                  if kind != "sync" and self.async_window is not None
+                  else AutoWindow())
+        topology = (s.Topology(kind="mesh", devices=mesh_devices,
+                               backend=backend)
+                    if mesh_devices is not None
+                    else s.Topology(kind="single", backend=backend))
+        return s.ExperimentSpec(
+            fleet=s.FleetSpec(
+                n_nodes=self.n_nodes,
+                profile=s.NodeHeterogeneity(
+                    base_compute_s=self.base_compute_s,
+                    heterogeneity=self.heterogeneity,
+                    bandwidth_bps=self.bandwidth_bps,
+                    straggler_frac=self.straggler_frac,
+                    straggler_slowdown=self.straggler_slowdown),
+                attack=s.AttackMix(malicious_frac=self.malicious_frac),
+                availability=self.availability,
+                cohort_frac=self.cohort_frac,
+                model=self.model, hw=self.hw,
+                samples_per_node=self.samples_per_node,
+                n_test=self.n_test, n_cloud_test=self.n_cloud_test),
+            schedule=s.SchedulePolicy(
+                kind=kind, alpha=self.alpha,
+                staleness_adaptive=(self.staleness_adaptive
+                                    if kind != "sync" else False),
+                window=window),
+            privacy=s.PrivacySpec(sigma=self.sigma, clip_s=self.clip_s),
+            compression=s.CompressionSpec(
+                sparsify_ratio=self.sparsify_ratio),
+            defense=s.DefenseSpec(detect=self.detect,
+                                  detect_s=self.detect_s),
+            topology=topology,
+            train=s.TrainSpec(local_steps=self.local_steps,
+                              batch_size=self.batch_size, lr=self.lr),
+            rounds=rounds, seed=seed)
+
+    def async_kind(self) -> str:
+        """The async schedule kind this scenario declares."""
+        return "buffered" if self.async_mixing == "buffered" else "async"
+
 
 SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
     Scenario("honest"),
@@ -89,28 +141,16 @@ def get_scenario(name: str) -> Scenario:
                        f"{sorted(SCENARIOS)}") from None
 
 
-def _population(sc: Scenario, seed: int):
-    """Scenario -> (params, loss_fn, acc_fn, node_data, test, cloud,
-    profile): everything both engine builders share."""
-    n_malicious = int(round(sc.malicious_frac * sc.n_nodes))
-    node_data, test, cloud, _ = make_federated_image_data(
-        seed, n_nodes=sc.n_nodes, n_malicious=n_malicious,
-        n_train=sc.samples_per_node * sc.n_nodes, n_test=sc.n_test,
-        n_cloud_test=sc.n_cloud_test, hw=sc.hw)
+def _build(sc: Scenario, kind: str, seed: int, sampler, backend, mesh):
+    """Scenario -> spec -> plan -> engine, with sampler/mesh overrides."""
+    from .. import api
 
-    key = jax.random.PRNGKey(seed)
-    if sc.model == "cnn":
-        params = init_cnn(key, in_hw=sc.hw)
-        loss_fn, acc_fn = cnn_loss, cnn_accuracy
-    else:
-        params = init_mlp(key, in_dim=sc.hw[0] * sc.hw[1])
-        loss_fn, acc_fn = mlp_loss, mlp_accuracy
-
-    profile = NodeProfile.lognormal(
-        sc.n_nodes, sc.base_compute_s, sc.heterogeneity, sc.bandwidth_bps,
-        seed=seed, straggler_frac=sc.straggler_frac,
-        straggler_slowdown=sc.straggler_slowdown)
-    return params, loss_fn, acc_fn, node_data, test, cloud, profile
+    spec = sc.to_spec(kind=kind, seed=seed, backend=backend)
+    plan = api.compile_plan(spec)
+    pop = api.materialize(spec)
+    if sampler is not None:
+        pop = dataclasses.replace(pop, sampler=sampler)
+    return api.make_engine(plan, pop, mesh=mesh)
 
 
 def build_engine(sc: Scenario, seed: int = 0,
@@ -121,26 +161,7 @@ def build_engine(sc: Scenario, seed: int = 0,
 
     ``mesh`` (a `fleet.FleetMesh`) shards the node axis across devices and
     runs the round under shard_map."""
-    params, loss_fn, acc_fn, node_data, test, cloud, profile = \
-        _population(sc, seed)
-    cfg = FleetConfig(local_steps=sc.local_steps, batch_size=sc.batch_size,
-                      lr=sc.lr, alpha=sc.alpha, clip_s=sc.clip_s,
-                      sigma=sc.sigma, detect=sc.detect, detect_s=sc.detect_s,
-                      sparsify_ratio=sc.sparsify_ratio, backend=backend,
-                      seed=seed)
-
-    if sampler is None:
-        if sc.availability < 1.0:
-            sampler = AvailabilityTrace(
-                probs=np.full(sc.n_nodes, sc.availability), seed=seed)
-        elif sc.cohort_frac < 1.0:
-            sampler = UniformSampler(
-                max(1, int(round(sc.cohort_frac * sc.n_nodes))), seed=seed)
-        else:
-            sampler = FullParticipation()
-
-    return FleetEngine(params, loss_fn, acc_fn, node_data, test, cloud, cfg,
-                       profile=profile, sampler=sampler, mesh=mesh)
+    return _build(sc, "sync", seed, sampler, backend, mesh)
 
 
 def build_async_engine(sc: Scenario, seed: int = 0,
@@ -155,24 +176,4 @@ def build_async_engine(sc: Scenario, seed: int = 0,
     redispatched. `cohort_frac < 1` likewise gates arrivals per window to a
     sampled cohort (the async analogue of 'm of K' participation).
     """
-    params, loss_fn, acc_fn, node_data, test, cloud, profile = \
-        _population(sc, seed)
-    cfg = AsyncFleetConfig(
-        local_steps=sc.local_steps, batch_size=sc.batch_size,
-        lr=sc.lr, alpha=sc.alpha, clip_s=sc.clip_s,
-        sigma=sc.sigma, detect=sc.detect, detect_s=sc.detect_s,
-        sparsify_ratio=sc.sparsify_ratio, backend=backend, seed=seed,
-        window=sc.async_window, mixing=sc.async_mixing,
-        staleness_adaptive=sc.staleness_adaptive,
-        detect_window=detection.default_window(sc.n_nodes))
-
-    if sampler is None:
-        if sc.availability < 1.0:
-            sampler = AvailabilityTrace(
-                probs=np.full(sc.n_nodes, sc.availability), seed=seed)
-        elif sc.cohort_frac < 1.0:
-            sampler = UniformSampler(
-                max(1, int(round(sc.cohort_frac * sc.n_nodes))), seed=seed)
-
-    return AsyncFleetEngine(params, loss_fn, acc_fn, node_data, test, cloud,
-                            cfg, profile=profile, sampler=sampler, mesh=mesh)
+    return _build(sc, sc.async_kind(), seed, sampler, backend, mesh)

@@ -1,0 +1,520 @@
+"""The `repro.api` redesign acceptance suite.
+
+* Parity: for every mode in {sfl, afl, sldpfl, aldpfl} × {single-device,
+  forced-8-device mesh}, ``run(compile_plan(spec))`` reproduces the
+  pre-redesign `FederatedTrainer` round-record trajectory bit-equal-to-
+  float-close (the trainer is now a shim over the same runner, and the
+  shim itself must keep emitting the legacy trajectories).
+* Deprecation shim: every legacy ``FederatedTrainer(...).run()`` call
+  keeps working and emits exactly one DeprecationWarning.
+* Spec/plan validation: `compile_plan` and `FedConfig.validate` reject
+  the cross-field contradictions the old flag soup let through.
+* Serialization: `ExperimentSpec` and `RunReport` JSON round trips
+  (example-based + hypothesis).
+* Window policies: resolve math and the load-aware target-arrivals
+  policy vs the conservative parity-auto window.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from _optional import given, settings, st
+
+from repro import api
+from repro.core import FedConfig, FederatedTrainer
+from repro.core.federated import RoundRecord
+from repro.data import make_federated_image_data
+from repro.fleet import NodeProfile
+from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# shared small population
+# ---------------------------------------------------------------------------
+
+N, ROUNDS = 5, 3
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return make_federated_image_data(
+        0, n_nodes=N, n_malicious=1, n_train=200, n_test=128,
+        n_cloud_test=64, hw=(8, 8))
+
+
+def _cfg(mode, use_fleet=True, **kw):
+    return FedConfig(mode=mode, n_nodes=N, rounds=ROUNDS, local_steps=3,
+                     batch_size=16, lr=0.1, detect=True, sigma=0.05,
+                     sparsify_ratio=0.5, seed=0, use_fleet=use_fleet, **kw)
+
+
+def _population(small_data):
+    node_data, test, cloud, _ = small_data
+    return api.Population(
+        params=init_mlp(jax.random.PRNGKey(0), 64), loss_fn=mlp_loss,
+        acc_fn=mlp_accuracy, node_data=node_data, test_data=test,
+        cloud_test=cloud,
+        profile=NodeProfile.lognormal(N, 1.0, 0.5, 12.5e6, seed=0))
+
+
+def _records_close(a, b, atol=2e-3):
+    assert len(a) == len(b)
+    np.testing.assert_allclose([r.accuracy for r in a],
+                               [r.accuracy for r in b], atol=atol)
+    np.testing.assert_allclose([r.t for r in a], [r.t for r in b],
+                               rtol=1e-9)
+    assert [r.n_rejected for r in a] == [r.n_rejected for r in b]
+    assert [r.comm_bytes for r in a] == [r.comm_bytes for r in b]
+    assert [r.version for r in a] == [r.version for r in b]
+
+
+# ---------------------------------------------------------------------------
+# parity: api.run(compile_plan(spec)) ≡ legacy trainer, all four modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sfl", "afl", "sldpfl", "aldpfl"])
+def test_api_matches_trainer_single_device(mode, small_data):
+    """Single-device acceptance: the declarative path reproduces the
+    trainer trajectory bit-equal-to-float-close, and the shim emits
+    exactly one DeprecationWarning per run()."""
+    node_data, test, cloud, _ = small_data
+    cfg = _cfg(mode)
+    tr = FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64), mlp_loss,
+                          mlp_accuracy, node_data, test, cloud, cfg)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        hist = tr.run()
+    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, [str(w.message) for w in deps]
+
+    plan = api.compile_plan(api.spec_from_fed_config(cfg))
+    rep = api.run(plan, population=_population(small_data))
+    _records_close(hist, rep.records)
+    assert rep.epsilon_spent == pytest.approx(tr.epsilon_spent())
+    assert rep.kappa == pytest.approx(tr.kappa())
+    # report invariants
+    assert rep.final_accuracy == rep.records[-1].accuracy
+    assert rep.mode == ("sync" if mode in ("sfl", "sldpfl") else "async")
+    assert all(d["n_rejected"] > 0 for d in rep.detections)
+
+
+@pytest.mark.parametrize("mode", ["sfl", "aldpfl"])
+def test_api_sequential_topology_matches_reference_loop(mode, small_data):
+    """Topology(kind='sequential') is the seed per-node/per-arrival loop."""
+    node_data, test, cloud, _ = small_data
+    cfg = _cfg(mode, use_fleet=False)
+    tr = FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64), mlp_loss,
+                          mlp_accuracy, node_data, test, cloud, cfg)
+    hist = tr.run()
+    plan = api.compile_plan(api.spec_from_fed_config(cfg))
+    assert plan.engine == "sequential"
+    rep = api.run(plan, population=_population(small_data))
+    _records_close(hist, rep.records)
+
+
+def test_api_matches_trainer_on_8_device_mesh():
+    """Mesh acceptance: all four modes, forced-8-device host mesh —
+    run(compile_plan(spec)) float-closes the trainer's fleet_mesh=8
+    trajectory (subprocess pattern from test_fleet_shard.py)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, warnings
+        import jax, numpy as np
+        from repro import api
+        from repro.core import FedConfig, FederatedTrainer
+        from repro.data import make_federated_image_data
+        from repro.fleet import NodeProfile
+        from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+
+        n = 8
+        node_data, test, cloud, _ = make_federated_image_data(
+            0, n_nodes=n, n_malicious=2, n_train=320, n_test=128,
+            n_cloud_test=64, hw=(8, 8))
+        out = {"n_devices": len(jax.devices())}
+        for mode in ("sfl", "afl", "sldpfl", "aldpfl"):
+            cfg = FedConfig(mode=mode, n_nodes=n, rounds=2, local_steps=3,
+                            batch_size=16, lr=0.1, detect=True, sigma=0.05,
+                            sparsify_ratio=0.5, seed=0, fleet_mesh=8)
+            tr = FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64),
+                                  mlp_loss, mlp_accuracy, node_data, test,
+                                  cloud, cfg)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                hist = tr.run()
+            plan = api.compile_plan(api.spec_from_fed_config(cfg))
+            pop = api.Population(
+                params=init_mlp(jax.random.PRNGKey(0), 64),
+                loss_fn=mlp_loss, acc_fn=mlp_accuracy, node_data=node_data,
+                test_data=test, cloud_test=cloud,
+                profile=NodeProfile.lognormal(n, 1.0, 0.5, 12.5e6, seed=0))
+            rep = api.run(plan, population=pop)
+            assert rep.engine == "fleet-mesh", rep.engine
+            out[f"{mode}_len"] = len(hist) - len(rep.records)
+            out[f"{mode}_acc"] = max(abs(a.accuracy - b.accuracy)
+                                     for a, b in zip(hist, rep.records))
+            out[f"{mode}_t"] = max(abs(a.t - b.t)
+                                   for a, b in zip(hist, rep.records))
+            out[f"{mode}_rej"] = int(sum(a.n_rejected != b.n_rejected
+                                         for a, b in zip(hist,
+                                                         rep.records)))
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)          # the child forces its own devices
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    assert rec["n_devices"] == 8
+    for mode in ("sfl", "afl", "sldpfl", "aldpfl"):
+        assert rec[f"{mode}_len"] == 0, rec
+        assert rec[f"{mode}_acc"] < 2e-3, rec
+        assert rec[f"{mode}_t"] < 1e-6, rec
+        assert rec[f"{mode}_rej"] == 0, rec
+
+
+def test_shim_hands_back_state(small_data):
+    """The shim keeps the trainer's PRNG key/residuals faithful across
+    run() — follow-on runs continue the chain like the pre-redesign
+    trainer did."""
+    node_data, test, cloud, _ = small_data
+    cfg = _cfg("aldpfl")
+    tr = FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64), mlp_loss,
+                          mlp_accuracy, node_data, test, cloud, cfg)
+    key_before = np.asarray(tr.key).copy()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        tr.run()
+    assert not np.array_equal(np.asarray(tr.key), key_before)
+    assert len(tr.history) == ROUNDS
+    assert any(float(np.abs(np.asarray(leaf)).sum()) > 0
+               for leaf in jax.tree.leaves(tr.residuals))
+
+
+def test_execute_rejects_mismatched_population(small_data):
+    """An explicit Population must match the spec's fleet size — the
+    arrival budget and record cadence derive from the spec, so a silent
+    mismatch would run the wrong experiment (or return an empty report)."""
+    spec = dataclasses.replace(
+        api.spec_from_fed_config(_cfg("afl")),
+        fleet=api.FleetSpec(n_nodes=N + 1))
+    with pytest.raises(api.SpecError, match="population has"):
+        api.run(api.compile_plan(spec),
+                population=_population(small_data))
+
+
+def test_sync_cohort_accountant_charges_participants_only():
+    """ε accounting for sampled sync cohorts: only the nodes that
+    actually uploaded a noised delta spend budget, not the whole fleet."""
+    spec = _spec(
+        fleet=api.FleetSpec(n_nodes=6, cohort_frac=0.5, samples_per_node=20,
+                            n_test=32, n_cloud_test=16),
+        privacy=api.PrivacySpec(sigma=0.05), rounds=2)
+    plan = api.compile_plan(spec)
+    pop = api.materialize(spec)
+    state = api.init_state(plan, pop)
+    api.execute(plan, pop, state)
+    # UniformSampler(3 of 6) cohorts, 2 rounds -> 6 accountant steps
+    assert state.accountant.steps == 2 * 3
+
+
+# ---------------------------------------------------------------------------
+# validation: compile_plan cross-field errors + FedConfig gaps
+# ---------------------------------------------------------------------------
+
+def _spec(**kw):
+    base = dict(
+        fleet=api.FleetSpec(n_nodes=4, samples_per_node=20, n_test=32,
+                            n_cloud_test=16),
+        schedule=api.SchedulePolicy(kind="sync"),
+        train=api.TrainSpec(local_steps=1, batch_size=4, lr=0.1),
+        rounds=1)
+    base.update(kw)
+    return api.ExperimentSpec(**base)
+
+
+@pytest.mark.parametrize("bad,match", [
+    (dict(schedule=api.SchedulePolicy(kind="fedsgd")), "schedule.kind"),
+    (dict(topology=api.Topology(kind="cluster")), "topology.kind"),
+    (dict(topology=api.Topology(kind="single", devices=4)),
+     "not 'mesh'"),
+    (dict(topology=api.Topology(kind="sequential"),
+          schedule=api.SchedulePolicy(kind="buffered")),
+     "no sequential reference"),
+    (dict(topology=api.Topology(kind="sequential", backend="pallas")),
+     "pallas"),
+    (dict(schedule=api.SchedulePolicy(kind="sync",
+                                      staleness_adaptive=True)),
+     "staleness"),
+    (dict(schedule=api.SchedulePolicy(
+        kind="sync", window=api.FixedWindow(2.0))), "window"),
+    (dict(schedule=api.SchedulePolicy(
+        kind="async", window=api.TargetArrivalsWindow(4))), "buffered"),
+    (dict(schedule=api.SchedulePolicy(
+        kind="buffered", window=api.FixedWindow(-1.0))), "positive"),
+    (dict(fleet=api.FleetSpec(n_nodes=4, availability=0.5,
+                              cohort_frac=0.5)), "participation"),
+    (dict(privacy=api.PrivacySpec(sigma=-0.1)), "sigma"),
+    (dict(privacy=api.PrivacySpec(sigma=None, delta=2.0)), "delta"),
+    (dict(compression=api.CompressionSpec(sparsify_ratio=0.0)),
+     "sparsify"),
+    (dict(defense=api.DefenseSpec(detect_s=100.0)), "percentile"),
+    (dict(rounds=0), "rounds"),
+])
+def test_compile_plan_rejects_contradictions(bad, match):
+    with pytest.raises(api.SpecError, match=match):
+        api.compile_plan(_spec(**bad))
+
+
+def test_compile_plan_resolves_derived_fields():
+    plan = api.compile_plan(_spec(privacy=api.PrivacySpec(sigma=None)))
+    assert plan.sigma == pytest.approx(
+        np.sqrt(2 * np.log(1.25 / 1e-3)) / 8.0)
+    assert plan.accountant
+    assert plan.detect_window == 4          # default_window(4)
+    assert plan.total_arrivals == 4
+    plan0 = api.compile_plan(_spec())
+    assert plan0.sigma == 0.0 and not plan0.accountant
+    assert "aldp_perturb" not in plan0.stages
+
+
+@pytest.mark.parametrize("bad,match", [
+    (dict(mode="fedavg"), "mode"),
+    (dict(use_fleet=False, fleet_mesh=4), "use_fleet"),
+    (dict(fleet_mesh=0), "fleet_mesh"),
+    (dict(n_nodes=0), "n_nodes"),
+    (dict(rounds=0), "rounds"),
+    (dict(lr=0.0), "lr"),
+    (dict(alpha=1.5), "alpha"),
+    (dict(sparsify_ratio=0.0), "sparsify_ratio"),
+    (dict(detect_s=0.0), "detect_s"),
+    (dict(detect_warmup=0), "detect_warmup"),
+    (dict(detect_window=0), "detect_window"),
+    (dict(sigma=-1.0), "sigma"),
+    (dict(sigma=None, delta=1.5), "delta"),
+    (dict(bandwidth_bytes_per_s=0.0), "bandwidth"),
+    (dict(heterogeneity=-0.1), "heterogeneity"),
+])
+def test_fedconfig_validate_rejects(bad, match):
+    cfg = FedConfig(**bad)
+    with pytest.raises(ValueError, match=match):
+        cfg.validate()
+
+
+def test_fedconfig_validation_gaps_raise_at_construction(small_data):
+    """The gaps compile_plan surfaced are now constructor errors: an
+    unknown mode no longer falls through to the async branch, and a mesh
+    without the fleet engines no longer has anything to shard."""
+    node_data, test, cloud, _ = small_data
+    params = init_mlp(jax.random.PRNGKey(0), 64)
+    with pytest.raises(ValueError, match="mode"):
+        FederatedTrainer(params, mlp_loss, mlp_accuracy, node_data, test,
+                         cloud, FedConfig(mode="typo", n_nodes=N))
+    with pytest.raises(ValueError, match="use_fleet"):
+        FederatedTrainer(params, mlp_loss, mlp_accuracy, node_data, test,
+                         cloud, FedConfig(n_nodes=N, use_fleet=False,
+                                          fleet_mesh=2))
+
+
+# ---------------------------------------------------------------------------
+# serialization round trips
+# ---------------------------------------------------------------------------
+
+def test_spec_json_round_trip_example():
+    spec = _spec(schedule=api.SchedulePolicy(
+        kind="buffered", alpha=0.3,
+        window=api.TargetArrivalsWindow(target_arrivals=6)))
+    d = spec.to_dict()
+    assert d["schema_version"] == api.SCHEMA_VERSION
+    assert d["schedule"]["window"]["kind"] == "target_arrivals"
+    spec2 = api.ExperimentSpec.from_json(spec.to_json())
+    assert spec2 == spec
+
+
+def test_spec_from_dict_rejects_wrong_schema():
+    d = _spec().to_dict()
+    d["schema_version"] = 999
+    with pytest.raises(ValueError, match="schema_version"):
+        api.ExperimentSpec.from_dict(d)
+
+
+def test_report_json_round_trip_example(tmp_path):
+    rep = api.RunReport(
+        mode="async", engine="fleet",
+        records=[RoundRecord(1.5, 0, 0.5, 1e6, 2.0, 0.1, 1),
+                 RoundRecord(3.0, 1, 0.6, 1e6, 2.0, 0.1, 0)],
+        kappa=0.05, epsilon_spent=1.25, final_accuracy=0.6,
+        detections=[{"round": 0, "t": 1.5, "n_rejected": 1}],
+        spec=_spec().to_dict())
+    rep2 = api.RunReport.from_json(rep.to_json())
+    assert rep2 == dataclasses.replace(rep, final_params=None)
+    path = os.path.join(tmp_path, "r", "report.json")
+    rep.save(path)
+    assert api.RunReport.load(path).records == rep.records
+
+
+def test_append_json_records_stamps_schema(tmp_path):
+    path = os.path.join(tmp_path, "traj.json")
+    api.append_json_records(path, [{"a": 1}])
+    api.append_json_records(path, [{"b": 2, "schema_version": 1}])
+    with open(path) as f:
+        traj = json.load(f)
+    assert len(traj) == 2
+    assert all(t["schema_version"] == api.SCHEMA_VERSION for t in traj)
+
+
+_window_strategy = st.one_of(
+    st.builds(api.AutoWindow),
+    st.builds(api.FixedWindow,
+              seconds=st.floats(0.1, 100.0, allow_nan=False)),
+    st.builds(api.TargetArrivalsWindow,
+              target_arrivals=st.integers(1, 1000)))
+
+_spec_strategy = st.builds(
+    api.ExperimentSpec,
+    fleet=st.builds(
+        api.FleetSpec,
+        n_nodes=st.integers(1, 10_000),
+        availability=st.floats(0.1, 1.0),
+        cohort_frac=st.just(1.0),
+        model=st.sampled_from(["mlp", "cnn"]),
+        hw=st.tuples(st.integers(4, 32), st.integers(4, 32)),
+        profile=st.builds(
+            api.NodeHeterogeneity,
+            heterogeneity=st.floats(0.0, 2.0),
+            straggler_frac=st.floats(0.0, 1.0)),
+        attack=st.builds(api.AttackMix,
+                         malicious_frac=st.floats(0.0, 1.0))),
+    schedule=st.builds(
+        api.SchedulePolicy,
+        kind=st.sampled_from(["async", "buffered"]),
+        alpha=st.floats(0.0, 1.0),
+        window=_window_strategy),
+    privacy=st.builds(
+        api.PrivacySpec,
+        sigma=st.one_of(st.none(), st.floats(0.0, 2.0))),
+    compression=st.builds(api.CompressionSpec,
+                          sparsify_ratio=st.floats(0.01, 1.0)),
+    defense=st.builds(api.DefenseSpec, detect=st.booleans(),
+                      detect_s=st.floats(1.0, 99.0)),
+    rounds=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1))
+
+
+@settings(max_examples=30, deadline=None)
+@given(spec=_spec_strategy)
+def test_spec_json_round_trip_property(spec):
+    assert api.ExperimentSpec.from_json(spec.to_json()) == spec
+
+
+_records_strategy = st.lists(st.builds(
+    RoundRecord,
+    t=st.floats(0, 1e6, allow_nan=False),
+    version=st.integers(0, 10_000),
+    accuracy=st.floats(0, 1),
+    comm_bytes=st.floats(0, 1e12, allow_nan=False),
+    comp_time=st.floats(0, 1e6, allow_nan=False),
+    comm_time=st.floats(0, 1e6, allow_nan=False),
+    n_rejected=st.integers(0, 1000)), max_size=10)
+
+
+@settings(max_examples=30, deadline=None)
+@given(records=_records_strategy,
+       kappa=st.floats(0, 1), eps=st.floats(0, 1e4))
+def test_report_json_round_trip_property(records, kappa, eps):
+    rep = api.RunReport(mode="sync", engine="fleet", records=records,
+                        kappa=kappa, epsilon_spent=eps,
+                        final_accuracy=records[-1].accuracy
+                        if records else 0.0,
+                        detections=api.detection_log(records))
+    assert api.RunReport.from_json(rep.to_json()) == rep
+
+
+# ---------------------------------------------------------------------------
+# window policies
+# ---------------------------------------------------------------------------
+
+def test_window_policy_resolve_math():
+    profile = NodeProfile(compute_s=np.array([1.0, 2.0, 4.0]),
+                          bandwidth_bps=np.array([1e6, 1e6, 2e6]))
+    bpn = 1e6                           # 1 MB upload
+    assert api.AutoWindow().resolve(profile, bpn) is None
+    assert api.FixedWindow(3.5).resolve(profile, bpn) == 3.5
+    # periods: 1+1=2, 2+1=3, 4+0.5=4.5 -> rate = 1/2 + 1/3 + 1/4.5
+    rate = 1 / 2 + 1 / 3 + 1 / 4.5
+    got = api.TargetArrivalsWindow(target_arrivals=7).resolve(profile, bpn)
+    assert got == pytest.approx(7 / rate)
+
+
+def test_window_policy_registry_round_trip():
+    for pol in (api.AutoWindow(), api.FixedWindow(2.0),
+                api.TargetArrivalsWindow(16)):
+        assert api.window_policy_from_dict(pol.to_dict()) == pol
+    with pytest.raises(ValueError, match="unknown window policy"):
+        api.window_policy_from_dict({"kind": "nope"})
+
+
+def test_target_arrivals_beats_conservative_auto_window():
+    """The load-aware buffered window processes the same arrival budget in
+    (strictly) fewer, fatter device dispatches than the parity-safe auto
+    window — the ROADMAP's target-arrivals-per-window item."""
+    n, total = 8, 24
+    base = _spec(
+        fleet=api.FleetSpec(n_nodes=n, samples_per_node=20, n_test=32,
+                            n_cloud_test=16,
+                            profile=api.NodeHeterogeneity(heterogeneity=1.0)),
+        schedule=api.SchedulePolicy(kind="buffered"),
+        rounds=total // n)
+
+    def run_windows(window):
+        spec = dataclasses.replace(base, schedule=dataclasses.replace(
+            base.schedule, window=window))
+        plan = api.compile_plan(spec)
+        eng = api.make_engine(plan, api.materialize(spec))
+        eng.run_arrivals(total)
+        assert sum(r.n_processed for r in eng.history) == total
+        return len(eng.history)
+
+    windows_auto = run_windows(api.AutoWindow())
+    windows_target = run_windows(api.TargetArrivalsWindow(target_arrivals=n))
+    assert windows_target < windows_auto, (windows_target, windows_auto)
+
+
+# ---------------------------------------------------------------------------
+# scenarios emit specs
+# ---------------------------------------------------------------------------
+
+def test_scenario_to_spec():
+    from repro.fleet import get_scenario
+    sc = get_scenario("async_buffered")
+    spec = sc.to_spec(kind=sc.async_kind(), seed=3)
+    assert spec.schedule.kind == "buffered"
+    # kind=None falls back to the scenario's own declared schedule
+    assert sc.to_spec().schedule.kind == "buffered"
+    assert get_scenario("async_stragglers").to_spec().schedule.kind == \
+        "async"
+    assert get_scenario("honest").to_spec().schedule.kind == "sync"
+    assert spec.schedule.window == api.FixedWindow(2.0)
+    assert spec.seed == 3
+    plan = api.compile_plan(spec)
+    assert plan.mixing == "buffered"
+
+    flip = get_scenario("label_flip_20").to_spec()
+    assert flip.fleet.attack.malicious_frac == pytest.approx(0.2)
+    assert flip.defense.detect
+    # every named scenario lowers to a valid plan
+    from repro.fleet import SCENARIOS
+    for name, sc in SCENARIOS.items():
+        kind = sc.async_kind() if name.startswith("async") else "sync"
+        api.compile_plan(sc.to_spec(kind=kind))

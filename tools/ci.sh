@@ -7,7 +7,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== 1/3 import sweep (every repro.* and benchmarks.* module) =="
+echo "== 1/5 import sweep (every repro.* and benchmarks.* module) =="
 python - <<'EOF'
 import importlib
 import pkgutil
@@ -32,13 +32,18 @@ print(f"imported {len(mods) - len(failures)}/{len(mods)} modules")
 raise SystemExit(1 if failures else 0)
 EOF
 
-echo "== 2/3 tier-1 pytest =="
+echo "== 2/5 tier-1 pytest =="
 python -m pytest -q
 
-echo "== 3/4 fleet smokes on synthetic data (2 sync rounds + 2 async windows) =="
+echo "== 3/5 fleet smokes on synthetic data (2 sync rounds + 2 async windows) =="
 python -m benchmarks.fleet_scale --smoke
 python -m benchmarks.async_scale --smoke
 
-echo "== 4/4 multi-device sharded fleet smoke (4 forced host devices) =="
+echo "== 4/5 multi-device sharded fleet smoke (4 forced host devices) =="
 python -m benchmarks.fleet_shard --smoke
+
+echo "== 5/5 api smoke (spec -> plan -> run, every schedule x topology) =="
+python -m benchmarks.api_smoke
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+    python -m benchmarks.api_smoke --mesh 2
 echo "CI OK"
