@@ -19,6 +19,7 @@ MODULES = {
     "privacy": "privacy_tradeoff",
     "ablations": "ablations",
     "comm": "comm_efficiency",
+    "net": "net_sweep",
     "fleet": "fleet_scale",
     "async": "async_scale",
     "kernels": "kernels_micro",

@@ -23,17 +23,17 @@ The legacy `FederatedTrainer(FedConfig(...))` surface is a deprecation
 shim over this layer (`compat.plan_from_fed_config`).
 """
 from .compat import plan_from_fed_config, spec_from_fed_config  # noqa: F401
-from .plan import (BACKENDS, SCHEDULE_KINDS, TOPOLOGY_KINDS,  # noqa: F401
-                   ExperimentPlan, SpecError, compile_plan)
+from .plan import (BACKENDS, NET_CODECS, SCHEDULE_KINDS,  # noqa: F401
+                   TOPOLOGY_KINDS, ExperimentPlan, SpecError, compile_plan)
 from .population import (Population, default_sampler,  # noqa: F401
                          materialize)
 from .report import (RunReport, append_json_records,  # noqa: F401
                      detection_log)
 from .run import RunState, execute, init_state, make_engine, run  # noqa: F401
-from .spec import (SCHEMA_VERSION, AttackMix, CompressionSpec,  # noqa: F401
-                   DefenseSpec, ExperimentSpec, FleetSpec,
-                   NodeHeterogeneity, PrivacySpec, SchedulePolicy, Topology,
-                   TrainSpec)
+from .spec import (ACCEPTED_SCHEMA_VERSIONS, SCHEMA_VERSION,  # noqa: F401
+                   AttackMix, CompressionSpec, DefenseSpec, ExperimentSpec,
+                   FleetSpec, NetworkSpec, NodeHeterogeneity, PrivacySpec,
+                   SchedulePolicy, Topology, TrainSpec)
 from .window import (AutoWindow, FixedWindow,  # noqa: F401
                      TargetArrivalsWindow, WindowPolicy,
                      window_policy_from_dict)

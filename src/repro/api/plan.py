@@ -15,12 +15,14 @@ from dataclasses import dataclass
 from typing import Optional, Tuple
 
 from ..core import aldp, detection
+from ..net.codecs import CODEC_NAMES, SparseBitpack
 from .spec import ExperimentSpec
 from .window import AutoWindow, FixedWindow, TargetArrivalsWindow
 
 SCHEDULE_KINDS = ("sync", "async", "buffered")
 TOPOLOGY_KINDS = ("sequential", "single", "mesh")
 BACKENDS = ("reference", "pallas")
+NET_CODECS = ("analytic",) + CODEC_NAMES
 
 
 class SpecError(ValueError):
@@ -44,6 +46,7 @@ class ExperimentPlan:
     accountant: bool            # spend privacy budget? (sigma > 0)
     key_mode: str               # engine PRNG chain mode
     stages: Tuple[str, ...]     # descriptive upload/aggregate pipeline
+    net_codec: Optional[str] = None  # repro.net wire codec; None = analytic
 
     def describe(self) -> str:
         placement = ("sequential reference loop" if self.engine == "sequential"
@@ -160,6 +163,39 @@ def compile_plan(spec: ExperimentSpec) -> ExperimentPlan:
                         "one at a time — window policies need the fleet "
                         "engines (topology.kind='single' or 'mesh')")
 
+    # -- network ------------------------------------------------------------
+    net = spec.network
+    _require(net.codec in NET_CODECS,
+             f"network.codec {net.codec!r} not in {NET_CODECS}")
+    _require(net.value_bits in SparseBitpack.VALUE_BITS,
+             f"network.value_bits must be one of "
+             f"{SparseBitpack.VALUE_BITS}, got {net.value_bits}")
+    _require(net.value_bits == 32 or net.codec == "sparse_bitpack",
+             f"network.value_bits={net.value_bits} is the sparse_bitpack "
+             f"quantized-value variant; codec {net.codec!r} stores f32 "
+             f"values")
+    _require(0.0 <= net.loss_prob < 1.0,
+             f"network.loss_prob must be in [0, 1), got {net.loss_prob}")
+    _require(net.latency_s >= 0 and net.jitter_s >= 0,
+             "network.latency_s and network.jitter_s must be >= 0")
+    _require(net.bandwidth_sigma >= 0 and net.shared_uplink_bps >= 0,
+             "network.bandwidth_sigma and network.shared_uplink_bps must "
+             "be >= 0")
+    _require(net.mtu_bytes >= 1,
+             f"network.mtu_bytes must be >= 1, got {net.mtu_bytes}")
+    if not net.enabled:
+        _require(net.bandwidth_sigma == 0 and net.latency_s == 0
+                 and net.jitter_s == 0 and net.loss_prob == 0
+                 and net.shared_uplink_bps == 0,
+                 "link simulation needs a wire codec — network.codec="
+                 "'analytic' keeps the analytic comm model; pick "
+                 "dense_f32/sparse_coo/sparse_bitpack to enable the link "
+                 "parameters")
+    else:
+        _require(topo.kind != "sequential",
+                 "the sequential reference loop has no network simulation "
+                 "— use topology.kind='single' or 'mesh'")
+
     # -- privacy resolution -------------------------------------------------
     if priv.sigma is None:
         _require(priv.epsilon > 0 and 0.0 < priv.delta < 1.0,
@@ -190,6 +226,9 @@ def compile_plan(spec: ExperimentSpec) -> ExperimentPlan:
         stages.append("dgc_sparsify")
     if sigma > 0:
         stages.append("aldp_perturb")
+    if net.enabled:
+        stages.append(f"wire_encode[{net.codec}]")
+        stages.append("link_sim")
     if dfs.detect:
         stages.append("cloud_detect")
     stages.append({"barrier": "masked_mean_mix",
@@ -200,4 +239,5 @@ def compile_plan(spec: ExperimentSpec) -> ExperimentPlan:
         spec=spec, mode=mode, engine=engine, mixing=mixing,
         mesh_devices=mesh_devices, sigma=sigma, detect_window=detect_window,
         total_arrivals=spec.rounds * f.n_nodes, accountant=sigma > 0,
-        key_mode="sequential", stages=tuple(stages))
+        key_mode="sequential", stages=tuple(stages),
+        net_codec=net.codec if net.enabled else None)

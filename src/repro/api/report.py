@@ -17,7 +17,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 from ..core.federated import RoundRecord
-from .spec import SCHEMA_VERSION
+from .spec import ACCEPTED_SCHEMA_VERSIONS, SCHEMA_VERSION
 
 
 @dataclass
@@ -36,6 +36,9 @@ class RunReport:
     final_accuracy: float = 0.0
     detections: List[Dict] = field(default_factory=list)
     spec: Optional[Dict] = None         # ExperimentSpec.to_dict(), if known
+    net: Optional[Dict] = None          # repro.net NetTrace summary (wire
+                                        # codec + encoded/wire byte totals)
+                                        # when the network subsystem ran
     schema_version: int = SCHEMA_VERSION
     final_params: Any = field(default=None, repr=False, compare=False)
 
@@ -51,6 +54,7 @@ class RunReport:
             "final_accuracy": self.final_accuracy,
             "detections": self.detections,
             "spec": self.spec,
+            "net": self.net,
         }
 
     def to_json(self, **kw) -> str:
@@ -59,15 +63,18 @@ class RunReport:
     @classmethod
     def from_dict(cls, d: Dict) -> "RunReport":
         version = d.get("schema_version")
-        if version != SCHEMA_VERSION:
-            raise ValueError(f"RunReport schema_version {version!r} != "
-                             f"supported {SCHEMA_VERSION}")
+        if version not in ACCEPTED_SCHEMA_VERSIONS:
+            raise ValueError(f"RunReport schema_version {version!r} not in "
+                             f"supported {ACCEPTED_SCHEMA_VERSIONS}")
+        # v1 records predate bytes_source — RoundRecord defaults it to
+        # "analytic", which is what every v1 trajectory actually was
         return cls(mode=d["mode"], engine=d["engine"],
                    records=[RoundRecord(**r) for r in d["records"]],
                    kappa=d["kappa"], epsilon_spent=d["epsilon_spent"],
                    final_accuracy=d["final_accuracy"],
                    detections=list(d.get("detections", [])),
-                   spec=d.get("spec"))
+                   spec=d.get("spec"), net=d.get("net"),
+                   schema_version=SCHEMA_VERSION)
 
     @classmethod
     def from_json(cls, s: str) -> "RunReport":

@@ -34,6 +34,7 @@ from ..core.accountant import MomentsAccountant
 from ..core.federated import RoundRecord
 from .. import fleet
 from ..fleet import stages as fleet_stages
+from ..net import netsim_from_network
 from .plan import ExperimentPlan, SpecError
 from .population import Population, materialize
 from .report import RunReport, detection_log
@@ -55,6 +56,7 @@ class RunState:
     residuals: List[Any]
     accountant: Optional[MomentsAccountant]
     history: List[RoundRecord] = field(default_factory=list)
+    net: Optional[dict] = None      # NetTrace summary when repro.net ran
 
 
 def init_state(plan: ExperimentPlan, population: Population) -> RunState:
@@ -98,14 +100,20 @@ def make_engine(plan: ExperimentPlan, population: Population,
     args = (population.params, population.loss_fn, population.acc_fn,
             population.node_data, population.test_data, population.cloud_test)
 
+    n_params = sum(x.size for x in jax.tree.leaves(population.params))
+    # the repro.net transport (None with NetworkSpec at its analytic
+    # defaults — the engines then keep the pre-net comm model exactly)
+    net = netsim_from_network(
+        spec.network, population.profile.bandwidth_bps, n_params,
+        sparsify_ratio=spec.compression.sparsify_ratio, seed=spec.seed)
+
     if plan.mode == "sync":
         cfg = fleet.FleetConfig(**common)
         return fleet.FleetEngine(
             *args, cfg, profile=population.profile,
             sampler=population.sampler or fleet.FullParticipation(),
-            mesh=mesh)
+            mesh=mesh, net=net)
 
-    n_params = sum(x.size for x in jax.tree.leaves(population.params))
     bpn = fleet_stages.bytes_per_node(n_params,
                                       spec.compression.sparsify_ratio)
     cfg = fleet.AsyncFleetConfig(
@@ -117,7 +125,8 @@ def make_engine(plan: ExperimentPlan, population: Population,
         detect_warmup=spec.defense.detect_warmup,
         detect_window=plan.detect_window)
     return fleet.AsyncFleetEngine(*args, cfg, profile=population.profile,
-                                  sampler=population.sampler, mesh=mesh)
+                                  sampler=population.sampler, mesh=mesh,
+                                  net=net)
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +135,7 @@ def make_engine(plan: ExperimentPlan, population: Population,
 
 def _run_sync_fleet(plan, pop, state, eng) -> None:
     n = pop.n_nodes
+    src = "encoded" if eng.net is not None else "analytic"
     eng.load_state(fleet.stack_trees(state.residuals), state.key)
     for r in range(plan.spec.rounds):
         rec = eng.run_round()
@@ -136,14 +146,17 @@ def _run_sync_fleet(plan, pop, state, eng) -> None:
         state.params = eng.params
         state.history.append(RoundRecord(
             rec.t, r, rec.accuracy, rec.comm_bytes, rec.comp_time,
-            rec.comm_time, rec.n_rejected))
+            rec.comm_time, rec.n_rejected, bytes_source=src))
     # hand node-local state back so follow-on runs stay faithful
     state.key = jax.device_get(eng.state.chain_key)
     state.residuals = fleet.unstack_tree(eng.export_residuals(), n)
+    if eng.net is not None:
+        state.net = eng.net.summary()
 
 
 def _run_async_fleet(plan, pop, state, eng, acc_fn, test_dev) -> None:
     n = pop.n_nodes
+    src = "encoded" if eng.net is not None else "analytic"
     eng.load_state(fleet.stack_trees(state.residuals), state.key)
     total = plan.total_arrivals
     processed = 0
@@ -167,12 +180,15 @@ def _run_async_fleet(plan, pop, state, eng, acc_fn, test_dev) -> None:
         if processed % n == 0:
             state.history.append(RoundRecord(
                 rec.t, rec.version, float(acc_fn(state.params, *test_dev)),
-                span_bytes, span_comp, span_comm, span_rejected))
+                span_bytes, span_comp, span_comm, span_rejected,
+                bytes_source=src))
             span_bytes = span_comp = span_comm = 0.0
             span_rejected = 0
     # hand node-local state back so follow-on runs stay faithful
     state.key = jax.device_get(eng.state.chain_key)
     state.residuals = fleet.unstack_tree(eng.export_residuals(), n)
+    if eng.net is not None:
+        state.net = eng.net.summary()
 
 
 def _run_buffered_fleet(plan, pop, state, eng, acc_fn, test_dev) -> None:
@@ -180,6 +196,7 @@ def _run_buffered_fleet(plan, pop, state, eng, acc_fn, test_dev) -> None:
     by window without the event-loop record boundary — one record per
     window (load-aware policies make windows fat on purpose)."""
     n = pop.n_nodes
+    src = "encoded" if eng.net is not None else "analytic"
     eng.load_state(fleet.stack_trees(state.residuals), state.key)
     total = plan.total_arrivals
     processed = 0
@@ -191,9 +208,12 @@ def _run_buffered_fleet(plan, pop, state, eng, acc_fn, test_dev) -> None:
         state.params = eng.params
         state.history.append(RoundRecord(
             rec.t, rec.version, float(acc_fn(state.params, *test_dev)),
-            rec.comm_bytes, rec.comp_time, rec.comm_time, rec.n_rejected))
+            rec.comm_bytes, rec.comp_time, rec.comm_time, rec.n_rejected,
+            bytes_source=src))
     state.key = jax.device_get(eng.state.chain_key)
     state.residuals = fleet.unstack_tree(eng.export_residuals(), n)
+    if eng.net is not None:
+        state.net = eng.net.summary()
 
 
 # ---------------------------------------------------------------------------
@@ -434,4 +454,5 @@ def run(plan: ExperimentPlan, population: Optional[Population] = None,
         final_accuracy=records[-1].accuracy if records else 0.0,
         detections=detection_log(records),
         spec=plan.spec.to_dict(),
+        net=state.net,
         final_params=state.params)

@@ -14,6 +14,8 @@ defense (cloud-side detection) — plus a population and a placement.  An
                        (ε, δ), or off);
   * `CompressionSpec`— DGC sparsified uploads;
   * `DefenseSpec`    — Alg. 2 detection threshold/warmup/window;
+  * `NetworkSpec`    — `repro.net` wire codecs + virtual-time link
+                       simulation (default: the analytic comm model);
   * `Topology`       — sequential reference loop | single-device fleet
                        engines | node-axis `FleetMesh` sharding;
   * `TrainSpec`      — node-local SGD hyperparameters.
@@ -33,7 +35,11 @@ from typing import Dict, Optional, Tuple
 
 from .window import AutoWindow, WindowPolicy, window_policy_from_dict
 
-SCHEMA_VERSION = 1
+# v2: NetworkSpec axis + RoundRecord.bytes_source.  v1 payloads are still
+# accepted on read (network defaults to analytic, bytes_source to
+# "analytic"); everything written is stamped v2.
+SCHEMA_VERSION = 2
+ACCEPTED_SCHEMA_VERSIONS = (1, 2)
 
 
 # ---------------------------------------------------------------------------
@@ -93,6 +99,11 @@ class SchedulePolicy:
     ``kind="buffered"`` — FedBuff-style: one masked-mean Eq. (6) mix per
                           arrival window (pairs naturally with a
                           load-aware `WindowPolicy`).
+
+    ``staleness_adaptive`` applies the FedAsync (τ+1)^-``staleness_a``
+    discount: per arrival for ``kind="async"`` (`mix_stale`), and as
+    per-update weights inside the buffered mean for ``kind="buffered"``
+    (uniform weights ≡ the plain masked mean).
     """
     kind: str = "sync"
     alpha: float = 0.5                  # Eq. (6) mixing weight
@@ -129,6 +140,36 @@ class DefenseSpec:
 
 
 @dataclass(frozen=True)
+class NetworkSpec:
+    """The `repro.net` transport layer: wire codec + link simulation.
+
+    ``codec="analytic"`` (default) keeps the pre-net behaviour — upload
+    bytes estimated by the shared analytic formula, per-node transfer
+    times fixed at bytes/bandwidth — so existing trajectories are
+    untouched.  Any real codec turns on byte-accurate accounting (every
+    upload's measured nonzero count priced through the codec, summed into
+    `RunReport.net` and the records' ``comm_bytes``) and the stochastic
+    link model (per-node lognormal bandwidth scales, fixed latency,
+    exponential jitter, MTU-packetized loss/retransmits, optional
+    shared-uplink contention), which drives the async engines' node
+    clocks — arrival order and window composition respond to the network.
+    """
+    codec: str = "analytic"         # analytic | dense_f32 | sparse_coo
+                                    # | sparse_bitpack
+    value_bits: int = 32            # 8|16: sparse_bitpack quantized values
+    bandwidth_sigma: float = 0.0    # lognormal sigma of per-node uplink scale
+    latency_s: float = 0.0          # fixed per-upload propagation latency
+    jitter_s: float = 0.0           # exponential per-upload jitter scale
+    loss_prob: float = 0.0          # per-packet loss probability
+    mtu_bytes: int = 1500           # packet size for the loss model
+    shared_uplink_bps: float = 0.0  # >0: uplink shared by concurrent uploads
+
+    @property
+    def enabled(self) -> bool:
+        return self.codec != "analytic"
+
+
+@dataclass(frozen=True)
 class Topology:
     """Where the simulation runs.
 
@@ -162,6 +203,7 @@ class ExperimentSpec:
     privacy: PrivacySpec = field(default_factory=PrivacySpec)
     compression: CompressionSpec = field(default_factory=CompressionSpec)
     defense: DefenseSpec = field(default_factory=DefenseSpec)
+    network: NetworkSpec = field(default_factory=NetworkSpec)
     topology: Topology = field(default_factory=Topology)
     train: TrainSpec = field(default_factory=TrainSpec)
     rounds: int = 10        # sync rounds; async runs rounds*n_nodes arrivals
@@ -186,10 +228,10 @@ class ExperimentSpec:
     def from_dict(cls, d: Dict) -> "ExperimentSpec":
         d = dict(d)
         version = d.pop("schema_version", None)
-        if version != SCHEMA_VERSION:
+        if version not in ACCEPTED_SCHEMA_VERSIONS:
             raise ValueError(
-                f"ExperimentSpec schema_version {version!r} != supported "
-                f"{SCHEMA_VERSION}")
+                f"ExperimentSpec schema_version {version!r} not in "
+                f"supported {ACCEPTED_SCHEMA_VERSIONS}")
         kw = {}
         for f in dataclasses.fields(cls):
             if f.name not in d:
@@ -213,6 +255,7 @@ _SECTION_TYPES = {
     "privacy": PrivacySpec,
     "compression": CompressionSpec,
     "defense": DefenseSpec,
+    "network": NetworkSpec,
     "topology": Topology,
     "train": TrainSpec,
 }

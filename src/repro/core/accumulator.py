@@ -65,9 +65,11 @@ def accumulate_and_sparsify(residual, grad, ratio: float):
 
 def upload_bytes(tree, ratio: float, bytes_per_value: int = 4,
                  bytes_per_index: int = 4) -> int:
-    """Wire size of a sparsified upload (values + indices)."""
+    """Analytic wire size of a sparsified upload (values + indices) —
+    delegates to the shared `repro.net` fallback so this and
+    `fleet.stages.bytes_per_node` can never drift (tests/test_net.py pins
+    both).  Byte-accurate measured accounting lives in `repro.net`."""
+    from ..net.codecs import analytic_upload_bytes
     total = sum(x.size for x in jax.tree.leaves(tree))
-    kept = int(total * min(ratio, 1.0))
-    if ratio >= 1.0:
-        return total * bytes_per_value
-    return kept * (bytes_per_value + bytes_per_index)
+    return analytic_upload_bytes(total, ratio, bytes_per_value,
+                                 bytes_per_index)

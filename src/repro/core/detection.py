@@ -49,6 +49,31 @@ def masked_mean(trees, mask: jnp.ndarray):
     return jax.tree.map(agg, trees)
 
 
+def masked_weighted_mean(trees, mask: jnp.ndarray, weights: jnp.ndarray):
+    """Weighted aggregate over normal nodes: Σ w_i x_i / Σ w_i with w
+    zeroed outside ``mask``.  With uniform weights this reduces to
+    `masked_mean` bit-for-bit (the FedBuff-staleness parity contract,
+    pinned in tests/test_net.py): the masked weight sum equals the
+    participant count, so numerator and denominator are the same ops.
+    """
+    w = mask.astype(jnp.float32) * weights.astype(jnp.float32)
+    total = w.sum()
+    denom = jnp.where(total > 0, total, 1.0)
+
+    def agg(x):
+        wf = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (x.astype(jnp.float32) * wf).sum(0) / denom
+
+    return jax.tree.map(agg, trees)
+
+
+def staleness_weights(taus: jnp.ndarray, a: float) -> jnp.ndarray:
+    """FedAsync polynomial staleness discount (τ+1)^-a per update — the
+    per-update weights the buffered (FedBuff-style) mean applies when
+    `SchedulePolicy.staleness_adaptive` is on."""
+    return (1.0 + jnp.maximum(taus, 0).astype(jnp.float32)) ** (-float(a))
+
+
 def evaluate_nodes(node_params, eval_fn: Callable, *eval_args) -> jnp.ndarray:
     """vmap a per-model accuracy function over the stacked node models."""
     return jax.vmap(lambda p: eval_fn(p, *eval_args))(node_params)

@@ -159,6 +159,10 @@ class RoundRecord:
     comp_time: float
     comm_time: float
     n_rejected: int
+    # how comm_bytes was produced: "analytic" (the closed-form values +
+    # indices estimate) or "encoded" (repro.net wire-codec byte counts) —
+    # keeps mixed trajectories in results/*.json interpretable
+    bytes_source: str = "analytic"
 
 
 class FederatedTrainer:

@@ -122,8 +122,11 @@ def make_window_folds(cfg: "AsyncFleetConfig"):
 
     def buffered_fold(params, version, ring, count, omegas, accs,
                       vdisp_c, arrived):
-        """FedBuff-style: one detection pass over the updated window,
-        one masked-mean Eq. (6) mix for the whole buffer."""
+        """FedBuff-style: one detection pass over the updated window, one
+        masked-mean Eq. (6) mix for the whole buffer.  With
+        ``staleness_adaptive`` the buffer mean is staleness-weighted per
+        update — (τ+1)^-a FedAsync discounts inside the FedBuff mean
+        (uniform weights reproduce the plain masked mean bit-for-bit)."""
 
         def push(carry, inp):
             ring, count = carry
@@ -142,13 +145,18 @@ def make_window_folds(cfg: "AsyncFleetConfig"):
         else:
             rej = jnp.zeros_like(arrived)
         mask = arrived & ~rej
-        omega_mean = detection.masked_mean(omegas, mask)
+        taus = version0 - vdisp_c         # staleness at mix time
+        if cfg.staleness_adaptive:
+            omega_mean = detection.masked_weighted_mean(
+                omegas, mask, detection.staleness_weights(taus,
+                                                          cfg.staleness_a))
+        else:
+            omega_mean = detection.masked_mean(omegas, mask)
         mixed = async_update.mix(params, omega_mean, cfg.alpha)
         any_mix = mask.any()
         params = jax.tree.map(lambda m, p: jnp.where(any_mix, m, p),
                               mixed, params)
         version = version + any_mix.astype(jnp.int32)
-        taus = version0 - vdisp_c         # staleness at mix time
         # every processed node receives the post-window model/version
         c = vdisp_c.shape[0]
         p_seq = jax.tree.map(
@@ -186,7 +194,8 @@ class AsyncFleetEngine(MeshStateIO):
                  node_data, test_data, cloud_test, cfg: AsyncFleetConfig,
                  profile: Optional[NodeProfile] = None,
                  sampler: Optional[ClientSampler] = None,
-                 mesh: Optional[FleetMesh] = None):
+                 mesh: Optional[FleetMesh] = None,
+                 net=None):
         self.cfg = cfg
         self.params = init_params
         self.loss_fn = loss_fn
@@ -196,10 +205,15 @@ class AsyncFleetEngine(MeshStateIO):
             init_params, node_data, test_data, cloud_test, profile)
         self.sampler = sampler
         self.mesh = mesh
+        self.net = net          # Optional[repro.net.NetSim]: per-upload
+                                # wire-encoded bytes + stochastic link times
+                                # drive the node clocks instead of _comm_s
         self.n_pad = mesh.padded(self.n_nodes) if mesh else self.n_nodes
         self._bpn = stages.bytes_per_node(self.n_params, cfg.sparsify_ratio)
-        # per-node uplink + compute, fixed over the run (device copies feed
-        # the jitted clock update; float64 host copies feed window selection)
+        # per-node uplink + compute, fixed over the run (float64 host copies
+        # feed window selection and record accounting; an f32 copy padded to
+        # the mesh width feeds the jitted clock update as the per-window
+        # uplink-time input when no network simulation is attached)
         self._comm_s = np.asarray(self._bpn / self.profile.bandwidth_bps,
                                   np.float64)
         self._comp_s = np.asarray(self.profile.compute_s, np.float64)
@@ -209,6 +223,9 @@ class AsyncFleetEngine(MeshStateIO):
             raise ValueError(f"window must be positive, got "
                              f"{self._window_len}")
         # padding rows never arrive (+inf clocks) and never participate
+        self._comm_pad32 = np.concatenate(
+            [self._comm_s, np.zeros(self.n_pad - self.n_nodes)]
+        ).astype(np.float32)
         first_arrival = np.concatenate(
             [self._comp_s, np.full(self.n_pad - self.n_nodes, np.inf)])
         self.state = init_async_fleet_state(
@@ -241,18 +258,20 @@ class AsyncFleetEngine(MeshStateIO):
         cloud_x, cloud_y = self.cloud_test
         local_train = stages.make_local_train(self.loss_fn, cfg.local_steps,
                                               cfg.lr, cfg.batch_size)
-        comm_s = jnp.asarray(self._comm_s, jnp.float32)
         comp_s = jnp.asarray(self._comp_s, jnp.float32)
         n = self.n_nodes
+        need_nnz = self.net is not None     # byte-accurate pricing only
         sequential_fold, buffered_fold = make_window_folds(cfg)
 
         def window_fn(params, state: FleetState, x, y, sizes,
-                      order, proc, avail):
+                      order, proc, avail, up_s):
             """order: node ids sorted by (arrival time, node id), truncated
             to the compute bucket (in-window arrivals are a prefix of the
             sort, so the host passes the smallest power-of-two cohort
             covering them — one compiled program per bucket size); proc:
-            in-window flags (sorted positions); avail: churn mask."""
+            in-window flags (sorted positions); avail: churn mask; up_s:
+            per-slot uplink transfer seconds (the fixed analytic per-node
+            times, or the network simulator's per-upload draws)."""
             t_arr = jnp.take(state.next_arrival, order)
             vdisp_c = jnp.take(state.dispatched_version, order)
             disp_c = gather_nodes(state.dispatched, order)
@@ -271,7 +290,9 @@ class AsyncFleetEngine(MeshStateIO):
             local = jax.vmap(local_train)(disp_c, xg, yg, sz, k1s)
             deltas = jax.tree.map(lambda l, d: l - d.astype(l.dtype),
                                   local, disp_c)
-            deltas, res_c = stages.upload_pipeline(cfg, deltas, res_c, k2s)
+            deltas, res_c, nnz = stages.upload_pipeline(cfg, deltas, res_c,
+                                                        k2s,
+                                                        need_nnz=need_nnz)
             omegas, accs = stages.rebuild_and_evaluate(
                 raw_acc_fn, disp_c, deltas, cloud_x, cloud_y)
 
@@ -292,7 +313,7 @@ class AsyncFleetEngine(MeshStateIO):
             dispatched = scatter(state.dispatched, p_seq)
             residuals = scatter(state.residuals, res_c)
             dv = state.dispatched_version.at[drop_idx].set(v_seq, mode="drop")
-            t_next = t_arr + jnp.take(comm_s, order) + jnp.take(comp_s, order)
+            t_next = t_arr + up_s + jnp.take(comp_s, order)
             na = state.next_arrival.at[drop_idx].set(t_next, mode="drop")
 
             new_state = dataclasses.replace(
@@ -304,6 +325,8 @@ class AsyncFleetEngine(MeshStateIO):
                 "n_rejected": (rej & arrived).sum(),
                 "max_staleness": jnp.where(arrived, taus, 0).max(),
             }
+            if need_nnz:
+                metrics["nnz"] = nnz
             return params, new_state, metrics
 
         return window_fn
@@ -335,18 +358,18 @@ class AsyncFleetEngine(MeshStateIO):
         local_train = stages.make_local_train(self.loss_fn, cfg.local_steps,
                                               cfg.lr, cfg.batch_size)
         pad = self.n_pad - self.n_nodes
-        comm_s = jnp.asarray(np.concatenate([self._comm_s,
-                                             np.zeros(pad)]), jnp.float32)
         comp_s = jnp.asarray(np.concatenate([self._comp_s,
                                              np.full(pad, np.inf)]),
                              jnp.float32)
         d, axis = mesh.n_devices, mesh.axis
         b = self.n_pad // d
+        need_nnz = self.net is not None     # byte-accurate pricing only
         sequential_fold, buffered_fold = make_window_folds(cfg)
 
         def window_body(params, residuals, chain_key, dispatched,
                         next_arrival, dispatched_version, version, ring,
-                        count, x, y, sizes, order, proc, avail, cx, cy):
+                        count, x, y, sizes, order, proc, avail, up_s,
+                        cx, cy):
             # 1. cohort gather: node-sharded -> replicated (C, ...) rows
             t_arr = mesh_lib.gather_rows(next_arrival, order, axis, b)
             vdisp_c = mesh_lib.gather_rows(dispatched_version, order,
@@ -370,8 +393,8 @@ class AsyncFleetEngine(MeshStateIO):
                                           blk(k1s))
             deltas = jax.tree.map(lambda l, dd: l - dd.astype(l.dtype),
                                   local, disp_b)
-            deltas, res_b = stages.upload_pipeline(cfg, deltas, res_b,
-                                                   blk(k2s))
+            deltas, res_b, nnz_b = stages.upload_pipeline(
+                cfg, deltas, res_b, blk(k2s), need_nnz=need_nnz)
             omegas_b, accs_b = stages.rebuild_and_evaluate(
                 raw_acc_fn, disp_b, deltas, cx, cy)
 
@@ -393,24 +416,27 @@ class AsyncFleetEngine(MeshStateIO):
                                                    proc, axis, b)
             dispatched_version = mesh_lib.scatter_rows(
                 dispatched_version, order, v_seq, proc, axis, b)
-            t_next = t_arr + jnp.take(comm_s, order) + jnp.take(comp_s,
-                                                                order)
+            t_next = t_arr + up_s + jnp.take(comp_s, order)
             next_arrival = mesh_lib.scatter_rows(next_arrival, order, t_next,
                                                  proc, axis, b)
             metrics = {
                 "n_rejected": (rej & arrived).sum(),
                 "max_staleness": jnp.where(arrived, taus, 0).max(),
             }
+            if need_nnz:
+                metrics["nnz"] = jax.lax.all_gather(nnz_b, axis, tiled=True)
             return (params, residuals, chain_key, dispatched, next_arrival,
                     dispatched_version, version, ring, count, metrics)
 
         pn, pr = mesh.spec_nodes(), mesh.spec_replicated()
+        m_specs = {"n_rejected": pr, "max_staleness": pr}
+        if need_nnz:
+            m_specs["nnz"] = pr
         return mesh.shard_map(
             window_body,
             in_specs=(pr, pn, pr, pn, pn, pn, pr, pr, pr,
-                      pn, pn, pn, pr, pr, pr, pr, pr),
-            out_specs=(pr, pn, pr, pn, pn, pn, pr, pr, pr,
-                       {"n_rejected": pr, "max_staleness": pr}))
+                      pn, pn, pn, pr, pr, pr, pr, pr, pr),
+            out_specs=(pr, pn, pr, pn, pn, pn, pr, pr, pr, m_specs))
 
     # -- host-side driver ---------------------------------------------------
     def select_window(self, max_arrivals: Optional[int] = None
@@ -457,6 +483,19 @@ class AsyncFleetEngine(MeshStateIO):
         else:
             avail = np.ones(order.size, bool)
 
+        # per-slot uplink seconds: the analytic per-node constants, or one
+        # stochastic link draw per in-window upload (non-proc slots never
+        # scatter a clock, their value is irrelevant)
+        sel = order[proc]
+        draw = None
+        if self.net is not None:
+            up_host = np.zeros(order.size, np.float64)
+            draw = self.net.draw(sel)
+            up_host[proc] = draw.transfer_s
+        else:
+            up_host = self._comm_pad32[order].astype(np.float64)
+        up_s = jnp.asarray(up_host, jnp.float32)
+
         if self.mesh is not None:
             st = self.state
             (self.params, residuals, chain_key, dispatched, next_arrival,
@@ -465,7 +504,8 @@ class AsyncFleetEngine(MeshStateIO):
                 st.next_arrival, st.dispatched_version, st.version,
                 st.acc_ring, st.acc_count, self.data.x, self.data.y,
                 self.data.sizes, jnp.asarray(order, jnp.int32),
-                jnp.asarray(proc), jnp.asarray(avail), *self.cloud_test)
+                jnp.asarray(proc), jnp.asarray(avail), up_s,
+                *self.cloud_test)
             self.state = dataclasses.replace(
                 st, residuals=residuals, chain_key=chain_key,
                 dispatched=dispatched, next_arrival=next_arrival,
@@ -475,20 +515,31 @@ class AsyncFleetEngine(MeshStateIO):
             self.params, self.state, m = self._window_fn(
                 self.params, self.state, self.data.x, self.data.y,
                 self.data.sizes, jnp.asarray(order, jnp.int32),
-                jnp.asarray(proc), jnp.asarray(avail))
+                jnp.asarray(proc), jnp.asarray(avail), up_s)
         self._window_idx = w + 1
 
-        # host-side clock/traffic accounting over the processed arrivals
-        sel = order[proc]
-        t_arrive = t_arr[proc] + self._comm_s[sel]  # arrival + uplink times
-        bpn = self._bpn
+        # host-side clock/traffic accounting over the processed arrivals.
+        # Churned-out slots (proc & ~avail) are billed too, by design: the
+        # node transmitted its update before going unreachable (its clock
+        # pays uplink + compute above), the cloud just discards it — the
+        # same semantics as the analytic path's bpn * n_processed.
+        if self.net is not None:
+            # byte-accurate: price each upload's measured nonzero count
+            # through the wire codec; times are the link draws
+            enc = self.net.commit(draw, np.asarray(m["nnz"])[proc])
+            uplink = draw.transfer_s
+            comm_bytes = float(enc.sum())
+        else:
+            uplink = self._comm_s[sel]
+            comm_bytes = float(self._bpn * sel.size)
+        t_arrive = t_arr[proc] + uplink             # arrival + uplink times
         rec = AsyncWindowRecord(
             t=float(t_arrive.max()) if sel.size else 0.0,
             window=w, version=int(self.state.version),
             accuracy=self.global_accuracy() if evaluate else float("nan"),
-            comm_bytes=float(bpn * sel.size),
+            comm_bytes=comm_bytes,
             comp_time=float(self._comp_s[sel].sum()),
-            comm_time=float(self._comm_s[sel].sum()),
+            comm_time=float(uplink.sum()),
             n_processed=int(sel.size),
             n_rejected=int(m["n_rejected"]),
             max_staleness=int(m["max_staleness"]))

@@ -215,7 +215,8 @@ class FleetEngine(MeshStateIO):
                  node_data, test_data, cloud_test, cfg: FleetConfig,
                  profile: Optional[NodeProfile] = None,
                  sampler: Optional[ClientSampler] = None,
-                 mesh: Optional[FleetMesh] = None):
+                 mesh: Optional[FleetMesh] = None,
+                 net=None):
         self.cfg = cfg
         self.params = init_params
         self.loss_fn = loss_fn
@@ -225,6 +226,8 @@ class FleetEngine(MeshStateIO):
             init_params, node_data, test_data, cloud_test, profile)
         self.sampler = sampler or FullParticipation()
         self.mesh = mesh
+        self.net = net          # Optional[repro.net.NetSim]: wire codecs +
+                                # link sim replace the analytic comm model
         self.n_pad = mesh.padded(self.n_nodes) if mesh else self.n_nodes
         self.state = init_fleet_state(init_params, self.n_pad,
                                       jax.random.PRNGKey(cfg.seed))
@@ -250,6 +253,7 @@ class FleetEngine(MeshStateIO):
         cloud_x, cloud_y = self.cloud_test
         local_train = stages.make_local_train(self.loss_fn, cfg.local_steps,
                                               cfg.lr, cfg.batch_size)
+        need_nnz = self.net is not None     # byte-accurate pricing only
 
         def round_fn(params, residuals, chain_key, x, y, sizes, idx, valid):
             c = idx.shape[0]
@@ -267,7 +271,9 @@ class FleetEngine(MeshStateIO):
                 params, xg, yg, sz, k1s)
             deltas = jax.tree.map(lambda l, g: l - g[None].astype(l.dtype),
                                   local, params)
-            deltas, res_c = stages.upload_pipeline(cfg, deltas, res_c, k2s)
+            deltas, res_c, nnz = stages.upload_pipeline(cfg, deltas, res_c,
+                                                        k2s,
+                                                        need_nnz=need_nnz)
 
             # cloud side: rebuild node models, test, detect, aggregate, mix
             omegas, accs = stages.rebuild_and_evaluate(
@@ -285,8 +291,10 @@ class FleetEngine(MeshStateIO):
             residuals = jax.tree.map(
                 lambda full, part: full.at[drop_idx].set(part, mode="drop"),
                 residuals, res_c)
-            return new_params, residuals, chain_key, {
-                "accs": accs, "mask": mask, "thr": thr}
+            m = {"accs": accs, "mask": mask, "thr": thr}
+            if need_nnz:
+                m["nnz"] = nnz
+            return new_params, residuals, chain_key, m
 
         return round_fn
 
@@ -310,6 +318,7 @@ class FleetEngine(MeshStateIO):
         local_train = stages.make_local_train(self.loss_fn, cfg.local_steps,
                                               cfg.lr, cfg.batch_size)
         n, n_pad, d, axis = self.n_nodes, self.n_pad, mesh.n_devices, mesh.axis
+        need_nnz = self.net is not None     # byte-accurate pricing only
 
         def round_body(params, residuals, chain_key, x, y, sizes, valid,
                        cx, cy):
@@ -330,8 +339,8 @@ class FleetEngine(MeshStateIO):
                 params, x, y, sizes, k1)
             deltas = jax.tree.map(lambda l, g: l - g[None].astype(l.dtype),
                                   local, params)
-            deltas, res_new = stages.upload_pipeline(cfg, deltas, residuals,
-                                                     k2)
+            deltas, res_new, nnz = stages.upload_pipeline(
+                cfg, deltas, residuals, k2, need_nnz=need_nnz)
             omegas, accs = stages.rebuild_and_evaluate(
                 raw_acc_fn, params, deltas, cx, cy)
 
@@ -362,14 +371,19 @@ class FleetEngine(MeshStateIO):
                 lambda old, new: jnp.where(
                     valid.reshape((-1,) + (1,) * (old.ndim - 1)), new, old),
                 residuals, res_new)
-            return new_params, residuals, chain_key, {
-                "accs": accs_all, "mask": mask_all, "thr": thr}
+            m = {"accs": accs_all, "mask": mask_all, "thr": thr}
+            if need_nnz:
+                m["nnz"] = jax.lax.all_gather(nnz, axis, tiled=True)
+            return new_params, residuals, chain_key, m
 
         pn, pr = mesh.spec_nodes(), mesh.spec_replicated()
+        m_specs = {"accs": pr, "mask": pr, "thr": pr}
+        if need_nnz:
+            m_specs["nnz"] = pr
         return mesh.shard_map(
             round_body,
             in_specs=(pr, pn, pr, pn, pn, pn, pn, pr, pr),
-            out_specs=(pr, pn, pr, {"accs": pr, "mask": pr, "thr": pr}))
+            out_specs=(pr, pn, pr, m_specs))
 
     # -- host-side driver ---------------------------------------------------
     def run_round(self) -> FleetRoundRecord:
@@ -399,10 +413,27 @@ class FleetEngine(MeshStateIO):
         bpn = self.bytes_per_node()
         comp, comm = self.profile.round_times(np.asarray(idx),
                                               np.asarray(valid), bpn)
+        comm_bytes = bpn * n_part
+        if self.net is not None:
+            # byte-accurate path: the round's measured nonzero counts price
+            # each participant's upload through the wire codec; the link
+            # model's per-upload transfer times replace the analytic uplink
+            # (parallel uploads — the barrier waits on the slowest)
+            if self.mesh is not None:       # nnz is per-node over n_pad
+                sel_nodes = np.flatnonzero(up[:self.n_nodes])
+                nnz_sel = np.asarray(m["nnz"])[sel_nodes]
+            else:                           # nnz is in cohort (idx) order
+                valid_np = np.asarray(valid)
+                sel_nodes = np.asarray(idx)[valid_np]
+                nnz_sel = np.asarray(m["nnz"])[valid_np]
+            draw = self.net.draw(sel_nodes)
+            enc = self.net.commit(draw, nnz_sel)
+            comm = float(draw.transfer_s.max()) if sel_nodes.size else 0.0
+            comm_bytes = float(enc.sum())
         t_prev = self.history[-1].t if self.history else 0.0
         rec = FleetRoundRecord(
             t=t_prev + comp + comm, round=r,
-            accuracy=self.global_accuracy(), comm_bytes=bpn * n_part,
+            accuracy=self.global_accuracy(), comm_bytes=comm_bytes,
             comp_time=comp, comm_time=comm, n_participating=n_part,
             n_rejected=n_rejected)
         self.history.append(rec)

@@ -64,11 +64,23 @@ def make_local_train(loss_fn, local_steps: int, lr: float, batch_size: int):
 # stage: upload pipeline (DGC sparsify -> ALDP), cohort-batched
 # ---------------------------------------------------------------------------
 
-def upload_pipeline(cfg, deltas, residuals_c, k2s):
+def upload_pipeline(cfg, deltas, residuals_c, k2s, need_nnz: bool = False):
     """[DGC accumulate+sparsify] -> [ALDP clip+noise] over a stacked cohort.
 
     `cfg` needs `.sparsify_ratio`, `.sigma`, `.clip_s`, `.backend`.
-    Returns (uploaded deltas, updated cohort residuals)."""
+    Returns (uploaded deltas, updated cohort residuals, per-node nonzero
+    counts or None).  ``need_nnz`` gates the count so analytic runs (no
+    `repro.net` attached) pay nothing for it.
+
+    The counts are taken *post-sparsify, pre-noise*: they are the sparse
+    coordinate set the node uploads — in the deployed system ALDP noise is
+    added only to the transmitted (kept) values, so the wire message stays
+    sparse.  Note the simulation-side caveat: this reference pipeline
+    (inherited from the seed implementation, parity-pinned) applies the
+    noise to *every* coordinate of the delta, so the update the cloud
+    aggregates is denser than the priced wire message — the byte counts
+    model the intended wire, not the reference pipeline's dense-noise
+    artifact."""
     if cfg.sparsify_ratio < 1.0:
         if cfg.backend == "pallas":
             deltas, residuals_c = sparsify_pallas_cohort(
@@ -77,6 +89,7 @@ def upload_pipeline(cfg, deltas, residuals_c, k2s):
             deltas, residuals_c, _ = jax.vmap(
                 lambda r, d: accum.accumulate_and_sparsify(
                     r, d, cfg.sparsify_ratio))(residuals_c, deltas)
+    nnz = count_upload_nnz(deltas, cfg.backend) if need_nnz else None
     if cfg.sigma > 0.0:
         if cfg.backend == "pallas":
             deltas = aldp_pallas_cohort(deltas, k2s, cfg.sigma, cfg.clip_s)
@@ -84,7 +97,22 @@ def upload_pipeline(cfg, deltas, residuals_c, k2s):
             deltas = jax.vmap(
                 lambda d, k: aldp.aldp_perturb(d, k, cfg.sigma,
                                                cfg.clip_s)[0])(deltas, k2s)
-    return deltas, residuals_c
+    return deltas, residuals_c, nnz
+
+
+def count_upload_nnz(deltas, backend: str = "reference") -> jnp.ndarray:
+    """Per-node nonzero count of a stacked upload tree — the wire quantity
+    `repro.net`'s sparse codecs price.  The pallas path shares
+    `net.codecs.count_nnz`'s fused `kernels.wire_bytes.nnz_fleet` kernel
+    over the flattened cohort; the reference path reduces per leaf (no
+    flatten/concat materialization)."""
+    if backend == "pallas":
+        from ..net.codecs import count_nnz
+        flat, _ = flatten_cohort(deltas)
+        return count_nnz(flat, backend="pallas")
+    c = jax.tree.leaves(deltas)[0].shape[0]
+    return sum(jnp.sum(d.reshape(c, -1) != 0, axis=1).astype(jnp.int32)
+               for d in jax.tree.leaves(deltas))
 
 
 def rebuild_and_evaluate(acc_fn, start_params, deltas, cloud_x, cloud_y):
@@ -212,8 +240,9 @@ def init_engine_common(init_params, node_data, test_data, cloud_test,
 
 
 def bytes_per_node(n_params: int, sparsify_ratio: float) -> float:
-    """Upload size per node: dense f32 values, or (value, index) pairs for a
-    sparsified upload — matches `accumulator.upload_bytes`."""
-    if sparsify_ratio >= 1.0:
-        return n_params * 4
-    return int(n_params * sparsify_ratio) * 8
+    """Analytic upload size per node: dense f32 values, or (value, index)
+    pairs for a sparsified upload — the shared `repro.net` fallback
+    (`accumulator.upload_bytes` delegates to the same helper, pinned by
+    tests/test_net.py).  Byte-accurate accounting lives in `repro.net`."""
+    from ..net.codecs import analytic_upload_bytes
+    return analytic_upload_bytes(n_params, sparsify_ratio)

@@ -1,0 +1,58 @@
+"""Node-batched wire accounting — Pallas TPU kernel.
+
+`repro.net` prices every upload from its nonzero count (sparse codecs
+encode exactly the nonzero coordinates).  Counting nonzeros over a stacked
+(K, P) cohort naively reads the whole cohort once per reduction step; this
+kernel mirrors the `sparsify.py` fleet idiom — grid (node, block), one
+VMEM pass per block — and accumulates each node's count into a revisited
+(K, 1) output block, so the whole cohort is priced in a single launch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024
+
+
+def _fleet_kernel(g_ref, out_ref):
+    """Grid (node, block): out[node] accumulates the block's nonzero count
+    (zero padding contributes nothing by construction)."""
+    blk = pl.program_id(1)
+    cnt = jnp.sum(g_ref[0] != 0.0).astype(jnp.int32)
+
+    @pl.when(blk == 0)
+    def _init():
+        out_ref[0, 0] = jnp.int32(0)
+
+    out_ref[0, 0] = out_ref[0, 0] + cnt
+
+
+def nnz_fleet(flat: jnp.ndarray, *, block_rows: int = 256,
+              interpret: bool = True) -> jnp.ndarray:
+    """Per-node nonzero counts of a stacked cohort in one kernel launch.
+
+    flat (K, N) — stacked flattened uploads.  Returns (K,) int32.
+    """
+    k, n = flat.shape
+    cols = LANE
+    rows_total = -(-n // cols)
+    pad = rows_total * cols - n
+    g = jnp.pad(flat, ((0, 0), (0, pad))).reshape(k, rows_total, cols)
+    nb = -(-rows_total // block_rows)
+    pad_r = nb * block_rows - rows_total
+    if pad_r:
+        g = jnp.pad(g, ((0, 0), (0, pad_r), (0, 0)))
+
+    out = pl.pallas_call(
+        _fleet_kernel,
+        grid=(k, nb),
+        in_specs=[
+            pl.BlockSpec((1, block_rows, cols), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.int32),
+        interpret=interpret,
+    )(g)
+    return out.reshape(k)

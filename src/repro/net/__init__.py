@@ -1,0 +1,28 @@
+"""`repro.net`: byte-accurate wire codecs + virtual-time link simulation.
+
+Three layers (see ISSUE/README "Network simulation"):
+
+  * `codecs`  — encode a DGC-sparsified, ALDP-noised update to an actual
+    byte payload (``dense_f32`` / ``sparse_coo`` / ``sparse_bitpack`` with
+    a quantized-value variant), exact decode round-trips, and the
+    node-batched `batched_encoded_bytes` accounting path
+    (`kernels.wire_bytes` Pallas pass or vectorized jnp fallback);
+  * `link`    — per-node bandwidth/latency/jitter/packet-loss drawn from
+    declarative `LinkProfile` distributions plus optional shared-uplink
+    contention, producing per-upload transfer times in virtual seconds;
+  * `bridge`  — `NetSim`, the object the fleet engines hold: pre-flight
+    `draw` feeds the engines' node clocks, post-flight `commit` streams
+    exact encoded bytes into a `NetTrace` that replaces the analytic
+    comm accounting in `RunReport`.
+
+Enabled per experiment through `api.NetworkSpec`; with the spec at its
+defaults nothing here runs and the engines keep their analytic model.
+"""
+from .bridge import (NetSim, NetTrace, UploadDraw,  # noqa: F401
+                     netsim_from_network)
+from .codecs import (CODEC_NAMES, Codec, DenseF32, SparseBitpack,  # noqa: F401
+                     SparseCoo, WireMessage, analytic_upload_bytes,
+                     batched_encoded_bytes, count_nnz, get_codec,
+                     index_bits)
+from .link import (LinkProfile, draw_transfer,  # noqa: F401
+                   materialize_bandwidth)

@@ -1,0 +1,189 @@
+"""Engine bridge: per-upload transfer times + the NetTrace byte stream.
+
+`NetSim` is what the fleet engines hold when a `NetworkSpec` enables the
+network subsystem.  The handshake per round/window is two-phase, matching
+the engines' host/device split:
+
+  1. ``draw(nodes)`` — *before* the device program runs: sample each
+     upload's virtual transfer time (codec nominal payload size + the
+     `LinkProfile`'s stochastic jitter/loss/contention) so the times can
+     feed the jitted clock updates / arrival composition;
+  2. ``commit(draw, nnz)`` — *after* the program returns the measured
+     per-upload nonzero counts: resolve exact encoded byte counts through
+     the codec and append them to the `NetTrace`.
+
+The transfer simulation uses the codec's *nominal* payload size (the
+analytic nonzero count for the configured sparsity — static per run,
+needed pre-flight); the byte *accounting* is exact per upload.  The two
+differ only by DGC quantile tie-breaking, a sub-percent effect on
+per-upload times and zero effect on reported bytes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .codecs import Codec, get_codec
+from .link import LinkProfile, draw_transfer, materialize_bandwidth
+
+
+@dataclass
+class UploadDraw:
+    """One batch of pre-flight transfer draws (a window/round's uploads)."""
+    nodes: np.ndarray           # (U,) int node ids
+    seqs: np.ndarray            # (U,) int per-node upload sequence numbers
+    transfer_s: np.ndarray      # (U,) float64 virtual transfer times
+    overhead_bytes: np.ndarray  # (U,) float64 retransmitted bytes
+    retransmits: np.ndarray     # (U,) int retransmitted packets
+
+
+@dataclass
+class NetTrace:
+    """The accounting stream: exact encoded bytes per committed upload.
+
+    Per-upload columns stay host-side numpy lists (cheap at simulation
+    scale); `summary` reduces them to the totals `RunReport` carries.
+    """
+    codec: str
+    nodes: List[int] = field(default_factory=list)
+    seqs: List[int] = field(default_factory=list)
+    nnz: List[int] = field(default_factory=list)
+    encoded_bytes: List[int] = field(default_factory=list)
+    wire_bytes: List[float] = field(default_factory=list)
+    transfer_s: List[float] = field(default_factory=list)
+    retransmits: List[int] = field(default_factory=list)
+
+    @property
+    def n_uploads(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def total_encoded_bytes(self) -> float:
+        return float(np.sum(self.encoded_bytes)) if self.nodes else 0.0
+
+    def summary(self) -> Dict:
+        return {
+            "codec": self.codec,
+            "n_uploads": self.n_uploads,
+            "encoded_bytes": self.total_encoded_bytes,
+            "wire_bytes": (float(np.sum(self.wire_bytes))
+                           if self.nodes else 0.0),
+            "transfer_s": (float(np.sum(self.transfer_s))
+                           if self.nodes else 0.0),
+            "retransmits": int(np.sum(self.retransmits))
+            if self.nodes else 0,
+        }
+
+
+class NetSim:
+    """Per-fleet network simulator: codec + materialized links + trace.
+
+    Args:
+      codec: a `codecs.Codec` (or registry name).
+      link: the declarative `LinkProfile`.
+      bandwidth_bps: (N,) per-node base uplink rates (the fleet's
+        `NodeProfile.bandwidth_bps`) — `link.bandwidth_sigma` scales them
+        lognormally per node at construction.
+      n_params: model size (codec byte formulas need the index width).
+      sparsify_ratio: the DGC keep fraction — sets the nominal nonzero
+        count the pre-flight transfer draws assume.
+      seed: root of the counter-based per-upload PRNG chain.
+    """
+
+    def __init__(self, codec, link: LinkProfile, bandwidth_bps: np.ndarray,
+                 n_params: int, sparsify_ratio: float = 1.0, seed: int = 0):
+        self.codec: Codec = (get_codec(codec) if isinstance(codec, str)
+                             else codec)
+        link.validate()
+        self.link = link
+        self.seed = int(seed)
+        self.n_params = int(n_params)
+        self.eff_bandwidth_bps = materialize_bandwidth(
+            bandwidth_bps, link.bandwidth_sigma, seed)
+        self.nominal_nnz = (int(n_params) if sparsify_ratio >= 1.0
+                            else int(n_params * sparsify_ratio))
+        self.nominal_payload_bytes = int(
+            np.asarray(self.codec.nbytes(self.nominal_nnz, self.n_params)))
+        self._counters = np.zeros(self.eff_bandwidth_bps.shape[0], np.int64)
+        self.trace = NetTrace(codec=self.codec.describe())
+
+    # -- phase 1: pre-flight transfer times ---------------------------------
+    def draw(self, nodes: np.ndarray) -> UploadDraw:
+        """Sample transfer times for one batch of concurrent uploads and
+        advance each node's upload counter.  Concurrency for the shared-
+        uplink cap is the batch size.
+
+        Links with no stochastic component (loss_prob == jitter_s == 0 —
+        heterogeneous-bandwidth and contention regimes) are computed fully
+        vectorized with no per-upload PRNG construction; stochastic links
+        pay one counter-based (seed, node, seq) stream per upload (the
+        determinism contract — vectorizing those draws with a batched
+        counter-based bit generator is a ROADMAP follow-up)."""
+        nodes = np.asarray(nodes, np.int64)   # unique per batch (one window/
+        u = nodes.size                        # cohort row set per draw)
+        seqs = self._counters[nodes].copy()
+        np.add.at(self._counters, nodes, 1)
+        link = self.link
+        if link.loss_prob == 0.0 and link.jitter_s == 0.0:
+            bw = self.eff_bandwidth_bps[nodes]
+            if link.shared_uplink_bps > 0.0:
+                bw = np.minimum(bw, link.shared_uplink_bps / max(1, u))
+            transfer = (link.latency_s
+                        + float(self.nominal_payload_bytes) / bw)
+            return UploadDraw(nodes=nodes, seqs=seqs, transfer_s=transfer,
+                              overhead_bytes=np.zeros(u),
+                              retransmits=np.zeros(u, np.int64))
+        transfer = np.empty(u, np.float64)
+        overhead = np.empty(u, np.float64)
+        retrans = np.empty(u, np.int64)
+        for i, node in enumerate(nodes):
+            transfer[i], overhead[i], retrans[i] = draw_transfer(
+                link, self.nominal_payload_bytes,
+                self.eff_bandwidth_bps[node], self.seed, int(node),
+                int(seqs[i]), concurrency=u)
+        return UploadDraw(nodes=nodes, seqs=seqs, transfer_s=transfer,
+                          overhead_bytes=overhead, retransmits=retrans)
+
+    # -- phase 2: exact byte accounting -------------------------------------
+    def commit(self, draw: UploadDraw, nnz: np.ndarray) -> np.ndarray:
+        """Resolve the batch's exact encoded bytes from the measured
+        nonzero counts and append every upload to the trace.  Returns the
+        (U,) encoded byte counts."""
+        nnz = np.asarray(nnz, np.int64)
+        if nnz.shape != draw.nodes.shape:
+            raise ValueError(f"commit: nnz shape {nnz.shape} != draw batch "
+                             f"{draw.nodes.shape}")
+        enc = np.asarray(self.codec.nbytes(nnz, self.n_params), np.int64)
+        t = self.trace
+        t.nodes.extend(int(x) for x in draw.nodes)
+        t.seqs.extend(int(x) for x in draw.seqs)
+        t.nnz.extend(int(x) for x in nnz)
+        t.encoded_bytes.extend(int(x) for x in enc)
+        t.wire_bytes.extend(float(e + o) for e, o in
+                            zip(enc, draw.overhead_bytes))
+        t.transfer_s.extend(float(x) for x in draw.transfer_s)
+        t.retransmits.extend(int(x) for x in draw.retransmits)
+        return enc
+
+    def summary(self) -> Dict:
+        return self.trace.summary()
+
+
+def netsim_from_network(network, bandwidth_bps: np.ndarray, n_params: int,
+                        sparsify_ratio: float, seed: int
+                        ) -> Optional["NetSim"]:
+    """Build a `NetSim` from an `api.NetworkSpec`-shaped object (anything
+    with the codec/value_bits/link fields), or None when the spec keeps
+    the analytic behaviour (``codec == "analytic"``)."""
+    if network is None or network.codec == "analytic":
+        return None
+    codec = get_codec(network.codec, value_bits=network.value_bits)
+    link = LinkProfile(
+        bandwidth_sigma=network.bandwidth_sigma,
+        latency_s=network.latency_s, jitter_s=network.jitter_s,
+        loss_prob=network.loss_prob, mtu_bytes=network.mtu_bytes,
+        shared_uplink_bps=network.shared_uplink_bps)
+    return NetSim(codec, link, bandwidth_bps, n_params,
+                  sparsify_ratio=sparsify_ratio, seed=seed)

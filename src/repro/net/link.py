@@ -1,0 +1,102 @@
+"""Virtual-time link model: what an upload's bytes cost to move.
+
+A `LinkProfile` declares per-node link behaviour as distributions rather
+than scalars: a lognormal per-node bandwidth scale on top of the fleet's
+`NodeProfile` uplink rates, a fixed propagation latency, exponential
+per-upload jitter, an MTU-packetized loss/retransmit model, and an
+optional shared-uplink contention cap.  `materialize_bandwidth` resolves
+the per-node rates once per run; `draw_transfer` samples one upload's
+transfer time.
+
+Determinism: every stochastic draw is keyed by ``(seed, node, upload
+sequence number)`` through a counter-based `numpy` `SeedSequence` — the
+k-th upload of node i costs the same virtual time no matter how arrivals
+bucket into windows or rounds (property-tested in
+tests/test_net_properties.py).  The one exception is shared-uplink
+contention, which by construction depends on how many uploads share the
+window.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LinkProfile:
+    """Declarative per-upload link behaviour (all defaults = an ideal
+    link: transfer time is exactly payload_bytes / node_bandwidth)."""
+    bandwidth_sigma: float = 0.0    # lognormal sigma of per-node uplink scale
+    latency_s: float = 0.0          # fixed propagation latency per upload
+    jitter_s: float = 0.0           # exponential jitter scale per upload
+    loss_prob: float = 0.0          # per-packet loss probability
+    mtu_bytes: int = 1500           # packet size for the loss model
+    shared_uplink_bps: float = 0.0  # >0 => uplink capacity shared by every
+                                    # concurrent upload in a window/round
+
+    def validate(self) -> None:
+        if self.bandwidth_sigma < 0:
+            raise ValueError(f"bandwidth_sigma must be >= 0, got "
+                             f"{self.bandwidth_sigma}")
+        if self.latency_s < 0 or self.jitter_s < 0:
+            raise ValueError("latency_s and jitter_s must be >= 0")
+        if not 0.0 <= self.loss_prob < 1.0:
+            raise ValueError(f"loss_prob must be in [0, 1), got "
+                             f"{self.loss_prob}")
+        if self.mtu_bytes < 1:
+            raise ValueError(f"mtu_bytes must be >= 1, got {self.mtu_bytes}")
+        if self.shared_uplink_bps < 0:
+            raise ValueError(f"shared_uplink_bps must be >= 0, got "
+                             f"{self.shared_uplink_bps}")
+
+
+def materialize_bandwidth(base_bps: np.ndarray, sigma: float,
+                          seed: int) -> np.ndarray:
+    """Per-node effective uplink rates: the fleet profile's bandwidths
+    scaled by a lognormal factor exp(N(0, sigma)) — sigma=0 returns the
+    profile rates untouched (byte-for-byte the analytic model's)."""
+    base = np.asarray(base_bps, np.float64)
+    if sigma <= 0:
+        return base.copy()
+    rng = np.random.default_rng(np.random.SeedSequence([int(seed), 0xB]))
+    return base * np.exp(rng.normal(0.0, sigma, base.shape[0]))
+
+
+def _upload_rng(seed: int, node: int, seq: int) -> np.random.Generator:
+    """The (seed, node, upload#) counter-based stream — deterministic and
+    independent of batching."""
+    return np.random.default_rng(
+        np.random.SeedSequence([int(seed), int(node), int(seq)]))
+
+
+def draw_transfer(link: LinkProfile, payload_bytes: float, node_bw_bps: float,
+                  seed: int, node: int, seq: int,
+                  concurrency: int = 1) -> Tuple[float, float, int]:
+    """One upload's (transfer_s, wire_overhead_bytes, retransmits).
+
+    transfer = latency + jitter + wire_bytes / effective_bandwidth, where
+    wire_bytes = payload + retransmits·MTU (each of the payload's
+    ceil(bytes/MTU) packets is resent until it survives loss_prob, the
+    retransmit count drawn negative-binomially in one shot) and the
+    effective bandwidth is the node uplink, capped at
+    shared_uplink_bps / concurrency when a shared uplink is declared.
+    """
+    retrans = 0
+    jitter = 0.0
+    if link.loss_prob > 0.0 or link.jitter_s > 0.0:
+        rng = _upload_rng(seed, node, seq)
+        if link.loss_prob > 0.0:
+            packets = max(1, -(-int(payload_bytes) // link.mtu_bytes))
+            retrans = int(rng.negative_binomial(packets,
+                                                1.0 - link.loss_prob))
+        if link.jitter_s > 0.0:
+            jitter = float(rng.exponential(link.jitter_s))
+    overhead = float(retrans * link.mtu_bytes)
+    bw = float(node_bw_bps)
+    if link.shared_uplink_bps > 0.0:
+        bw = min(bw, link.shared_uplink_bps / max(1, concurrency))
+    transfer = (link.latency_s + jitter
+                + (float(payload_bytes) + overhead) / bw)
+    return transfer, overhead, retrans

@@ -371,7 +371,13 @@ def test_append_json_records_stamps_schema(tmp_path):
     with open(path) as f:
         traj = json.load(f)
     assert len(traj) == 2
-    assert all(t["schema_version"] == api.SCHEMA_VERSION for t in traj)
+    # unstamped records get the current version; explicitly-stamped v1
+    # records keep their (still-accepted) stamp — mixed trajectories stay
+    # interpretable across the v2 bump
+    assert traj[0]["schema_version"] == api.SCHEMA_VERSION
+    assert traj[1]["schema_version"] == 1
+    assert all(t["schema_version"] in api.ACCEPTED_SCHEMA_VERSIONS
+               for t in traj)
 
 
 _window_strategy = st.one_of(

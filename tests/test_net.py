@@ -1,0 +1,461 @@
+"""`repro.net` acceptance suite: codecs, link model, engine bridge.
+
+* Codecs: exact encode/decode round trips for the sparse codecs, bounded
+  error for the quantized variant, measured payload length == closed-form
+  `nbytes`, and `sparse_bitpack` strictly under `dense_f32` at the paper's
+  sparsity ratios.
+* Batched accounting: the Pallas `nnz_fleet` pass, the jnp fallback and
+  per-row real encoding all agree.
+* Comm-accounting dedup: `fleet.stages.bytes_per_node` and
+  `core.accumulator.upload_bytes` pinned to the shared analytic helper
+  (and to their pre-refactor values).
+* NetworkSpec: compile_plan validation, JSON round trips (v2 stamped, v1
+  accepted), RunReport.net + RoundRecord.bytes_source round trips.
+* Engine bridge: with `NetworkSpec` at defaults every schedule reproduces
+  the analytic trajectories exactly; with a heterogeneous lossy network
+  the async arrival order demonstrably shifts and the report's byte
+  totals equal the NetTrace's encoded bytes.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, net
+from repro.core import accumulator as accum
+from repro.core import detection
+from repro.fleet import stages as fleet_stages
+from repro.net.codecs import analytic_upload_bytes
+
+PAPER_RATIOS = (0.05, 0.1, 0.25, 0.5)
+
+
+def _sparse_update(n_params: int, nnz: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    u = np.zeros(n_params, np.float32)
+    if nnz:
+        idx = rng.choice(n_params, nnz, replace=False)
+        u[idx] = rng.normal(size=nnz).astype(np.float32)
+    return u
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["dense_f32", "sparse_coo",
+                                  "sparse_bitpack"])
+def test_codec_exact_round_trip_and_measured_bytes(name):
+    u = _sparse_update(4097, 300)
+    codec = net.get_codec(name)
+    msg = codec.encode(u)
+    assert np.array_equal(codec.decode(msg), u)          # exact
+    nnz = int((u != 0).sum())
+    assert msg.nbytes == int(np.asarray(codec.nbytes(nnz, u.size)))
+
+
+@pytest.mark.parametrize("value_bits", [8, 16])
+def test_quantized_bitpack_round_trip_bounded(value_bits):
+    u = _sparse_update(2048, 150, seed=3)
+    codec = net.get_codec("sparse_bitpack", value_bits=value_bits)
+    msg = codec.encode(u)
+    dec = codec.decode(msg)
+    scale = msg.meta["scale"]
+    assert float(np.abs(dec - u).max()) <= scale / 2 + 1e-6
+    # the sparsity pattern survives quantization exactly
+    assert set(np.flatnonzero(dec)) <= set(np.flatnonzero(u))
+    assert msg.nbytes == int(np.asarray(codec.nbytes(150, u.size)))
+
+
+def test_empty_and_dense_edge_cases():
+    zeros = np.zeros(1000, np.float32)
+    for name in ("sparse_coo", "sparse_bitpack"):
+        codec = net.get_codec(name)
+        msg = codec.encode(zeros)
+        assert np.array_equal(codec.decode(msg), zeros)
+        assert msg.nbytes == int(np.asarray(codec.nbytes(0, 1000)))
+    dense = np.arange(1.0, 9.0, dtype=np.float32)
+    codec = net.get_codec("dense_f32")
+    assert np.array_equal(codec.decode(codec.encode(dense)), dense)
+
+
+@pytest.mark.parametrize("ratio", PAPER_RATIOS)
+def test_bitpack_strictly_beats_dense_at_paper_ratios(ratio):
+    """The acceptance bar: sparse_bitpack < dense_f32 bytes at every
+    sparsity ratio the paper operates at, measured on real payloads."""
+    n = 50_000
+    u = _sparse_update(n, int(n * ratio))
+    dense = net.get_codec("dense_f32").encode(u).nbytes
+    bitpack = net.get_codec("sparse_bitpack").encode(u).nbytes
+    assert bitpack < dense
+    # quantized variants compress further still
+    q8 = net.get_codec("sparse_bitpack", value_bits=8).encode(u).nbytes
+    assert q8 < bitpack
+
+
+def test_get_codec_rejects_unknown_and_bad_value_bits():
+    with pytest.raises(ValueError, match="unknown codec"):
+        net.get_codec("zstd")
+    with pytest.raises(ValueError, match="sparse_bitpack"):
+        net.get_codec("dense_f32", value_bits=8)
+    with pytest.raises(ValueError, match="value_bits"):
+        net.get_codec("sparse_bitpack", value_bits=12)
+
+
+def test_batched_encoded_bytes_pallas_matches_reference_and_encode():
+    """The node-batched accounting path: fused Pallas nnz pass == jnp
+    fallback == per-row real encoding, across mixed sparsity rows."""
+    rows = [_sparse_update(3000, k, seed=k) for k in (0, 1, 50, 1500, 3000)]
+    flat = jnp.asarray(np.stack(rows))
+    codec = net.get_codec("sparse_bitpack")
+    ref = net.batched_encoded_bytes(flat, codec, backend="reference")
+    pal = net.batched_encoded_bytes(flat, codec, backend="pallas")
+    per_row = [codec.encode(r).nbytes for r in rows]
+    assert list(ref) == per_row
+    assert list(pal) == per_row
+
+
+# ---------------------------------------------------------------------------
+# comm-accounting dedup (satellite): one analytic helper, two call sites
+# ---------------------------------------------------------------------------
+
+def test_analytic_helper_pins_both_legacy_call_sites():
+    """`stages.bytes_per_node` and `accumulator.upload_bytes` must produce
+    exactly their pre-refactor values, and agree with each other, for a
+    grid of (n_params, ratio) — both are now the one shared helper."""
+    tree = {"a": jnp.zeros((100, 10)), "b": jnp.zeros((237,))}
+    n_params = 1237
+    for ratio in (0.01, 0.1, 0.33, 0.5, 0.99, 1.0):
+        # the pre-refactor formulas, inlined as the regression oracle
+        old_stages = (n_params * 4 if ratio >= 1.0
+                      else int(n_params * ratio) * 8)
+        old_accum = (n_params * 4 if ratio >= 1.0
+                     else int(n_params * min(ratio, 1.0)) * 8)
+        assert fleet_stages.bytes_per_node(n_params, ratio) == old_stages
+        assert accum.upload_bytes(tree, ratio) == old_accum
+        assert analytic_upload_bytes(n_params, ratio) == old_stages
+    assert accum.upload_bytes(tree, 1.0, bytes_per_value=2) == n_params * 2
+
+
+# ---------------------------------------------------------------------------
+# NetworkSpec: validation + serialization
+# ---------------------------------------------------------------------------
+
+def _spec(**kw):
+    base = dict(
+        fleet=api.FleetSpec(n_nodes=4, samples_per_node=20, n_test=32,
+                            n_cloud_test=16),
+        schedule=api.SchedulePolicy(kind="async"),
+        train=api.TrainSpec(local_steps=1, batch_size=4, lr=0.1),
+        rounds=1)
+    base.update(kw)
+    return api.ExperimentSpec(**base)
+
+
+@pytest.mark.parametrize("bad,match", [
+    (api.NetworkSpec(codec="gzip"), "network.codec"),
+    (api.NetworkSpec(codec="sparse_bitpack", value_bits=12), "value_bits"),
+    (api.NetworkSpec(codec="sparse_coo", value_bits=8), "quantized-value"),
+    (api.NetworkSpec(codec="dense_f32", loss_prob=1.0), "loss_prob"),
+    (api.NetworkSpec(codec="dense_f32", latency_s=-1.0), "latency"),
+    (api.NetworkSpec(codec="dense_f32", mtu_bytes=0), "mtu"),
+    (api.NetworkSpec(loss_prob=0.5), "link simulation needs a wire codec"),
+    (api.NetworkSpec(jitter_s=0.1), "link simulation needs a wire codec"),
+])
+def test_compile_plan_rejects_bad_network(bad, match):
+    with pytest.raises(api.SpecError, match=match):
+        api.compile_plan(_spec(network=bad))
+
+
+def test_compile_plan_rejects_network_on_sequential_topology():
+    with pytest.raises(api.SpecError, match="no network simulation"):
+        api.compile_plan(_spec(
+            network=api.NetworkSpec(codec="dense_f32"),
+            topology=api.Topology(kind="sequential")))
+
+
+def test_compile_plan_lowers_network_stages():
+    plan = api.compile_plan(_spec(
+        network=api.NetworkSpec(codec="sparse_bitpack", loss_prob=0.1),
+        compression=api.CompressionSpec(sparsify_ratio=0.5)))
+    assert plan.net_codec == "sparse_bitpack"
+    assert "wire_encode[sparse_bitpack]" in plan.stages
+    assert "link_sim" in plan.stages
+    plan0 = api.compile_plan(_spec())
+    assert plan0.net_codec is None
+    assert not any(s.startswith("wire") for s in plan0.stages)
+
+
+def test_network_spec_json_round_trip_and_v1_acceptance():
+    spec = _spec(network=api.NetworkSpec(
+        codec="sparse_bitpack", value_bits=8, bandwidth_sigma=0.5,
+        latency_s=0.01, jitter_s=0.1, loss_prob=0.05,
+        shared_uplink_bps=1e8))
+    d = spec.to_dict()
+    assert d["schema_version"] == api.SCHEMA_VERSION == 2
+    assert api.ExperimentSpec.from_dict(d) == spec
+    # v1 payloads (no network section) still load, with analytic defaults
+    v1 = _spec().to_dict()
+    v1.pop("network")
+    v1["schema_version"] = 1
+    loaded = api.ExperimentSpec.from_dict(v1)
+    assert loaded.network == api.NetworkSpec()
+    v0 = dict(v1, schema_version=0)
+    with pytest.raises(ValueError, match="schema_version"):
+        api.ExperimentSpec.from_dict(v0)
+
+
+def test_report_round_trip_with_net_and_bytes_source():
+    from repro.core.federated import RoundRecord
+    rep = api.RunReport(
+        mode="async", engine="fleet",
+        records=[RoundRecord(1.0, 0, 0.5, 1e4, 2.0, 0.1, 0,
+                             bytes_source="encoded")],
+        kappa=0.1, net={"codec": "sparse_coo", "n_uploads": 4,
+                        "encoded_bytes": 1e4, "wire_bytes": 1.2e4,
+                        "transfer_s": 0.4, "retransmits": 2})
+    d = rep.to_dict()
+    assert d["schema_version"] == 2
+    assert d["records"][0]["bytes_source"] == "encoded"
+    rep2 = api.RunReport.from_json(rep.to_json())
+    assert rep2 == dataclasses.replace(rep, final_params=None)
+    # v1 report records (no bytes_source) load as analytic
+    v1 = json.loads(rep.to_json())
+    v1["schema_version"] = 1
+    del v1["net"]
+    for r in v1["records"]:
+        del r["bytes_source"]
+    loaded = api.RunReport.from_dict(v1)
+    assert loaded.records[0].bytes_source == "analytic"
+    assert loaded.net is None
+
+
+# ---------------------------------------------------------------------------
+# engine bridge: defaults == analytic trajectories; lossy shifts arrivals
+# ---------------------------------------------------------------------------
+
+N, ROUNDS = 5, 2
+
+
+@pytest.fixture(scope="module")
+def small_spec():
+    return api.ExperimentSpec(
+        fleet=api.FleetSpec(n_nodes=N, samples_per_node=24, n_test=64,
+                            n_cloud_test=32,
+                            attack=api.AttackMix(malicious_frac=0.2),
+                            profile=api.NodeHeterogeneity(heterogeneity=0.8)),
+        privacy=api.PrivacySpec(sigma=0.05),
+        compression=api.CompressionSpec(sparsify_ratio=0.5),
+        defense=api.DefenseSpec(detect=True),
+        train=api.TrainSpec(local_steps=2, batch_size=8, lr=0.1),
+        rounds=ROUNDS, seed=0)
+
+
+def _with(spec, **kw):
+    return dataclasses.replace(spec, **kw)
+
+
+@pytest.mark.parametrize("kind", ["sync", "async", "buffered"])
+def test_default_network_reproduces_analytic_trajectories(kind, small_spec):
+    """NetworkSpec() (analytic) must be observationally identical to the
+    pre-net engines for every schedule — the explicit-default spec and the
+    field-omitted spec run the same engines with net=None."""
+    base = _with(small_spec, schedule=api.SchedulePolicy(kind=kind))
+    explicit = _with(base, network=api.NetworkSpec())
+    rep_a = api.run(api.compile_plan(base))
+    rep_b = api.run(api.compile_plan(explicit))
+    assert rep_a.net is None and rep_b.net is None
+    assert [dataclasses.replace(r) for r in rep_a.records] == rep_b.records
+    assert all(r.bytes_source == "analytic" for r in rep_a.records)
+    assert rep_a.kappa == rep_b.kappa
+
+
+def _arrival_sequence(spec, windows=10):
+    """The per-window processed-node-id sequences of an async engine."""
+    plan = api.compile_plan(spec)
+    eng = api.make_engine(plan, api.materialize(spec))
+    seqs = []
+    for _ in range(windows):
+        order, proc = eng.select_window()
+        seqs.append(tuple(order[proc]))
+        eng.run_window(evaluate=False)
+    return eng, seqs
+
+
+def test_lossy_heterogeneous_network_shifts_async_composition(small_spec):
+    """The acceptance bar: a heterogeneous lossy link demonstrably changes
+    which arrivals land in which window (the network drives the clocks),
+    and the run's byte totals equal the NetTrace's encoded bytes."""
+    base = _with(small_spec,
+                 schedule=api.SchedulePolicy(kind="async"), rounds=4)
+    lossy = _with(base, network=api.NetworkSpec(
+        codec="sparse_bitpack", bandwidth_sigma=2.0, latency_s=0.05,
+        jitter_s=2.0, loss_prob=0.3))
+    _, seq_analytic = _arrival_sequence(base)
+    eng, seq_lossy = _arrival_sequence(lossy)
+    assert seq_analytic != seq_lossy, \
+        "arrival/window composition must respond to the network"
+    # byte accounting: every window's comm_bytes is the codec's measured
+    # pricing, and the engine history sums to the trace total
+    hist_bytes = sum(r.comm_bytes for r in eng.history)
+    assert hist_bytes == eng.net.trace.total_encoded_bytes
+    assert eng.net.trace.n_uploads == \
+        sum(r.n_processed for r in eng.history)
+
+
+def test_async_net_report_bytes_equal_trace(small_spec):
+    spec = _with(small_spec,
+                 schedule=api.SchedulePolicy(kind="async"),
+                 network=api.NetworkSpec(codec="sparse_coo",
+                                         bandwidth_sigma=1.0,
+                                         loss_prob=0.2, jitter_s=0.1))
+    rep = api.run(api.compile_plan(spec))
+    assert rep.net is not None and rep.net["codec"] == "sparse_coo"
+    assert all(r.bytes_source == "encoded" for r in rep.records)
+    assert sum(r.comm_bytes for r in rep.records) == \
+        rep.net["encoded_bytes"]
+    # kappa derives from the link-model comm times, not the analytic ones
+    comm = sum(r.comm_time for r in rep.records)
+    assert comm == pytest.approx(rep.net["transfer_s"])
+
+
+def test_sync_net_report_bytes_equal_trace(small_spec):
+    spec = _with(small_spec,
+                 schedule=api.SchedulePolicy(kind="sync"),
+                 network=api.NetworkSpec(codec="sparse_bitpack",
+                                         value_bits=8, latency_s=0.01,
+                                         loss_prob=0.1))
+    rep = api.run(api.compile_plan(spec))
+    assert rep.net is not None
+    assert sum(r.comm_bytes for r in rep.records) == \
+        rep.net["encoded_bytes"]
+    assert rep.net["n_uploads"] == N * ROUNDS
+    assert all(r.bytes_source == "encoded" for r in rep.records)
+
+
+def test_encoded_bytes_track_measured_sparsity(small_spec):
+    """Measured pricing: at ratio 0.5 the sparse payloads must land close
+    to the analytic nominal count but be derived from the actual per-leaf
+    DGC splits (total nnz within a few % of nominal, not equal to the
+    dense count)."""
+    spec = _with(small_spec,
+                 schedule=api.SchedulePolicy(kind="sync"),
+                 network=api.NetworkSpec(codec="sparse_coo"))
+    plan = api.compile_plan(spec)
+    eng = api.make_engine(plan, api.materialize(spec))
+    eng.run_round()
+    nnz = np.asarray(eng.net.trace.nnz)
+    nominal = eng.net.nominal_nnz
+    assert nnz.shape == (N,)
+    assert (np.abs(nnz - nominal) < 0.05 * nominal).all()
+    assert (nnz < eng.n_params).all()
+
+
+def test_mesh_topology_runs_net_and_bytes_equal_trace():
+    """The mesh path carries the network subsystem too: on a forced
+    2-device host, sync and async runs with a lossy codec-enabled network
+    produce encoded byte totals equal to their NetTrace (subprocess
+    pattern from test_fleet_shard.py)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import json
+        import jax
+        from repro import api
+
+        out = {"n_devices": len(jax.devices())}
+        for kind in ("sync", "async"):
+            spec = api.ExperimentSpec(
+                fleet=api.FleetSpec(n_nodes=5, samples_per_node=20,
+                                    n_test=32, n_cloud_test=16,
+                                    profile=api.NodeHeterogeneity(
+                                        heterogeneity=0.8)),
+                schedule=api.SchedulePolicy(kind=kind),
+                compression=api.CompressionSpec(sparsify_ratio=0.5),
+                network=api.NetworkSpec(codec="sparse_bitpack",
+                                        bandwidth_sigma=1.0,
+                                        loss_prob=0.2, jitter_s=0.1),
+                topology=api.Topology(kind="mesh", devices=2),
+                train=api.TrainSpec(local_steps=2, batch_size=8, lr=0.1),
+                rounds=2, seed=0)
+            rep = api.run(api.compile_plan(spec))
+            out[kind] = {
+                "engine": rep.engine,
+                "sum_bytes": sum(r.comm_bytes for r in rep.records),
+                "trace_bytes": rep.net["encoded_bytes"],
+                "n_uploads": rep.net["n_uploads"],
+                "sources": sorted({r.bytes_source for r in rep.records}),
+            }
+        print(json.dumps(out))
+    """)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    assert rec["n_devices"] == 2
+    for kind in ("sync", "async"):
+        got = rec[kind]
+        assert got["engine"] == "fleet-mesh"
+        assert got["sum_bytes"] == got["trace_bytes"] > 0
+        assert got["n_uploads"] == 10          # 5 nodes x 2 rounds
+        assert got["sources"] == ["encoded"]
+
+
+# ---------------------------------------------------------------------------
+# buffered staleness weights (satellite)
+# ---------------------------------------------------------------------------
+
+def test_masked_weighted_mean_uniform_equals_masked_mean():
+    """The parity contract: uniform weights reproduce the FedBuff masked
+    mean bit-for-bit."""
+    rng = np.random.default_rng(0)
+    trees = {"w": jnp.asarray(rng.normal(size=(6, 4, 3)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(6, 5)).astype(np.float32))}
+    for mask in (np.array([1, 0, 1, 1, 0, 1], bool),
+                 np.zeros(6, bool), np.ones(6, bool)):
+        m = jnp.asarray(mask)
+        uniform = detection.masked_weighted_mean(trees, m, jnp.ones(6))
+        plain = detection.masked_mean(trees, m)
+        for a, b in zip(jax.tree.leaves(uniform), jax.tree.leaves(plain)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_staleness_weights_discount_stale_updates():
+    taus = jnp.asarray([0, 1, 3, 10])
+    w = np.asarray(detection.staleness_weights(taus, 0.5))
+    assert w[0] == 1.0
+    assert (np.diff(w) < 0).all()
+    np.testing.assert_allclose(w, (1.0 + np.asarray(taus)) ** -0.5,
+                               rtol=1e-6)
+
+
+def test_buffered_staleness_adaptive_runs_and_differs(small_spec):
+    """The SchedulePolicy knob: staleness-weighted FedBuff runs end to end;
+    with the load-aware fat windows (real staleness spread) it produces a
+    different trajectory than the uniform mean, while uniform stays the
+    pre-PR buffered path."""
+    base = _with(small_spec, schedule=api.SchedulePolicy(
+        kind="buffered", window=api.TargetArrivalsWindow(target_arrivals=N)),
+        rounds=4)
+    adaptive = _with(base, schedule=dataclasses.replace(
+        base.schedule, staleness_adaptive=True, staleness_a=0.9))
+    rep_u = api.run(api.compile_plan(base))
+    rep_s = api.run(api.compile_plan(adaptive))
+    assert len(rep_u.records) == len(rep_s.records)
+    # same arrival schedule (weights don't touch clocks) ...
+    assert [r.t for r in rep_u.records] == [r.t for r in rep_s.records]
+    # ... different aggregation
+    pu = jax.tree.leaves(rep_u.final_params)
+    ps = jax.tree.leaves(rep_s.final_params)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(pu, ps))

@@ -1,0 +1,162 @@
+"""Hypothesis property tests for `repro.net` (skip cleanly without it).
+
+* Codec round trips over arbitrary sparsity patterns — duplicate-free
+  index sets, adversarial values, exactness for the f32 codecs and the
+  scale/2 error bound for the quantized variant, with measured payload
+  lengths always matching the closed-form `nbytes`.
+* Bit packing: `_pack_bits`/`_unpack_bits` inverse for any width.
+* Link-model determinism under the fixed counter-based PRNG chain: the
+  k-th upload of node i costs the same virtual time no matter how uploads
+  batch into windows, and two simulators with equal seeds agree draw for
+  draw.
+"""
+import numpy as np
+import pytest
+
+from _optional import HAVE_HYPOTHESIS, given, settings, st
+
+from repro import net
+from repro.net.codecs import _pack_bits, _unpack_bits, index_bits
+from repro.net.link import LinkProfile, draw_transfer
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+def _make_update(n: int, nnz_frac: float, seed: int, scale: float):
+    """(n_params, update) with a duplicate-free random support set."""
+    rng = np.random.default_rng(seed)
+    nnz = int(min(n, 200) * nnz_frac)
+    u = np.zeros(n, np.float32)
+    if nnz:
+        idx = rng.choice(n, nnz, replace=False)       # duplicate-free
+        vals = rng.normal(scale=scale, size=nnz)
+        vals[vals == 0] = 1.0                          # keep support exact
+        u[idx] = vals.astype(np.float32)
+    return n, u
+
+
+def sparse_updates():
+    # plain-strategy composition (st.composite has no no-hypothesis shim)
+    return st.builds(_make_update,
+                     n=st.integers(1, 3000),
+                     nnz_frac=st.floats(0.0, 1.0),
+                     seed=st.integers(0, 2**31 - 1),
+                     scale=st.floats(1e-3, 1e3)) if HAVE_HYPOTHESIS else None
+
+
+# ---------------------------------------------------------------------------
+# codec properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(nu=sparse_updates(),
+       name=st.sampled_from(["dense_f32", "sparse_coo", "sparse_bitpack"]))
+def test_codec_round_trip_property(nu, name):
+    n, u = nu
+    codec = net.get_codec(name)
+    msg = codec.encode(u)
+    dec = codec.decode(msg)
+    assert np.array_equal(dec, u)
+    nnz = int((u != 0).sum())
+    assert msg.nbytes == int(np.asarray(codec.nbytes(nnz, n)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(nu=sparse_updates(), value_bits=st.sampled_from([8, 16]))
+def test_quantized_codec_error_bound_property(nu, value_bits):
+    n, u = nu
+    codec = net.get_codec("sparse_bitpack", value_bits=value_bits)
+    msg = codec.encode(u)
+    dec = codec.decode(msg)
+    scale = msg.meta.get("scale", 1.0)
+    # |error| <= scale/2 per element (f32 rounding slack on top)
+    bound = scale / 2 + 1e-6 * max(1.0, scale)
+    assert float(np.abs(dec.astype(np.float64)
+                        - u.astype(np.float64)).max()) <= bound
+    # the support never grows (indices are exact)
+    assert set(np.flatnonzero(dec)) <= set(np.flatnonzero(u))
+    assert msg.nbytes == int(np.asarray(codec.nbytes(int((u != 0).sum()),
+                                                     n)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(1, 2**20),
+       seed=st.integers(0, 2**31 - 1),
+       count=st.integers(0, 64))
+def test_pack_unpack_bits_inverse(n, seed, count):
+    rng = np.random.default_rng(seed)
+    bits = index_bits(n)
+    vals = rng.integers(0, n, size=count)
+    buf = _pack_bits(vals, bits)
+    assert len(buf) == (count * bits + 7) // 8
+    assert np.array_equal(_unpack_bits(buf, bits, count), vals)
+
+
+# ---------------------------------------------------------------------------
+# link-model determinism
+# ---------------------------------------------------------------------------
+
+_link_strategy = st.builds(
+    LinkProfile,
+    bandwidth_sigma=st.floats(0.0, 2.0),
+    latency_s=st.floats(0.0, 1.0),
+    jitter_s=st.floats(0.0, 1.0),
+    loss_prob=st.floats(0.0, 0.9),
+    mtu_bytes=st.integers(64, 9000))
+
+
+@settings(max_examples=40, deadline=None)
+@given(link=_link_strategy, seed=st.integers(0, 2**31 - 1),
+       node=st.integers(0, 100), seq=st.integers(0, 1000))
+def test_draw_transfer_deterministic_per_upload(link, seed, node, seq):
+    """The fixed PRNG chain: the same (seed, node, seq) triple always
+    yields the same transfer time, and a different seq (fresh chain
+    counter) is free to differ."""
+    a = draw_transfer(link, 1e6, 1e6, seed, node, seq)
+    b = draw_transfer(link, 1e6, 1e6, seed, node, seq)
+    assert a == b
+    t, overhead, retrans = a
+    assert t >= link.latency_s
+    assert overhead == retrans * link.mtu_bytes
+    if link.loss_prob == 0.0:
+        assert retrans == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(link=_link_strategy, seed=st.integers(0, 2**31 - 1),
+       split=st.integers(1, 5))
+def test_netsim_draws_independent_of_batching(link, seed, split):
+    """Window composition must not change per-upload times (absent shared-
+    uplink contention): drawing 6 uploads in one batch or in two batches
+    split anywhere yields identical transfer times, byte overheads and
+    sequence numbers."""
+    bw = np.full(6, 2e6)
+    nodes = np.array([0, 1, 2, 3, 4, 5])
+    s1 = net.NetSim("sparse_coo", link, bw, 10_000, sparsify_ratio=0.1,
+                    seed=seed)
+    s2 = net.NetSim("sparse_coo", link, bw, 10_000, sparsify_ratio=0.1,
+                    seed=seed)
+    d1 = s1.draw(nodes)
+    d2a = s2.draw(nodes[:split])
+    d2b = s2.draw(nodes[split:])
+    merged_t = np.concatenate([d2a.transfer_s, d2b.transfer_s])
+    merged_seq = np.concatenate([d2a.seqs, d2b.seqs])
+    assert np.array_equal(d1.seqs, merged_seq)
+    assert np.array_equal(d1.transfer_s, merged_t)
+    # second pass advances every node's chain: same nodes, new seqs
+    d3 = s1.draw(nodes)
+    assert np.array_equal(d3.seqs, d1.seqs + 1)
+
+
+def test_shared_uplink_contention_depends_on_concurrency():
+    """The documented exception to batching-independence: a shared uplink
+    divides capacity across the window's concurrent uploads."""
+    link = LinkProfile(shared_uplink_bps=4e6)
+    bw = np.full(4, 1e9)                    # node uplinks never the cap
+    s_wide = net.NetSim("dense_f32", link, bw, 1000, seed=0)
+    s_solo = net.NetSim("dense_f32", link, bw, 1000, seed=0)
+    wide = s_wide.draw(np.arange(4))        # 4-way contention
+    solo = s_solo.draw(np.array([0]))       # alone on the uplink
+    assert wide.transfer_s[0] == pytest.approx(4 * solo.transfer_s[0])

@@ -7,7 +7,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== 1/5 import sweep (every repro.* and benchmarks.* module) =="
+echo "== 1/6 import sweep (every repro.* and benchmarks.* module) =="
 python - <<'EOF'
 import importlib
 import pkgutil
@@ -32,18 +32,21 @@ print(f"imported {len(mods) - len(failures)}/{len(mods)} modules")
 raise SystemExit(1 if failures else 0)
 EOF
 
-echo "== 2/5 tier-1 pytest =="
+echo "== 2/6 tier-1 pytest =="
 python -m pytest -q
 
-echo "== 3/5 fleet smokes on synthetic data (2 sync rounds + 2 async windows) =="
+echo "== 3/6 fleet smokes on synthetic data (2 sync rounds + 2 async windows) =="
 python -m benchmarks.fleet_scale --smoke
 python -m benchmarks.async_scale --smoke
 
-echo "== 4/5 multi-device sharded fleet smoke (4 forced host devices) =="
+echo "== 4/6 multi-device sharded fleet smoke (4 forced host devices) =="
 python -m benchmarks.fleet_shard --smoke
 
-echo "== 5/5 api smoke (spec -> plan -> run, every schedule x topology) =="
+echo "== 5/6 api smoke (spec -> plan -> run, every schedule x topology) =="
 python -m benchmarks.api_smoke
 XLA_FLAGS=--xla_force_host_platform_device_count=2 \
     python -m benchmarks.api_smoke --mesh 2
+
+echo "== 6/6 network smoke (wire codecs + lossy-link run) =="
+python -m benchmarks.net_sweep --smoke
 echo "CI OK"
