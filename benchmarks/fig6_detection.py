@@ -2,22 +2,58 @@
 
 (a) ASR — fraction of malicious-node updates that get aggregated;
 (b) global accuracy at each threshold.
+
+Each sweep point runs with the obs event stream on and cross-checks the
+figure inputs against the per-node detection audit log: the per-round
+rejection counts summed from ``detect.verdict`` instants must equal the
+counts in the run's own records.  Fig. 6 is thereby reconstructable from
+the trace alone — the audit log carries accuracy, threshold, and verdict
+for every cloud evaluation, not just the aggregate.
 """
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
+import tempfile
+
 from repro import api
 
-from .common import N_NODES, Timer, emit, prepare_mode
+from .common import N_NODES, Timer, emit, spec_for_mode
+
+
+def rejected_from_trace(path: str) -> int:
+    """Total rejections summed straight from the detection audit log."""
+    n = 0
+    with open(path) as fh:
+        for line in fh:
+            d = json.loads(line)
+            if (d.get("kind") == "instant"
+                    and d.get("name") == "detect.verdict"):
+                n += bool(d["tags"]["rejected"])
+    return n
 
 
 def run() -> None:
     for s in (50, 60, 70, 80, 90):
-        plan, pop = prepare_mode("aldpfl", n_malicious=3, detect=True,
-                                 detect_s=float(s))
-        with Timer() as t:
-            rep = api.run(plan, population=pop)
+        spec = spec_for_mode("aldpfl", n_malicious=3, detect=True,
+                             detect_s=float(s))
+        with tempfile.TemporaryDirectory() as td:
+            ev = os.path.join(td, f"fig6_s{s}_events.jsonl")
+            spec = dataclasses.replace(
+                spec, obs=api.ObsSpec(enabled=True, events_jsonl=ev))
+            plan = api.compile_plan(spec)
+            pop = api.materialize(spec)
+            with Timer() as t:
+                rep = api.run(plan, population=pop)
+            audit_rejected = rejected_from_trace(ev)
         total = len(rep.records) * N_NODES
         rejected = sum(r.n_rejected for r in rep.records)
+        if audit_rejected != rejected:
+            raise AssertionError(
+                f"s={s}: audit log says {audit_rejected} rejections, "
+                f"records say {rejected} — trace no longer reconstructs "
+                f"Fig. 6")
         # proxy ASR: malicious updates not rejected / malicious updates sent
         sent_malicious = len(rep.records) * 3
         asr = max(0.0, (sent_malicious - rejected) / sent_malicious)

@@ -1,27 +1,26 @@
 """Pallas kernel micro-benchmarks (interpret mode — correctness-path timing;
-derived column reports the HBM bytes the fused kernel saves on real TPU)."""
+derived column reports the HBM bytes the fused kernel saves on real TPU).
+
+Timing goes through `repro.obs.bench_kernel` (warmup + `block_until_ready`
+fenced loop).  With ``--profile [events.jsonl]`` the module installs an
+enabled tracer first, so every measurement also lands in the shared obs
+stream as a ``kernel.<name>`` counter + ``kernel.us_per_call`` histogram
+sample — the measurement harness the upload-pipeline megakernel work will
+argue from.
+"""
 from __future__ import annotations
 
-import time
+import sys
 
 import jax
 import jax.numpy as jnp
 
-from .common import Timer, emit
+from .common import emit
 
+from repro.obs import JsonlSink, MemorySink, Tracer, bench_kernel, use_tracer
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ldp_noise import ldp_perturb_flat
 from repro.kernels.sparsify import sparsify_flat
-
-
-def _bench(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
-    t0 = time.time()
-    for _ in range(iters):
-        out = fn(*args)
-        jax.tree.leaves(out)[0].block_until_ready()
-    return (time.time() - t0) / iters * 1e6
 
 
 def run() -> None:
@@ -30,21 +29,26 @@ def run() -> None:
     q = jax.random.normal(key, (B, H, S, D), jnp.float32)
     k = jax.random.normal(key, (B, KV, S, D), jnp.float32)
     v = jax.random.normal(key, (B, KV, S, D), jnp.float32)
-    us = _bench(lambda a, b, c: flash_attention(a, b, c, bq=128, bk=128),
-                q, k, v)
+    us = bench_kernel("flash_attention_256",
+                      lambda a, b, c: flash_attention(a, b, c, bq=128,
+                                                      bk=128), q, k, v)
     flops = 4 * B * H * S * S * D * 0.5
     emit("kernel_flash_attention_256", us, f"flops={flops:.0f};"
          f"vmem_tile=128x128x{D}")
 
     n = 1 << 20
     g = jax.random.normal(key, (n,), jnp.float32)
-    us = _bench(lambda x: ldp_perturb_flat(x, jnp.int32(1), jnp.float32(0.5),
-                                           0.1, 1.0), g)
+    us = bench_kernel("ldp_noise_1M",
+                      lambda x: ldp_perturb_flat(x, jnp.int32(1),
+                                                 jnp.float32(0.5), 0.1, 1.0),
+                      g)
     emit("kernel_ldp_noise_1M", us,
          f"hbm_bytes_fused={2*4*n};hbm_bytes_naive={6*4*n}")
 
     r = jax.random.normal(key, (n,), jnp.float32)
-    us = _bench(lambda a, b: sparsify_flat(a, b, jnp.float32(0.5)), g, r)
+    us = bench_kernel("sparsify_1M",
+                      lambda a, b: sparsify_flat(a, b, jnp.float32(0.5)),
+                      g, r)
     emit("kernel_sparsify_1M", us,
          f"hbm_bytes_fused={4*4*n};hbm_bytes_naive={8*4*n}")
 
@@ -56,8 +60,10 @@ def run() -> None:
     Bm = jax.random.normal(ks[2], (B_, L_, N_))
     Cm = jax.random.normal(ks[3], (B_, L_, N_))
     A = -jnp.exp(jax.random.normal(key, (D_, N_)) * 0.2)
-    us = _bench(lambda *a: selective_scan(*a, block_l=64, block_d=64)[0],
-                x, dt, Bm, Cm, A)
+    us = bench_kernel("selective_scan",
+                      lambda *a: selective_scan(*a, block_l=64,
+                                                block_d=64)[0],
+                      x, dt, Bm, Cm, A)
     hbm_fused = 4 * (2 * B_ * L_ * D_ + 2 * B_ * L_ * N_ + B_ * L_ * D_)
     hbm_xla = hbm_fused + 4 * B_ * L_ * D_ * N_ * 7   # h_all × assoc-scan passes
     emit("kernel_selective_scan", us,
@@ -70,12 +76,31 @@ def run() -> None:
     Ah = -jnp.exp(jax.random.normal(key, (H_,)) * 0.3)
     Bh = jax.random.normal(ks[2], (1, 128, N_))
     Ch = jax.random.normal(ks[3], (1, 128, N_))
-    us = _bench(lambda *a: ssd_scan(*a, chunk=64, block_h=8)[0],
-                xh, dth, Bh, Ch, Ah)
+    us = bench_kernel("ssd_scan",
+                      lambda *a: ssd_scan(*a, chunk=64, block_h=8)[0],
+                      xh, dth, Bh, Ch, Ah)
     emit("kernel_ssd_scan", us,
          f"hbm_bytes_fused={4*(2*128*H_*P_+2*128*N_+128*H_)};"
          f"vmem_state={H_*P_*N_*4}")
 
 
+def main(argv) -> None:
+    if "--profile" in argv:
+        i = argv.index("--profile")
+        path = argv[i + 1] if len(argv) > i + 1 else None
+        sinks = [JsonlSink(path)] if path else [MemorySink()]
+        tracer = Tracer(sinks, enabled=True)
+        with use_tracer(tracer):
+            run()
+        snap = tracer.metrics.snapshot()
+        h = snap.get("kernel.us_per_call")
+        if h:
+            emit("kernel_profile_summary", h["sum"] / max(h["count"], 1),
+                 f"n={h['count']};min_us={h['min']:.1f};max_us={h['max']:.1f}")
+        tracer.close()
+    else:
+        run()
+
+
 if __name__ == "__main__":
-    run()
+    main(sys.argv[1:])

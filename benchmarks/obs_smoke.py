@@ -1,0 +1,80 @@
+"""Observability smoke: one fully-traced run, end to end.
+
+Runs a small async experiment over a lossy network with every `ObsSpec`
+output on, then checks the observability contracts the docs promise:
+
+  * the event JSONL streams header + window/arrival/verdict/net.upload
+    events and a run-end metrics snapshot;
+  * the Chrome trace is valid ``trace_event`` JSON (Perfetto-loadable
+    shape: M/X/i/C phases, one tid per track);
+  * replaying the streamed records JSONL reconstructs the final
+    `RunReport` exactly;
+  * the same spec with obs off produces the identical trajectory.
+
+Emits ``name,us_per_call,derived`` CSV rows like every other benchmark;
+any broken contract raises (the harness turns that into a CI failure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+
+from repro import api
+from repro.obs import read_jsonl
+
+from .common import Timer, emit, spec_for_mode
+
+
+def run() -> None:
+    with tempfile.TemporaryDirectory() as td:
+        ev = os.path.join(td, "events.jsonl")
+        ct = os.path.join(td, "trace.json")
+        rj = os.path.join(td, "records.jsonl")
+        spec = spec_for_mode("aldpfl", rounds=2)
+        spec = dataclasses.replace(
+            spec,
+            network=api.NetworkSpec(codec="sparse_coo", loss_prob=0.1,
+                                    jitter_s=0.5),
+            obs=api.ObsSpec(enabled=True, events_jsonl=ev, chrome_trace=ct,
+                            records_jsonl=rj, stage_timings=True))
+        plan = api.compile_plan(spec)
+        pop = api.materialize(spec)
+        with Timer() as t:
+            rep = api.run(plan, population=pop)
+
+        rows = read_jsonl(ev)
+        names = {r["name"] for r in rows
+                 if r.get("kind") in ("span", "instant", "counter")}
+        missing = {"window", "arrival", "detect.verdict",
+                   "net.upload"} - names
+        if missing:
+            raise AssertionError(f"event stream missing {sorted(missing)}")
+        if not any(r.get("kind") == "metrics" for r in rows):
+            raise AssertionError("no run-end metrics snapshot in stream")
+
+        with open(ct) as f:
+            doc = json.load(f)
+        phases = {e["ph"] for e in doc["traceEvents"]}
+        if not (phases <= {"M", "X", "i", "C"} and doc["traceEvents"]):
+            raise AssertionError(f"chrome trace malformed: phases={phases}")
+
+        replayed = api.replay_records(rj)
+        if replayed != dataclasses.replace(rep, final_params=None):
+            raise AssertionError("records replay != in-memory report")
+
+        off = dataclasses.replace(spec, obs=api.ObsSpec())
+        rep_off = api.run(api.compile_plan(off), population=pop)
+        if rep_off.records != rep.records:
+            raise AssertionError("tracing perturbed the trajectory")
+
+        n_ev = sum(r.get("kind") in ("span", "instant", "counter")
+                   for r in rows)
+        emit("obs_traced_run", t.us / max(len(rep.records), 1),
+             f"events={n_ev};chrome_events={len(doc['traceEvents'])};"
+             f"replay=exact;disabled=bit_identical")
+
+
+if __name__ == "__main__":
+    run()

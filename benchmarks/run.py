@@ -24,6 +24,7 @@ MODULES = {
     "async": "async_scale",
     "kernels": "kernels_micro",
     "roofline": "roofline_table",
+    "obs": "obs_smoke",
 }
 
 

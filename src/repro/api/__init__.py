@@ -28,12 +28,12 @@ from .plan import (BACKENDS, NET_CODECS, SCHEDULE_KINDS,  # noqa: F401
 from .population import (Population, default_sampler,  # noqa: F401
                          materialize)
 from .report import (RunReport, append_json_records,  # noqa: F401
-                     detection_log)
+                     detection_log, load_json_records, replay_records)
 from .run import RunState, execute, init_state, make_engine, run  # noqa: F401
 from .spec import (ACCEPTED_SCHEMA_VERSIONS, SCHEMA_VERSION,  # noqa: F401
                    AttackMix, CompressionSpec, DefenseSpec, ExperimentSpec,
-                   FleetSpec, NetworkSpec, NodeHeterogeneity, PrivacySpec,
-                   SchedulePolicy, Topology, TrainSpec)
+                   FleetSpec, NetworkSpec, NodeHeterogeneity, ObsSpec,
+                   PrivacySpec, SchedulePolicy, Topology, TrainSpec)
 from .window import (AutoWindow, FixedWindow,  # noqa: F401
                      TargetArrivalsWindow, WindowPolicy,
                      window_policy_from_dict)

@@ -196,6 +196,26 @@ def compile_plan(spec: ExperimentSpec) -> ExperimentPlan:
                  "the sequential reference loop has no network simulation "
                  "— use topology.kind='single' or 'mesh'")
 
+    # -- observability ------------------------------------------------------
+    obs = spec.obs
+    for name in ("events_jsonl", "chrome_trace", "records_jsonl"):
+        path = getattr(obs, name)
+        _require(path is None or (isinstance(path, str) and path != ""),
+                 f"obs.{name} must be a non-empty path or None, got "
+                 f"{path!r}")
+        _require(path is None or obs.enabled,
+                 f"obs.{name}={path!r} is set but obs.enabled=False — an "
+                 f"output path without the tracer is a contradiction, not "
+                 f"a default")
+    _require(not (obs.stage_timings and not obs.enabled),
+             "obs.stage_timings needs obs.enabled=True — fenced stage "
+             "timing only exists inside a traced run")
+    _require(not (obs.enabled and topo.kind == "sequential"
+                  and obs.stage_timings),
+             "obs.stage_timings times the fleet engines' pipeline stages — "
+             "the sequential reference loop has none (use topology.kind="
+             "'single' or 'mesh')")
+
     # -- privacy resolution -------------------------------------------------
     if priv.sigma is None:
         _require(priv.epsilon > 0 and 0.0 < priv.delta < 1.0,
@@ -231,6 +251,8 @@ def compile_plan(spec: ExperimentSpec) -> ExperimentPlan:
         stages.append("link_sim")
     if dfs.detect:
         stages.append("cloud_detect")
+    if obs.enabled:
+        stages.append("obs_trace")
     stages.append({"barrier": "masked_mean_mix",
                    "sequential": "eq6_arrival_mix",
                    "buffered": "fedbuff_window_mix"}[mixing])

@@ -17,6 +17,7 @@ pre-redesign implementation (enforced by tests/test_api.py):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import heapq
@@ -33,11 +34,13 @@ from ..core import aldp, async_update, detection
 from ..core.accountant import MomentsAccountant
 from ..core.federated import RoundRecord
 from .. import fleet
+from .. import obs as _obs
 from ..fleet import stages as fleet_stages
 from ..net import netsim_from_network
 from .plan import ExperimentPlan, SpecError
 from .population import Population, materialize
 from .report import RunReport, detection_log
+from .spec import SCHEMA_VERSION
 
 
 # ---------------------------------------------------------------------------
@@ -70,6 +73,104 @@ def init_state(plan: ExperimentPlan, population: Population) -> RunState:
                    for _ in range(population.n_nodes)],
         accountant=(MomentsAccountant(plan.sigma, 1.0)
                     if plan.sigma > 0 else None))
+
+
+# ---------------------------------------------------------------------------
+# the per-run observability session (ObsSpec -> tracer + sinks + streams)
+# ---------------------------------------------------------------------------
+
+class _ObsSession:
+    """Materialize one run's `ObsSpec`: build the tracer and its sinks,
+    stream `RoundRecord`s as they land, export the Chrome trace and the
+    metrics snapshot at the end.  With the spec disabled every method is a
+    no-op and no tracer is installed — the run is byte-identical to a
+    pre-obs build."""
+
+    def __init__(self, plan: ExperimentPlan):
+        o = plan.spec.obs
+        self.enabled = o.enabled
+        self.tracer: Optional[_obs.Tracer] = None
+        self._chrome_path = o.chrome_trace
+        self._mem: Optional[_obs.MemorySink] = None
+        self._events: Optional[_obs.JsonlSink] = None
+        self._records: Optional[_obs.JsonlWriter] = None
+        if not self.enabled:
+            return
+        engine_name = ("fleet-mesh" if plan.mesh_devices is not None
+                       else plan.engine)
+        header = {"schema_version": SCHEMA_VERSION, "mode": plan.mode,
+                  "engine": engine_name, "spec": plan.spec.to_dict()}
+        sinks = []
+        if o.chrome_trace:
+            self._mem = _obs.MemorySink()
+            sinks.append(self._mem)
+        if o.events_jsonl:
+            self._events = _obs.JsonlSink(o.events_jsonl,
+                                          header=dict(header,
+                                                      stream="events"))
+            sinks.append(self._events)
+        self.tracer = _obs.Tracer(sinks=sinks, enabled=True,
+                                  stage_timings=o.stage_timings)
+        if o.records_jsonl:
+            self._records = _obs.JsonlWriter(o.records_jsonl,
+                                             header=dict(header,
+                                                         stream="records"))
+
+    def scope(self):
+        """The `use_tracer` context the run executes inside (engines and
+        `NetSim` pick the tracer up from the process-global slot)."""
+        return (_obs.use_tracer(self.tracer) if self.tracer is not None
+                else contextlib.nullcontext())
+
+    def record(self, rec: RoundRecord) -> None:
+        """Stream one completed round record (called from the history
+        hook the moment each record is appended — crash-safe JSONL, not
+        the at-end dump)."""
+        if self._records is not None:
+            self._records.write({"kind": "record",
+                                 **dataclasses.asdict(rec)})
+
+    def history(self) -> Optional[List[RoundRecord]]:
+        """An append-hooked record list when ``records_jsonl`` is set
+        (swapped in for ``state.history``), else None."""
+        if self._records is None:
+            return None
+        return _StreamingHistory(self.record)
+
+    def finish(self, report: Optional[RunReport] = None) -> None:
+        """Flush everything: report footer on the record stream, metrics
+        snapshot on the event stream, the Chrome-trace export, then close
+        every sink."""
+        if not self.enabled:
+            return
+        if self._records is not None:
+            if report is not None:
+                footer = {k: v for k, v in report.to_dict().items()
+                          if k != "records"}
+                self._records.write({"kind": "report", **footer})
+            self._records.close()
+        if self._events is not None:
+            snap = self.tracer.metrics.snapshot()
+            if snap:
+                self._events.writer.write({"kind": "metrics",
+                                           "metrics": snap})
+        if self._chrome_path and self._mem is not None:
+            _obs.write_chrome_trace(self._chrome_path, self._mem.events)
+        self.tracer.close()
+
+
+class _StreamingHistory(list):
+    """A record list that streams each append (the `_run_*` drivers and
+    the sequential runner all append to ``state.history`` — hooking the
+    list streams every path without touching the drivers)."""
+
+    def __init__(self, callback):
+        super().__init__()
+        self._callback = callback
+
+    def append(self, rec) -> None:
+        super().append(rec)
+        self._callback(rec)
 
 
 # ---------------------------------------------------------------------------
@@ -440,13 +541,22 @@ def run(plan: ExperimentPlan, population: Optional[Population] = None,
     if sampler is not None:
         pop = dataclasses.replace(pop, sampler=sampler)
     state = init_state(plan, pop)
-    records = execute(plan, pop, state)
+    session = _ObsSession(plan)
+    streamed = session.history()
+    if streamed is not None:
+        state.history = streamed
+    try:
+        with session.scope():
+            records = execute(plan, pop, state)
+    except BaseException:
+        session.finish(None)        # flush what streamed before the crash
+        raise
 
     comm = sum(r.comm_time for r in records)
     comp = sum(r.comp_time for r in records)
     engine_name = ("fleet-mesh" if plan.mesh_devices is not None
                    else plan.engine)
-    return RunReport(
+    report = RunReport(
         mode=plan.mode, engine=engine_name, records=list(records),
         kappa=async_update.communication_efficiency(comm, comp),
         epsilon_spent=(state.accountant.epsilon(plan.spec.privacy.delta)
@@ -456,3 +566,5 @@ def run(plan: ExperimentPlan, population: Optional[Population] = None,
         spec=plan.spec.to_dict(),
         net=state.net,
         final_params=state.params)
+    session.finish(report)
+    return report

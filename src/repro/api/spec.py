@@ -35,11 +35,12 @@ from typing import Dict, Optional, Tuple
 
 from .window import AutoWindow, WindowPolicy, window_policy_from_dict
 
-# v2: NetworkSpec axis + RoundRecord.bytes_source.  v1 payloads are still
-# accepted on read (network defaults to analytic, bytes_source to
-# "analytic"); everything written is stamped v2.
-SCHEMA_VERSION = 2
-ACCEPTED_SCHEMA_VERSIONS = (1, 2)
+# v2: NetworkSpec axis + RoundRecord.bytes_source.  v3: ObsSpec axis.
+# Older payloads are still accepted on read (network defaults to analytic,
+# bytes_source to "analytic", obs to disabled); everything written is
+# stamped v3.
+SCHEMA_VERSION = 3
+ACCEPTED_SCHEMA_VERSIONS = (1, 2, 3)
 
 
 # ---------------------------------------------------------------------------
@@ -170,6 +171,38 @@ class NetworkSpec:
 
 
 @dataclass(frozen=True)
+class ObsSpec:
+    """The `repro.obs` observability layer for one run.
+
+    Default (disabled) is a strict no-op: no tracer is installed, no event
+    is constructed, and the engines' jitted programs are byte-identical to
+    an obs-less build — enabling observability is free until asked for,
+    and asking for it never changes simulation results (only, with
+    ``stage_timings``, host-side pipelining).
+
+      * ``events_jsonl``  — stream every `TraceEvent` (window spans,
+        arrival instants, detection verdicts, per-upload link events) to
+        this path as crash-safe JSONL, plus a final metrics snapshot;
+      * ``chrome_trace``  — write the run's events as Chrome
+        ``trace_event`` JSON (Perfetto-loadable: nodes as tracks, windows
+        as spans, arrivals as instants);
+      * ``records_jsonl`` — stream each `RoundRecord` to this path as it
+        is produced (instead of only the at-end `RunReport` dump); the
+        stream replays back into the exact final report
+        (`report.replay_records`);
+      * ``stage_timings`` — `block_until_ready`-fenced spans around each
+        host pipeline stage (build/device program/net draw+commit/eval).
+        Off by default even when tracing: fencing serializes JAX's async
+        dispatch, an intentional measurement-mode perf change.
+    """
+    enabled: bool = False
+    events_jsonl: Optional[str] = None
+    chrome_trace: Optional[str] = None
+    records_jsonl: Optional[str] = None
+    stage_timings: bool = False
+
+
+@dataclass(frozen=True)
 class Topology:
     """Where the simulation runs.
 
@@ -204,6 +237,7 @@ class ExperimentSpec:
     compression: CompressionSpec = field(default_factory=CompressionSpec)
     defense: DefenseSpec = field(default_factory=DefenseSpec)
     network: NetworkSpec = field(default_factory=NetworkSpec)
+    obs: ObsSpec = field(default_factory=ObsSpec)
     topology: Topology = field(default_factory=Topology)
     train: TrainSpec = field(default_factory=TrainSpec)
     rounds: int = 10        # sync rounds; async runs rounds*n_nodes arrivals
@@ -256,6 +290,7 @@ _SECTION_TYPES = {
     "compression": CompressionSpec,
     "defense": DefenseSpec,
     "network": NetworkSpec,
+    "obs": ObsSpec,
     "topology": Topology,
     "train": TrainSpec,
 }

@@ -44,6 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import async_update, detection
+from ..obs import (STALENESS_EDGES, WINDOW_SIZE_EDGES, get_tracer,
+                   timed_stage)
 from . import mesh as mesh_lib
 from . import stages
 from .engine import ClientSampler, FleetConfig, NodeProfile
@@ -80,11 +82,18 @@ class AsyncWindowRecord:
     max_staleness: int              # max τ = version − dispatched_version
 
 
-def make_window_folds(cfg: "AsyncFleetConfig"):
+def make_window_folds(cfg: "AsyncFleetConfig", need_audit: bool = False):
     """(sequential_fold, buffered_fold) — the window-to-global-model mixing
     programs, shared between the single-device window and the mesh-sharded
     window (where they run replicated on every device after the in-window
-    arrival set has been `all_gather`-ed)."""
+    arrival set has been `all_gather`-ed).
+
+    Both folds return ``(..., audit)``: an empty dict normally (zero extra
+    pytree leaves and zero extra ops, so untraced programs stay
+    structurally identical), or — with ``need_audit`` (a traced run) — the
+    per-slot detection audit: the ring threshold and occupancy each
+    arrival was judged against, enough to replay every Alg. 2 verdict from
+    the event stream alone."""
 
     def sequential_fold(params, version, ring, count, omegas, accs,
                         vdisp_c, arrived):
@@ -112,13 +121,18 @@ def make_window_folds(cfg: "AsyncFleetConfig"):
             params = jax.tree.map(lambda m, p: jnp.where(do_mix, m, p),
                                   mixed, params)
             version = version + do_mix.astype(jnp.int32)
-            return ((params, version, ring, count),
-                    (params, version, rej, tau))
+            out = (params, version, rej, tau)
+            if need_audit:
+                out += (detection.ring_threshold(ring, count, cfg.detect_s),
+                        jnp.minimum(count, ring.shape[0]))
+            return (params, version, ring, count), out
 
-        (params, version, ring, count), (p_seq, v_seq, rej, taus) = \
+        (params, version, ring, count), ys = \
             jax.lax.scan(body, (params, version, ring, count),
                          (omegas, accs, vdisp_c, arrived))
-        return params, version, ring, count, p_seq, v_seq, rej, taus
+        p_seq, v_seq, rej, taus = ys[:4]
+        audit = {"thr": ys[4], "held": ys[5]} if need_audit else {}
+        return params, version, ring, count, p_seq, v_seq, rej, taus, audit
 
     def buffered_fold(params, version, ring, count, omegas, accs,
                       vdisp_c, arrived):
@@ -138,9 +152,10 @@ def make_window_folds(cfg: "AsyncFleetConfig"):
         version0 = version
         (ring, count), _ = jax.lax.scan(push, (ring, count),
                                         (accs, arrived))
-        if cfg.detect:
+        if cfg.detect or need_audit:
             thr = detection.ring_threshold(ring, count, cfg.detect_s)
             held = jnp.minimum(count, ring.shape[0])
+        if cfg.detect:
             rej = arrived & (held >= cfg.detect_warmup) & (accs <= thr)
         else:
             rej = jnp.zeros_like(arrived)
@@ -162,7 +177,11 @@ def make_window_folds(cfg: "AsyncFleetConfig"):
         p_seq = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (c,) + x.shape), params)
         v_seq = jnp.broadcast_to(version, (c,))
-        return params, version, ring, count, p_seq, v_seq, rej, taus
+        # the whole buffer was judged against one threshold/ring state
+        audit = ({"thr": jnp.broadcast_to(thr, (c,)),
+                  "held": jnp.broadcast_to(held, (c,))} if need_audit
+                 else {})
+        return params, version, ring, count, p_seq, v_seq, rej, taus, audit
 
     return sequential_fold, buffered_fold
 
@@ -195,9 +214,14 @@ class AsyncFleetEngine(MeshStateIO):
                  profile: Optional[NodeProfile] = None,
                  sampler: Optional[ClientSampler] = None,
                  mesh: Optional[FleetMesh] = None,
-                 net=None):
+                 net=None, tracer=None):
         self.cfg = cfg
         self.params = init_params
+        # the obs tracer is bound at construction: whether the jitted
+        # window carries detection-audit outputs is decided here, so an
+        # untraced engine's program is structurally identical to pre-obs
+        self.obs = tracer if tracer is not None else get_tracer()
+        self._need_audit = self.obs.enabled
         self.loss_fn = loss_fn
         self.acc_fn = jax.jit(acc_fn)
         (self.data, self.n_nodes, self.test_data, self.cloud_test,
@@ -261,7 +285,8 @@ class AsyncFleetEngine(MeshStateIO):
         comp_s = jnp.asarray(self._comp_s, jnp.float32)
         n = self.n_nodes
         need_nnz = self.net is not None     # byte-accurate pricing only
-        sequential_fold, buffered_fold = make_window_folds(cfg)
+        need_audit = self._need_audit
+        sequential_fold, buffered_fold = make_window_folds(cfg, need_audit)
 
         def window_fn(params, state: FleetState, x, y, sizes,
                       order, proc, avail, up_s):
@@ -299,9 +324,9 @@ class AsyncFleetEngine(MeshStateIO):
             arrived = proc & avail
             fold = (sequential_fold if cfg.mixing == "sequential"
                     else buffered_fold)
-            params, version, ring, count, p_seq, v_seq, rej, taus = fold(
-                params, state.version, state.acc_ring, state.acc_count,
-                omegas, accs, vdisp_c, arrived)
+            params, version, ring, count, p_seq, v_seq, rej, taus, aud = \
+                fold(params, state.version, state.acc_ring, state.acc_count,
+                     omegas, accs, vdisp_c, arrived)
 
             # redispatch: processed nodes get the model right after their
             # own slot (sequential) / the post-window model (buffered), the
@@ -327,6 +352,8 @@ class AsyncFleetEngine(MeshStateIO):
             }
             if need_nnz:
                 metrics["nnz"] = nnz
+            if need_audit:
+                metrics["audit"] = dict(aud, accs=accs, rej=rej, taus=taus)
             return params, new_state, metrics
 
         return window_fn
@@ -364,7 +391,8 @@ class AsyncFleetEngine(MeshStateIO):
         d, axis = mesh.n_devices, mesh.axis
         b = self.n_pad // d
         need_nnz = self.net is not None     # byte-accurate pricing only
-        sequential_fold, buffered_fold = make_window_folds(cfg)
+        need_audit = self._need_audit
+        sequential_fold, buffered_fold = make_window_folds(cfg, need_audit)
 
         def window_body(params, residuals, chain_key, dispatched,
                         next_arrival, dispatched_version, version, ring,
@@ -406,8 +434,9 @@ class AsyncFleetEngine(MeshStateIO):
             arrived = proc & avail
             fold = (sequential_fold if cfg.mixing == "sequential"
                     else buffered_fold)
-            params, version, ring, count, p_seq, v_seq, rej, taus = fold(
-                params, version, ring, count, omegas, accs, vdisp_c, arrived)
+            params, version, ring, count, p_seq, v_seq, rej, taus, aud = \
+                fold(params, version, ring, count, omegas, accs, vdisp_c,
+                     arrived)
 
             # 4. redispatch: scatter processed rows back to their owners
             dispatched = mesh_lib.scatter_rows_tree(dispatched, order, p_seq,
@@ -425,6 +454,9 @@ class AsyncFleetEngine(MeshStateIO):
             }
             if need_nnz:
                 metrics["nnz"] = jax.lax.all_gather(nnz_b, axis, tiled=True)
+            if need_audit:
+                # accs and the fold outputs are already replicated
+                metrics["audit"] = dict(aud, accs=accs, rej=rej, taus=taus)
             return (params, residuals, chain_key, dispatched, next_arrival,
                     dispatched_version, version, ring, count, metrics)
 
@@ -432,6 +464,9 @@ class AsyncFleetEngine(MeshStateIO):
         m_specs = {"n_rejected": pr, "max_staleness": pr}
         if need_nnz:
             m_specs["nnz"] = pr
+        if need_audit:
+            m_specs["audit"] = {"accs": pr, "rej": pr, "taus": pr,
+                                "thr": pr, "held": pr}
         return mesh.shard_map(
             window_body,
             in_specs=(pr, pn, pr, pn, pn, pn, pr, pr, pr,
@@ -471,8 +506,12 @@ class AsyncFleetEngine(MeshStateIO):
         test-set accuracy (recorded as NaN) — callers that only consume
         accuracy at coarser boundaries (the trainer: once per n_nodes
         arrivals) avoid a test forward pass + device sync per window."""
+        tr = self.obs
         w = self._window_idx
-        order, proc = self.select_window(max_arrivals)
+        span = tr.span("window", window=w)
+        span.__enter__()
+        with timed_stage(tr, "window.select", window=w):
+            order, proc = self.select_window(max_arrivals)
         t_arr = np.asarray(self.state.next_arrival, np.float64)[order]
         if self.sampler is not None:
             # cohort() returns (idx, valid) aligned to idx; fold it into a
@@ -490,12 +529,15 @@ class AsyncFleetEngine(MeshStateIO):
         draw = None
         if self.net is not None:
             up_host = np.zeros(order.size, np.float64)
-            draw = self.net.draw(sel)
+            with timed_stage(tr, "net.draw", window=w):
+                draw = self.net.draw(sel)
             up_host[proc] = draw.transfer_s
         else:
             up_host = self._comm_pad32[order].astype(np.float64)
         up_s = jnp.asarray(up_host, jnp.float32)
 
+        dev = timed_stage(tr, "window.device", window=w)
+        dev.__enter__()
         if self.mesh is not None:
             st = self.state
             (self.params, residuals, chain_key, dispatched, next_arrival,
@@ -516,6 +558,8 @@ class AsyncFleetEngine(MeshStateIO):
                 self.params, self.state, self.data.x, self.data.y,
                 self.data.sizes, jnp.asarray(order, jnp.int32),
                 jnp.asarray(proc), jnp.asarray(avail), up_s)
+        dev.fence((self.params, m))
+        dev.__exit__(None, None, None)
         self._window_idx = w + 1
 
         # host-side clock/traffic accounting over the processed arrivals.
@@ -526,17 +570,23 @@ class AsyncFleetEngine(MeshStateIO):
         if self.net is not None:
             # byte-accurate: price each upload's measured nonzero count
             # through the wire codec; times are the link draws
-            enc = self.net.commit(draw, np.asarray(m["nnz"])[proc])
+            with timed_stage(tr, "net.commit", window=w):
+                enc = self.net.commit(draw, np.asarray(m["nnz"])[proc])
             uplink = draw.transfer_s
             comm_bytes = float(enc.sum())
         else:
             uplink = self._comm_s[sel]
             comm_bytes = float(self._bpn * sel.size)
         t_arrive = t_arr[proc] + uplink             # arrival + uplink times
+        if evaluate:
+            with timed_stage(tr, "window.evaluate", window=w):
+                accuracy = self.global_accuracy()
+        else:
+            accuracy = float("nan")
         rec = AsyncWindowRecord(
             t=float(t_arrive.max()) if sel.size else 0.0,
             window=w, version=int(self.state.version),
-            accuracy=self.global_accuracy() if evaluate else float("nan"),
+            accuracy=accuracy,
             comm_bytes=comm_bytes,
             comp_time=float(self._comp_s[sel].sum()),
             comm_time=float(uplink.sum()),
@@ -544,7 +594,50 @@ class AsyncFleetEngine(MeshStateIO):
             n_rejected=int(m["n_rejected"]),
             max_staleness=int(m["max_staleness"]))
         self.history.append(rec)
+        if tr.enabled:
+            self._emit_window_events(rec, sel, proc, avail, t_arrive, m)
+        span.set(n_processed=rec.n_processed, n_rejected=rec.n_rejected,
+                 version=rec.version)
+        span.set_virtual(float(t_arr[0]) if t_arr.size else 0.0, rec.t)
+        span.__exit__(None, None, None)
         return rec
+
+    def _emit_window_events(self, rec: AsyncWindowRecord, sel, proc, avail,
+                            t_arrive, m) -> None:
+        """One window's trace: arrival instants (every processed upload),
+        a `detect.verdict` instant per cloud evaluation (the Alg. 2 audit
+        log — accuracy, ring threshold/occupancy, verdict, staleness), and
+        the aggregated window metrics."""
+        tr = self.obs
+        arrived = avail[proc]
+        aud = m.get("audit")
+        if aud is not None:
+            accs = np.asarray(aud["accs"])[proc]
+            rej = np.asarray(aud["rej"])[proc]
+            taus = np.asarray(aud["taus"])[proc]
+            thr = np.asarray(aud["thr"])[proc]
+            held = np.asarray(aud["held"])[proc]
+        for i in range(sel.size):
+            t_i = float(t_arrive[i])
+            node = int(sel[i])
+            tr.instant("arrival", virt_t=t_i, node=node, window=rec.window,
+                       arrived=bool(arrived[i]))
+            if aud is not None and arrived[i]:
+                tr.instant(
+                    "detect.verdict", virt_t=t_i, node=node,
+                    window=rec.window, accuracy=float(accs[i]),
+                    threshold=float(thr[i]), ring_held=int(held[i]),
+                    rejected=bool(rej[i]), tau=int(taus[i]),
+                    detect=bool(self.cfg.detect))
+        mx = tr.metrics
+        mx.histogram("window.size", WINDOW_SIZE_EDGES).observe(
+            rec.n_processed)
+        mx.histogram("window.max_staleness", STALENESS_EDGES).observe(
+            rec.max_staleness)
+        mx.counter("window.arrivals").inc(rec.n_processed)
+        mx.counter("window.rejected").inc(rec.n_rejected)
+        mx.counter("window.comm_bytes").inc(rec.comm_bytes)
+        mx.gauge("model.version").set(rec.version)
 
     def run(self, windows: int) -> List[AsyncWindowRecord]:
         for _ in range(windows):

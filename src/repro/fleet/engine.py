@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import async_update, detection
+from ..obs import WINDOW_SIZE_EDGES, get_tracer, timed_stage
 from . import mesh as mesh_lib
 from . import stages
 from .mesh import FleetMesh, MeshStateIO
@@ -216,8 +217,13 @@ class FleetEngine(MeshStateIO):
                  profile: Optional[NodeProfile] = None,
                  sampler: Optional[ClientSampler] = None,
                  mesh: Optional[FleetMesh] = None,
-                 net=None):
+                 net=None, tracer=None):
         self.cfg = cfg
+        # per-round events/metrics go to the injected tracer, else whatever
+        # global one `api.run` scoped in (disabled -> all no-ops); the jitted
+        # round already returns accs/mask/thr, so tracing needs no program
+        # change and cannot perturb numerics
+        self.obs = tracer if tracer is not None else get_tracer()
         self.params = init_params
         self.loss_fn = loss_fn
         self.acc_fn = jax.jit(acc_fn)
@@ -388,19 +394,24 @@ class FleetEngine(MeshStateIO):
     # -- host-side driver ---------------------------------------------------
     def run_round(self) -> FleetRoundRecord:
         cfg = self.cfg
+        tr = self.obs
         r = self.state.round
+        span = tr.span("round", round=r)
+        span.__enter__()
         idx, valid = self.sampler.cohort(r, self.n_nodes)
-        if self.mesh is not None:
-            up = self._participation_mask(idx, valid)
-            self.params, residuals, chain_key, m = self._round_fn(
-                self.params, self.state.residuals, self.state.chain_key,
-                self.data.x, self.data.y, self.data.sizes,
-                self.mesh.put_nodes(jnp.asarray(up)), *self.cloud_test)
-        else:
-            self.params, residuals, chain_key, m = self._round_fn(
-                self.params, self.state.residuals, self.state.chain_key,
-                self.data.x, self.data.y, self.data.sizes,
-                jnp.asarray(idx, jnp.int32), jnp.asarray(valid))
+        with timed_stage(tr, "round.device", round=r) as st:
+            if self.mesh is not None:
+                up = self._participation_mask(idx, valid)
+                self.params, residuals, chain_key, m = self._round_fn(
+                    self.params, self.state.residuals, self.state.chain_key,
+                    self.data.x, self.data.y, self.data.sizes,
+                    self.mesh.put_nodes(jnp.asarray(up)), *self.cloud_test)
+            else:
+                self.params, residuals, chain_key, m = self._round_fn(
+                    self.params, self.state.residuals, self.state.chain_key,
+                    self.data.x, self.data.y, self.data.sizes,
+                    jnp.asarray(idx, jnp.int32), jnp.asarray(valid))
+            st.fence((self.params, m))
         self.state = FleetState(residuals=residuals, chain_key=chain_key,
                                 round=r + 1)
 
@@ -426,18 +437,57 @@ class FleetEngine(MeshStateIO):
                 valid_np = np.asarray(valid)
                 sel_nodes = np.asarray(idx)[valid_np]
                 nnz_sel = np.asarray(m["nnz"])[valid_np]
-            draw = self.net.draw(sel_nodes)
-            enc = self.net.commit(draw, nnz_sel)
+            with timed_stage(tr, "net.draw", round=r) as st:
+                draw = self.net.draw(sel_nodes)
+            with timed_stage(tr, "net.commit", round=r) as st:
+                enc = self.net.commit(draw, nnz_sel)
             comm = float(draw.transfer_s.max()) if sel_nodes.size else 0.0
             comm_bytes = float(enc.sum())
         t_prev = self.history[-1].t if self.history else 0.0
+        with timed_stage(tr, "round.evaluate", round=r) as st:
+            accuracy = self.global_accuracy()
         rec = FleetRoundRecord(
             t=t_prev + comp + comm, round=r,
-            accuracy=self.global_accuracy(), comm_bytes=comm_bytes,
+            accuracy=accuracy, comm_bytes=comm_bytes,
             comp_time=comp, comm_time=comm, n_participating=n_part,
             n_rejected=n_rejected)
         self.history.append(rec)
+        if tr.enabled:
+            self._emit_round_events(rec, idx, valid, m, up if self.mesh
+                                    is not None else None)
+        span.set(n_participating=n_part, n_rejected=n_rejected)
+        span.set_virtual(t_prev, rec.t)
+        span.__exit__(None, None, None)
         return rec
+
+    def _emit_round_events(self, rec: FleetRoundRecord, idx, valid, m,
+                           up) -> None:
+        """Per-participant detection audit (one `detect.verdict` instant per
+        cloud evaluation, Alg. 2's batch top-s form) + round metrics — the
+        trace alone reconstructs Fig. 6's per-round rejection series."""
+        tr = self.obs
+        thr = float(np.asarray(m["thr"]))
+        accs = np.asarray(m["accs"])
+        mask = np.asarray(m["mask"])
+        if up is not None:          # sharded: node-order arrays over n_pad
+            nodes = np.flatnonzero(up[:self.n_nodes])
+            accs, mask = accs[nodes], mask[nodes]
+        else:                       # single-device: cohort (idx) order
+            valid_np = np.asarray(valid)
+            nodes = np.asarray(idx)[valid_np]
+            accs, mask = accs[valid_np], mask[valid_np]
+        for i, node in enumerate(nodes):
+            tr.instant("detect.verdict", virt_t=rec.t, node=int(node),
+                       round=rec.round, accuracy=float(accs[i]),
+                       threshold=thr, rejected=bool(~mask[i]),
+                       detect=bool(self.cfg.detect))
+        mx = tr.metrics
+        mx.histogram("round.size", WINDOW_SIZE_EDGES).observe(
+            rec.n_participating)
+        mx.counter("round.participants").inc(rec.n_participating)
+        mx.counter("round.rejected").inc(rec.n_rejected)
+        mx.counter("round.comm_bytes").inc(rec.comm_bytes)
+        mx.gauge("model.accuracy").set(rec.accuracy)
 
     def run(self, rounds: int) -> List[FleetRoundRecord]:
         for _ in range(rounds):

@@ -25,4 +25,4 @@ from .codecs import (CODEC_NAMES, Codec, DenseF32, SparseBitpack,  # noqa: F401
                      batched_encoded_bytes, count_nnz, get_codec,
                      index_bits)
 from .link import (LinkProfile, draw_transfer,  # noqa: F401
-                   materialize_bandwidth)
+                   draw_transfer_batch, materialize_bandwidth)

@@ -25,8 +25,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..obs import SECONDS_EDGES, get_tracer
 from .codecs import Codec, get_codec
-from .link import LinkProfile, draw_transfer, materialize_bandwidth
+from .link import LinkProfile, draw_transfer_batch, materialize_bandwidth
 
 
 @dataclass
@@ -90,10 +91,13 @@ class NetSim:
       sparsify_ratio: the DGC keep fraction — sets the nominal nonzero
         count the pre-flight transfer draws assume.
       seed: root of the counter-based per-upload PRNG chain.
+      tracer: an `obs.Tracer` for per-upload link events/metrics; defaults
+        to the process-global tracer (a no-op unless a run installed one).
     """
 
     def __init__(self, codec, link: LinkProfile, bandwidth_bps: np.ndarray,
-                 n_params: int, sparsify_ratio: float = 1.0, seed: int = 0):
+                 n_params: int, sparsify_ratio: float = 1.0, seed: int = 0,
+                 tracer=None):
         self.codec: Codec = (get_codec(codec) if isinstance(codec, str)
                              else codec)
         link.validate()
@@ -108,6 +112,11 @@ class NetSim:
             np.asarray(self.codec.nbytes(self.nominal_nnz, self.n_params)))
         self._counters = np.zeros(self.eff_bandwidth_bps.shape[0], np.int64)
         self.trace = NetTrace(codec=self.codec.describe())
+        self._tracer = tracer
+
+    @property
+    def tracer(self):
+        return self._tracer if self._tracer is not None else get_tracer()
 
     # -- phase 1: pre-flight transfer times ---------------------------------
     def draw(self, nodes: np.ndarray) -> UploadDraw:
@@ -115,12 +124,10 @@ class NetSim:
         advance each node's upload counter.  Concurrency for the shared-
         uplink cap is the batch size.
 
-        Links with no stochastic component (loss_prob == jitter_s == 0 —
-        heterogeneous-bandwidth and contention regimes) are computed fully
-        vectorized with no per-upload PRNG construction; stochastic links
-        pay one counter-based (seed, node, seq) stream per upload (the
-        determinism contract — vectorizing those draws with a batched
-        counter-based bit generator is a ROADMAP follow-up)."""
+        Stochastic links are drawn through the batched counter-based
+        (seed, node, seq) hash stream in `link.draw_transfer_batch` — one
+        vectorized expression per batch, bit-identical to drawing each
+        upload alone (the determinism contract, property-tested)."""
         nodes = np.asarray(nodes, np.int64)   # unique per batch (one window/
         u = nodes.size                        # cohort row set per draw)
         seqs = self._counters[nodes].copy()
@@ -135,14 +142,9 @@ class NetSim:
             return UploadDraw(nodes=nodes, seqs=seqs, transfer_s=transfer,
                               overhead_bytes=np.zeros(u),
                               retransmits=np.zeros(u, np.int64))
-        transfer = np.empty(u, np.float64)
-        overhead = np.empty(u, np.float64)
-        retrans = np.empty(u, np.int64)
-        for i, node in enumerate(nodes):
-            transfer[i], overhead[i], retrans[i] = draw_transfer(
-                link, self.nominal_payload_bytes,
-                self.eff_bandwidth_bps[node], self.seed, int(node),
-                int(seqs[i]), concurrency=u)
+        transfer, overhead, retrans = draw_transfer_batch(
+            link, self.nominal_payload_bytes, self.eff_bandwidth_bps[nodes],
+            self.seed, nodes, seqs, concurrency=u)
         return UploadDraw(nodes=nodes, seqs=seqs, transfer_s=transfer,
                           overhead_bytes=overhead, retransmits=retrans)
 
@@ -165,6 +167,22 @@ class NetSim:
                             zip(enc, draw.overhead_bytes))
         t.transfer_s.extend(float(x) for x in draw.transfer_s)
         t.retransmits.extend(int(x) for x in draw.retransmits)
+        tr = self.tracer
+        if tr.enabled:
+            for i in range(draw.nodes.size):
+                tr.instant("net.upload", node=int(draw.nodes[i]),
+                           seq=int(draw.seqs[i]), nnz=int(nnz[i]),
+                           encoded_bytes=int(enc[i]),
+                           transfer_s=float(draw.transfer_s[i]),
+                           retransmits=int(draw.retransmits[i]))
+            m = tr.metrics
+            m.counter("net.uploads").inc(draw.nodes.size)
+            m.counter("net.encoded_bytes").inc(float(np.sum(enc)))
+            m.counter("net.retransmits").inc(
+                float(np.sum(draw.retransmits)))
+            h = m.histogram("net.transfer_s", SECONDS_EDGES)
+            for x in draw.transfer_s:
+                h.observe(float(x))
         return enc
 
     def summary(self) -> Dict:
@@ -172,7 +190,7 @@ class NetSim:
 
 
 def netsim_from_network(network, bandwidth_bps: np.ndarray, n_params: int,
-                        sparsify_ratio: float, seed: int
+                        sparsify_ratio: float, seed: int, tracer=None
                         ) -> Optional["NetSim"]:
     """Build a `NetSim` from an `api.NetworkSpec`-shaped object (anything
     with the codec/value_bits/link fields), or None when the spec keeps
@@ -186,4 +204,4 @@ def netsim_from_network(network, bandwidth_bps: np.ndarray, n_params: int,
         loss_prob=network.loss_prob, mtu_bytes=network.mtu_bytes,
         shared_uplink_bps=network.shared_uplink_bps)
     return NetSim(codec, link, bandwidth_bps, n_params,
-                  sparsify_ratio=sparsify_ratio, seed=seed)
+                  sparsify_ratio=sparsify_ratio, seed=seed, tracer=tracer)

@@ -1,0 +1,31 @@
+"""`repro.obs`: structured event tracing, metrics, and profiling hooks.
+
+The observability layer under the whole fleet/net/kernel stack:
+
+  * `events`  — `TraceEvent` (span/instant/counter, wall + virtual time,
+    node/round/window tags), the nestable-`span()` `Tracer`, and the
+    process-global injectable default (`get_tracer`/`set_tracer`/
+    `use_tracer`) that is a no-op when disabled;
+  * `metrics` — typed registry (counters, gauges, fixed-bucket
+    histograms) with a deterministic `snapshot()`;
+  * `sinks`   — crash-safe streaming JSONL (`JsonlWriter`/`JsonlSink` +
+    `read_jsonl`), `MemorySink` for tests, and the Chrome-trace/Perfetto
+    exporter (`chrome_trace`/`write_chrome_trace`);
+  * `timers`  — `block_until_ready`-fenced per-stage timing
+    (`timed_stage`) and the kernel profiling primitive (`bench_kernel`).
+
+Enabled per experiment through `api.ObsSpec`; with the spec at its
+default (off) no event is constructed and the engines' jitted programs
+are unchanged — tracing costs nothing until asked for.  `repro.obs`
+imports nothing from the rest of the repo (and jax only lazily, for
+fencing), so every layer down to the kernels can depend on it.
+"""
+from .events import (TraceEvent, Tracer, get_tracer,  # noqa: F401
+                     set_tracer, use_tracer)
+from .metrics import (SECONDS_EDGES, STALENESS_EDGES,  # noqa: F401
+                      WINDOW_SIZE_EDGES, Counter, Gauge, Histogram,
+                      MetricsRegistry)
+from .sinks import (OBS_SCHEMA_VERSION, JsonlSink, JsonlWriter,  # noqa: F401
+                    MemorySink, Sink, chrome_trace, read_events,
+                    read_jsonl, write_chrome_trace)
+from .timers import bench_kernel, fence, timed_stage  # noqa: F401

@@ -1,0 +1,127 @@
+"""Host-side stage timers + the kernels profiling mode.
+
+JAX dispatch is asynchronous: `time.perf_counter` around a jitted call
+measures dispatch latency, not execution.  Everything here is
+`block_until_ready`-fenced:
+
+  * `timed_stage(tracer, name)` — a span context for one pipeline stage
+    (select_window, the device program, net draw/commit, evaluation).
+    The caller fences the stage's outputs via ``st.fence(out)`` before
+    the context exits, so the span's wall duration covers the device
+    work.  A disabled tracer yields a no-op context whose `fence` does
+    nothing — untimed runs keep JAX's async pipelining (fencing an
+    async dispatch chain would serialize it, which is itself a perf
+    change; that is why timing is opt-in per run, never ambient).
+  * `bench_kernel(name, fn, *args)` — the microbenchmark primitive
+    `benchmarks/kernels_micro.py` consumes: warmup + fenced timing loop,
+    µs/call, and a counter event + histogram sample into the tracer so a
+    profiling run of the kernel suite lands in the same trace/metrics
+    stream as everything else (the measurement harness the Pallas
+    upload-pipeline megakernel work will argue from).
+
+`fence` accepts any pytree (jax arrays, tuples, dicts) and tolerates
+plain host values, so call sites don't special-case output shapes.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+from .events import Tracer, get_tracer
+from .metrics import SECONDS_EDGES
+
+
+def fence(x: Any) -> Any:
+    """Block until every jax array in ``x`` has materialized; host values
+    pass through untouched."""
+    import jax
+    return jax.block_until_ready(x)
+
+
+class _TimedStage:
+    """Open stage timer: `fence` outputs inside, span emitted at exit."""
+    __slots__ = ("_span", "_tracer", "_name")
+
+    def __init__(self, tracer: Tracer, name: str, virt_t, tags):
+        self._tracer = tracer
+        self._name = name
+        self._span = tracer.span(f"stage.{name}", virt_t=virt_t, **tags)
+
+    def fence(self, x: Any) -> Any:
+        return fence(x)
+
+    def set(self, **tags) -> None:
+        self._span.set(**tags)
+
+    def __enter__(self):
+        self._span.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        out = self._span.__exit__(*exc)
+        return out
+
+
+class _NullStage:
+    """Disabled-path stage: no clock reads, `fence` is identity (keeps
+    JAX async pipelining untouched)."""
+    __slots__ = ()
+
+    def fence(self, x: Any) -> Any:
+        return x
+
+    def set(self, **tags) -> None:
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_STAGE = _NullStage()
+
+
+def timed_stage(tracer: Optional[Tracer], name: str,
+                virt_t: Optional[float] = None, **tags):
+    """Span context for one host-observed pipeline stage.
+
+        with timed_stage(self.obs, "window.device", window=w) as st:
+            out = self._window_fn(...)
+            st.fence(out)           # block_until_ready before the clock stops
+    """
+    tracer = tracer if tracer is not None else get_tracer()
+    if not (tracer.enabled and tracer.stage_timings):
+        return _NULL_STAGE
+    return _TimedStage(tracer, name, virt_t, tags)
+
+
+# ---------------------------------------------------------------------------
+# kernels profiling mode
+# ---------------------------------------------------------------------------
+
+def bench_kernel(name: str, fn, *args, iters: int = 3, warmup: int = 1,
+                 tracer: Optional[Tracer] = None) -> float:
+    """Fenced kernel microbenchmark: µs per call over ``iters`` timed
+    iterations after ``warmup`` untimed ones (compilation + first-touch).
+
+    When the (global or injected) tracer is enabled, each measurement
+    lands in the stream as a ``kernel.<name>`` counter event (value =
+    µs/call, tags carry iters) and a shared ``kernel.us_per_call``
+    histogram sample — the kernels profiling mode
+    `benchmarks/kernels_micro.py --profile` turns on.
+    """
+    tracer = tracer if tracer is not None else get_tracer()
+    for _ in range(max(1, warmup)):
+        fence(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    fence(out)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    if tracer.enabled:
+        tracer.counter(f"kernel.{name}", us, iters=iters)
+        tracer.metrics.histogram("kernel.us_per_call",
+                                 [e * 1e6 for e in SECONDS_EDGES]).observe(us)
+    return us

@@ -17,7 +17,7 @@ from _optional import HAVE_HYPOTHESIS, given, settings, st
 
 from repro import net
 from repro.net.codecs import _pack_bits, _unpack_bits, index_bits
-from repro.net.link import LinkProfile, draw_transfer
+from repro.net.link import LinkProfile, draw_transfer, draw_transfer_batch
 
 
 # ---------------------------------------------------------------------------
@@ -148,6 +148,66 @@ def test_netsim_draws_independent_of_batching(link, seed, split):
     # second pass advances every node's chain: same nodes, new seqs
     d3 = s1.draw(nodes)
     assert np.array_equal(d3.seqs, d1.seqs + 1)
+
+
+def test_batched_draws_bit_equal_scalar_loop():
+    """The vectorized stochastic path is the per-upload scalar loop,
+    bit for bit — batching is a pure implementation detail of the
+    counter-based hash stream."""
+    link = LinkProfile(latency_s=0.02, jitter_s=0.4, loss_prob=0.25,
+                       mtu_bytes=700)
+    rng = np.random.default_rng(3)
+    nodes = rng.integers(0, 50, size=64)
+    seqs = rng.integers(0, 200, size=64)
+    bw = rng.uniform(5e5, 5e6, size=64)
+    bt, bo, br = draw_transfer_batch(link, 123_456, bw, 9, nodes, seqs,
+                                     concurrency=64)
+    for i in range(64):
+        t, o, r = draw_transfer(link, 123_456, float(bw[i]), 9,
+                                int(nodes[i]), int(seqs[i]), concurrency=64)
+        assert (t, o, r) == (bt[i], bo[i], br[i])
+
+
+def test_batched_draws_independent_of_packet_chunking(monkeypatch):
+    """The packet-axis memory chunking never changes the bits."""
+    from repro.net import link as link_mod
+    link = LinkProfile(loss_prob=0.3, mtu_bytes=256)
+    nodes = np.arange(16)
+    seqs = np.zeros(16, np.int64)
+    bw = np.full(16, 1e6)
+    ref = draw_transfer_batch(link, 65_536, bw, 5, nodes, seqs)
+    monkeypatch.setattr(link_mod, "_CHUNK_DRAWS", 32)
+    tiny = draw_transfer_batch(link, 65_536, bw, 5, nodes, seqs)
+    for a, b in zip(ref, tiny):
+        assert np.array_equal(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(link=_link_strategy, seed=st.integers(0, 2**31 - 1),
+       batches=st.lists(st.integers(1, 6), min_size=1, max_size=5),
+       nnz_seed=st.integers(0, 2**31 - 1))
+def test_netsim_summary_invariants_property(link, seed, batches, nnz_seed):
+    """`NetTrace`/`NetSim.summary()` accounting invariants over arbitrary
+    commit sequences: total_encoded_bytes is exactly the sum of the
+    per-commit encodings, and n_uploads grows monotonically by each
+    batch's size."""
+    rng = np.random.default_rng(nnz_seed)
+    sim = net.NetSim("sparse_coo", link, np.full(8, 1e6), 5_000,
+                     sparsify_ratio=0.5, seed=seed)
+    total, uploads = 0.0, 0
+    for b in batches:
+        nodes = rng.choice(8, size=b, replace=False)
+        draw = sim.draw(nodes)
+        enc = sim.commit(draw, rng.integers(0, 5_000, size=b))
+        total += float(enc.sum())
+        prev, uploads = uploads, sim.trace.n_uploads
+        assert uploads == prev + b          # monotone, exact increments
+    s = sim.summary()
+    assert s == sim.trace.summary()
+    assert s["n_uploads"] == uploads == sum(batches)
+    assert s["encoded_bytes"] == sim.trace.total_encoded_bytes == total
+    assert s["wire_bytes"] >= s["encoded_bytes"]
+    assert s["retransmits"] >= 0
 
 
 def test_shared_uplink_contention_depends_on_concurrency():

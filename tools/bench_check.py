@@ -1,0 +1,131 @@
+#!/usr/bin/env python
+"""Check ``results/*.json`` trajectories against pinned baselines.
+
+The benchmark trajectory files mix two kinds of columns: *deterministic*
+outputs (byte counts, nnz, codec names, node counts, accuracies — fixed
+by the seeds) and *timing* noise (wall seconds, speedups, timestamps).
+This tool fingerprints each trajectory with the timing columns stripped
+and diffs it against ``tools/bench_baselines.json``, so a refactor that
+silently changes byte accounting, detection counts, or sweep coverage
+fails CI even though every test still passes on fresh runs.
+
+Usage:
+  python tools/bench_check.py            # diff results/ vs the baselines
+  python tools/bench_check.py --update   # re-pin baselines from results/
+  python tools/bench_check.py --rtol 0.05 results/net_sweep.json
+
+Exact match for ints/strings/bools; floats compare within ``--rtol``
+(default 2% — accuracy columns jitter across BLAS builds, byte counts
+are integers and stay exact).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINES = os.path.join(REPO, "tools", "bench_baselines.json")
+
+# timing/noise columns: never part of the fingerprint
+_NOISE = re.compile(
+    r"^ts$|^wall_s$|^speedup$|s_per_(round|window|call)|^us_per_call$"
+    r"|_wall_s$|^seq_estimated$")
+
+
+def fingerprint(records):
+    """The trajectory with noise columns dropped (order preserved)."""
+    return [{k: v for k, v in sorted(rec.items()) if not _NOISE.search(k)}
+            for rec in records]
+
+
+def _close(a, b, rtol: float) -> bool:
+    if isinstance(a, float) or isinstance(b, float):
+        try:
+            af, bf = float(a), float(b)
+        except (TypeError, ValueError):
+            return a == b
+        return abs(af - bf) <= rtol * max(abs(af), abs(bf), 1e-12)
+    return a == b
+
+
+def diff_one(name, base, cur, rtol):
+    """Human-readable drift list between two fingerprints."""
+    out = []
+    if len(base) != len(cur):
+        out.append(f"{name}: {len(base)} baseline records vs {len(cur)} "
+                   f"current — sweep coverage changed")
+    for i, (b, c) in enumerate(zip(base, cur)):
+        keys = sorted(set(b) | set(c))
+        for k in keys:
+            if k not in b:
+                out.append(f"{name}[{i}].{k}: new column {c[k]!r}")
+            elif k not in c:
+                out.append(f"{name}[{i}].{k}: column dropped "
+                           f"(was {b[k]!r})")
+            elif not _close(b[k], c[k], rtol):
+                out.append(f"{name}[{i}].{k}: {b[k]!r} -> {c[k]!r}")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*",
+                    help="results files to check (default: results/*.json)")
+    ap.add_argument("--update", action="store_true",
+                    help="re-pin tools/bench_baselines.json from results/")
+    ap.add_argument("--rtol", type=float, default=0.02,
+                    help="relative tolerance for float columns")
+    args = ap.parse_args(argv)
+
+    files = args.files or sorted(glob.glob(os.path.join(REPO, "results",
+                                                        "*.json")))
+    current = {}
+    for path in files:
+        with open(path) as f:
+            traj = json.load(f)
+        if not isinstance(traj, list):
+            print(f"bench_check: skipping {path} (not a trajectory list)")
+            continue
+        current[os.path.basename(path)] = fingerprint(traj)
+
+    if args.update:
+        with open(BASELINES, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"bench_check: pinned {len(current)} trajectories -> "
+              f"{os.path.relpath(BASELINES, REPO)}")
+        return 0
+
+    if not os.path.exists(BASELINES):
+        print("bench_check: no baselines pinned yet — run with --update")
+        return 1
+    with open(BASELINES) as f:
+        base = json.load(f)
+
+    drift = []
+    for name, cur in sorted(current.items()):
+        if name not in base:
+            drift.append(f"{name}: no pinned baseline (run --update)")
+            continue
+        drift += diff_one(name, base[name], cur, args.rtol)
+    for name in sorted(set(base) - set(current)):
+        drift.append(f"{name}: pinned but missing from results/")
+
+    if drift:
+        print(f"bench_check: {len(drift)} drift(s) vs pinned baselines:")
+        for d in drift:
+            print(f"  {d}")
+        print("(intentional? re-pin with: python tools/bench_check.py "
+              "--update)")
+        return 1
+    print(f"bench_check: {len(current)} trajectories match the pinned "
+          f"baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
