@@ -20,8 +20,8 @@ from repro import api
 from .common import Timer, emit
 
 
-def tiny_spec(kind: str, topology: str,
-              devices: int | None = None) -> api.ExperimentSpec:
+def tiny_spec(kind: str, topology: str, devices: int | None = None,
+              backend: str = "reference") -> api.ExperimentSpec:
     return api.ExperimentSpec(
         fleet=api.FleetSpec(n_nodes=4, samples_per_node=24, n_test=64,
                             n_cloud_test=32,
@@ -30,30 +30,35 @@ def tiny_spec(kind: str, topology: str,
         privacy=api.PrivacySpec(sigma=0.05),
         compression=api.CompressionSpec(sparsify_ratio=0.5),
         defense=api.DefenseSpec(detect=True),
-        topology=api.Topology(kind=topology, devices=devices),
+        topology=api.Topology(kind=topology, devices=devices,
+                              backend=backend),
         train=api.TrainSpec(local_steps=2, batch_size=8, lr=0.1),
         rounds=2, seed=0)
 
 
-def _combos(mesh_devices: int):
+def _combos(mesh_devices: int, backend: str):
     for kind in ("sync", "async", "buffered"):
         for topology in ("sequential", "single"):
             if kind == "buffered" and topology == "sequential":
                 continue        # buffered has no sequential reference loop
+            if backend == "pallas" and topology == "sequential":
+                continue        # kernels are engine-only; plan rejects this
             yield kind, topology, None
         if mesh_devices:
             yield kind, "mesh", mesh_devices
 
 
-def run(mesh_devices: int = 0) -> None:
-    for kind, topology, devices in _combos(mesh_devices):
-        spec = tiny_spec(kind, topology, devices)
+def run(mesh_devices: int = 0, backend: str = "reference") -> None:
+    for kind, topology, devices in _combos(mesh_devices, backend):
+        spec = tiny_spec(kind, topology, devices, backend)
         plan = api.compile_plan(spec)
         with Timer() as t:
             rep = api.run(plan)
         assert rep.records, f"{kind}/{topology}: empty report"
         assert api.RunReport.from_json(rep.to_json()).records == rep.records
         tag = topology if devices is None else f"mesh{devices}"
+        if backend != "reference":
+            tag = f"{tag}_{backend}"
         emit(f"api_smoke_{kind}_{tag}", t.us / len(rep.records),
              f"engine={rep.engine};acc={rep.final_accuracy:.3f};"
              f"records={len(rep.records)}")
@@ -64,8 +69,12 @@ def main() -> None:
     ap.add_argument("--mesh", type=int, default=0, metavar="D",
                     help="also run mesh-topology combos over D local "
                          "devices (force them with XLA_FLAGS on CPU)")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "pallas"),
+                    help="upload-pipeline backend: pallas runs the fused "
+                         "megakernel + window-fold kernel paths")
     args = ap.parse_args()
-    run(mesh_devices=args.mesh)
+    run(mesh_devices=args.mesh, backend=args.backend)
     print("API SMOKE OK")
 
 

@@ -1,9 +1,9 @@
-"""Async-scale micro-benchmark: event-loop trainer vs windowed AsyncFleetEngine.
+"""Async-scale micro-benchmark: event loop vs windowed AsyncFleetEngine.
 
 Sweeps n_nodes ∈ {10, 100} on the `honest` synthetic-MLP scenario. The
 fleet engine is run for a fixed number of arrival windows; the sequential
-event loop (`FederatedTrainer(mode="afl", use_fleet=False)`) is then run
-over the *same number of processed arrivals*, so
+event loop (`repro.api` with `Topology(kind="sequential")`, async
+schedule) is then run over the *same number of processed arrivals*, so
 
     speedup = event_loop_wall_clock / fleet_wall_clock
 
@@ -24,8 +24,6 @@ import argparse
 import os
 import time
 
-import jax
-
 from .common import append_trajectory, emit
 
 RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -45,20 +43,11 @@ def _build_async_fleet(n_nodes: int):
 
 
 def _build_event_loop(n_nodes: int, rounds: int):
-    from repro.core import FedConfig, FederatedTrainer
-    from repro.data import make_federated_image_data
-    from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
-    sc = _scenario(n_nodes)
-    node_data, test, cloud, _ = make_federated_image_data(
-        0, n_nodes=n_nodes, n_malicious=0,
-        n_train=sc.samples_per_node * n_nodes, n_test=sc.n_test,
-        n_cloud_test=sc.n_cloud_test, hw=sc.hw)
-    cfg = FedConfig(mode="afl", n_nodes=n_nodes, rounds=rounds,
-                    local_steps=sc.local_steps, batch_size=sc.batch_size,
-                    lr=sc.lr, detect=False, seed=0, use_fleet=False)
-    params = init_mlp(jax.random.PRNGKey(0), sc.hw[0] * sc.hw[1])
-    return FederatedTrainer(params, mlp_loss, mlp_accuracy, node_data, test,
-                            cloud, cfg)
+    """(plan, population, state) for the per-arrival reference event loop
+    — each `api.execute` call processes rounds×n_nodes arrivals,
+    continuing the chain state across timing iterations."""
+    from .fleet_scale import _build_sequential
+    return _build_sequential(n_nodes, kind="async", rounds=rounds)
 
 
 def _time_fleet(n_nodes: int):
@@ -79,12 +68,13 @@ def _time_event_loop(n_nodes: int, arrivals: int) -> float:
     """Seconds for the sequential event loop to process `arrivals`
     (measured over whole simulated rounds of n_nodes arrivals and scaled
     per-arrival — each `run()` call processes rounds×n_nodes arrivals)."""
-    tr = _build_event_loop(n_nodes, rounds=1)
-    tr.run()                                 # compile + warm (n_nodes arrivals)
+    from repro import api
+    plan, pop, state = _build_event_loop(n_nodes, rounds=1)
+    api.execute(plan, pop, state)    # compile + warm (n_nodes arrivals)
     rounds = max(1, round(arrivals / n_nodes))
     t0 = time.perf_counter()
     for _ in range(rounds):
-        tr.run()                             # one round = n_nodes arrivals
+        api.execute(plan, pop, state)        # one round = n_nodes arrivals
     dt = time.perf_counter() - t0
     return dt / (rounds * n_nodes) * arrivals
 

@@ -36,7 +36,7 @@ def spec_for_mode(mode: str, *, n_malicious: int = 3, detect: bool = True,
 
     sigma=0.05 default (workable SNR); pass sigma=None for the paper's
     ε=8 calibration — the sigma-tradeoff bench sweeps both.  The no-noise
-    modes (sfl/afl) run with σ=0 regardless, like `FedConfig` did.
+    modes (sfl/afl) run with σ=0 regardless of the sigma argument.
     """
     kind = _SCHEDULE[mode]
     return api.ExperimentSpec(

@@ -1,8 +1,8 @@
-"""Fleet-scale micro-benchmark: sequential trainer vs. batched FleetEngine.
+"""Fleet-scale micro-benchmark: sequential reference loop vs. FleetEngine.
 
 Sweeps n_nodes ∈ {10, 100, 1000} on the `honest` synthetic-MLP scenario and
-reports per-round wall-clock for (a) the sequential per-node loop
-(`FederatedTrainer(use_fleet=False)`) and (b) the cohort-batched
+reports per-round wall-clock for (a) the sequential per-node reference loop
+(`repro.api` with `Topology(kind="sequential")`) and (b) the cohort-batched
 `FleetEngine`. The sequential loop is O(n_nodes) Python dispatches per round,
 so it is *measured* up to 100 nodes and linearly *extrapolated* (flagged) at
 1000 — running it for real there takes minutes and measures nothing new.
@@ -18,9 +18,6 @@ from __future__ import annotations
 import argparse
 import os
 import time
-
-import jax
-import numpy as np
 
 from .common import append_trajectory, emit
 
@@ -41,21 +38,26 @@ def _build_fleet(n_nodes: int):
     return build_engine(_scenario(n_nodes), seed=0)
 
 
-def _build_sequential(n_nodes: int):
-    from repro.core import FedConfig, FederatedTrainer
-    from repro.data import make_federated_image_data
-    from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
+def _build_sequential(n_nodes: int, kind: str = "sync", rounds: int = 1):
+    """(plan, population, state) for the per-node reference loop — each
+    `api.execute(plan, pop, state)` call processes `rounds` rounds (sync)
+    or rounds×n_nodes arrivals (async), continuing the chain state like
+    the pre-redesign trainer's repeated run() did."""
+    from repro import api
     sc = _scenario(n_nodes)
-    node_data, test, cloud, _ = make_federated_image_data(
-        0, n_nodes=n_nodes, n_malicious=0,
-        n_train=sc.samples_per_node * n_nodes, n_test=sc.n_test,
-        n_cloud_test=sc.n_cloud_test, hw=sc.hw)
-    cfg = FedConfig(mode="sfl", n_nodes=n_nodes, rounds=1,
-                    local_steps=sc.local_steps, batch_size=sc.batch_size,
-                    lr=sc.lr, detect=False, seed=0, use_fleet=False)
-    params = init_mlp(jax.random.PRNGKey(0), sc.hw[0] * sc.hw[1])
-    return FederatedTrainer(params, mlp_loss, mlp_accuracy, node_data, test,
-                            cloud, cfg)
+    spec = api.ExperimentSpec(
+        fleet=api.FleetSpec(n_nodes=n_nodes, hw=sc.hw,
+                            samples_per_node=sc.samples_per_node,
+                            n_test=sc.n_test, n_cloud_test=sc.n_cloud_test),
+        schedule=api.SchedulePolicy(kind=kind),
+        defense=api.DefenseSpec(detect=False),
+        topology=api.Topology(kind="sequential"),
+        train=api.TrainSpec(local_steps=sc.local_steps,
+                            batch_size=sc.batch_size, lr=sc.lr),
+        rounds=rounds, seed=0)
+    plan = api.compile_plan(spec)
+    pop = api.materialize(spec)
+    return plan, pop, api.init_state(plan, pop)
 
 
 def _time_fleet_round(n_nodes: int) -> float:
@@ -68,11 +70,12 @@ def _time_fleet_round(n_nodes: int) -> float:
 
 
 def _time_sequential_round(n_nodes: int) -> float:
-    tr = _build_sequential(n_nodes)
-    tr.run()                                 # compile + warm (1 round)
+    from repro import api
+    plan, pop, state = _build_sequential(n_nodes)
+    api.execute(plan, pop, state)            # compile + warm (1 round)
     t0 = time.perf_counter()
     for _ in range(TIMED_ROUNDS):
-        tr.run()                             # rounds=1 per call
+        api.execute(plan, pop, state)        # rounds=1 per call
     return (time.perf_counter() - t0) / TIMED_ROUNDS
 
 

@@ -19,16 +19,17 @@ privacy (`PrivacySpec`), communication (`CompressionSpec`), defense
     report = api.run(api.compile_plan(spec))
     print(report.final_accuracy, report.kappa, report.epsilon_spent)
 
-The legacy `FederatedTrainer(FedConfig(...))` surface is a deprecation
-shim over this layer (`compat.plan_from_fed_config`).
+(The pre-redesign `FederatedTrainer(FedConfig(...))` surface was a
+deprecation shim over this layer and has been removed; the sequential
+reference loops it wrapped live on as `Topology(kind="sequential")`.)
 """
-from .compat import plan_from_fed_config, spec_from_fed_config  # noqa: F401
 from .plan import (BACKENDS, NET_CODECS, SCHEDULE_KINDS,  # noqa: F401
                    TOPOLOGY_KINDS, ExperimentPlan, SpecError, compile_plan)
 from .population import (Population, default_sampler,  # noqa: F401
                          materialize)
-from .report import (RunReport, append_json_records,  # noqa: F401
-                     detection_log, load_json_records, replay_records)
+from .report import (RoundRecord, RunReport,  # noqa: F401
+                     append_json_records, detection_log, load_json_records,
+                     replay_records)
 from .run import RunState, execute, init_state, make_engine, run  # noqa: F401
 from .spec import (ACCEPTED_SCHEMA_VERSIONS, SCHEMA_VERSION,  # noqa: F401
                    AttackMix, CompressionSpec, DefenseSpec, ExperimentSpec,

@@ -17,9 +17,25 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 from ..core.async_update import communication_efficiency
-from ..core.federated import RoundRecord
 from ..obs import read_jsonl
 from .spec import ACCEPTED_SCHEMA_VERSIONS, SCHEMA_VERSION
+
+
+@dataclass
+class RoundRecord:
+    """One row of every trajectory: the per-round (sync) / per-n_nodes-
+    arrivals (async) record stream all execution paths emit."""
+    t: float
+    version: int
+    accuracy: float
+    comm_bytes: float
+    comp_time: float
+    comm_time: float
+    n_rejected: int
+    # how comm_bytes was produced: "analytic" (the closed-form values +
+    # indices estimate) or "encoded" (repro.net wire-codec byte counts) —
+    # keeps mixed trajectories in results/*.json interpretable
+    bytes_source: str = "analytic"
 
 
 @dataclass

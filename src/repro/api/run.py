@@ -1,12 +1,12 @@
 """Execute an `ExperimentPlan`: plan -> engines -> `RunReport`.
 
 This is the one execution layer behind every entry point — the
-declarative `run(compile_plan(spec))` surface, the `FederatedTrainer`
-compatibility shim, and the scenario builders all land here.  The four
-execution paths (sync/async × sequential reference loop / fleet engines)
-are the trainer's former ``_run_*`` branches, ported verbatim so the
-round-record trajectories stay bit-equal-to-float-close with the
-pre-redesign implementation (enforced by tests/test_api.py):
+declarative `run(compile_plan(spec))` surface and the scenario builders
+all land here.  The four execution paths (sync/async × sequential
+reference loop / fleet engines) are the seed trainer's former ``_run_*``
+branches, ported verbatim so the round-record trajectories stay
+bit-equal-to-float-close with the pre-redesign implementation (enforced
+by tests/test_api.py):
 
   * ``engine="fleet"``      — the cohort-batched `FleetEngine` (sync) or
     window-batched `AsyncFleetEngine` (async/buffered), optionally
@@ -32,14 +32,13 @@ import numpy as np
 from ..core import accumulator as accum
 from ..core import aldp, async_update, detection
 from ..core.accountant import MomentsAccountant
-from ..core.federated import RoundRecord
 from .. import fleet
 from .. import obs as _obs
 from ..fleet import stages as fleet_stages
 from ..net import netsim_from_network
 from .plan import ExperimentPlan, SpecError
 from .population import Population, materialize
-from .report import RunReport, detection_log
+from .report import RoundRecord, RunReport, detection_log
 from .spec import SCHEMA_VERSION
 
 
@@ -51,9 +50,8 @@ from .spec import SCHEMA_VERSION
 class RunState:
     """Everything that evolves over a run and survives it: the global
     model, the host-side PRNG chain key, per-node DGC residuals, the
-    privacy accountant, and the record history.  The `FederatedTrainer`
-    shim aliases its own attributes into one of these so repeated runs
-    stay faithful."""
+    privacy accountant, and the record history.  Repeated `execute` calls
+    over the same state continue the PRNG chain / residuals faithfully."""
     params: Any
     key: Any
     residuals: List[Any]
@@ -498,8 +496,7 @@ def execute(plan: ExperimentPlan, population: Population,
             state: RunState) -> List[RoundRecord]:
     """Run ``plan`` over ``population``, mutating ``state`` (records are
     appended to ``state.history``; params/key/residuals/accountant advance
-    in place).  The `FederatedTrainer` shim calls this with state aliased
-    to its own attributes."""
+    in place), so follow-on `execute` calls continue the run."""
     if population.n_nodes != plan.spec.fleet.n_nodes:
         raise SpecError(
             f"population has {population.n_nodes} nodes but the plan was "

@@ -65,7 +65,7 @@ def window_policy_from_dict(d: Dict) -> WindowPolicy:
 class AutoWindow(WindowPolicy):
     """Parity-safe conservative window: the engine picks the minimum node
     compute time, preserving the sequential event loop's arrival order
-    exactly (the mode `FederatedTrainer` compatibility runs in)."""
+    exactly (the mode the sequential-parity tests run in)."""
 
     kind: ClassVar[str] = "auto"
 

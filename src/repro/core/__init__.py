@@ -9,4 +9,3 @@ from .async_update import (communication_efficiency, mix,      # noqa: F401
 from .detection import (detect, detection_threshold, masked_mean,  # noqa: F401
                         ring_detect, ring_init, ring_push, ring_threshold)
 from .fed_step import FedStepConfig, fed_train_step, plain_train_step  # noqa: F401
-from .federated import FedConfig, FederatedTrainer             # noqa: F401

@@ -92,7 +92,8 @@ def evaluate_nodes(node_params, eval_fn: Callable, *eval_args) -> jnp.ndarray:
 def default_window(n_nodes: int) -> int:
     """Default async sliding-window length: one full fleet pass, floored so
     tiny fleets still collect enough accuracies to threshold. The single
-    source for `FedConfig.detection_window()` and the scenario builders."""
+    source for `api.compile_plan`'s detect-window resolution and the
+    scenario builders."""
     return max(n_nodes, 4)
 
 

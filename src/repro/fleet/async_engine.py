@@ -1,6 +1,7 @@
 """AsyncFleetEngine: the paper's asynchronous scheme, one dispatch per window.
 
-The sequential `FederatedTrainer._run_async` event loop pops one heap event
+The sequential reference event loop (`api` Topology('sequential')) pops one
+heap event
 at a time and runs one Python-dispatched node update per arrival — O(K)
 dispatches per simulated round, dispatch-bound past a few dozen nodes. This
 engine vectorizes the event queue itself: per-node virtual clocks
@@ -29,9 +30,8 @@ With ``window=None`` (auto) the window length is min node compute time, so
 no node processed in a window can re-arrive inside it — arrivals are handled
 in exactly the event loop's global time order, and with
 ``key_mode="sequential"`` + `chain_node_keys_masked` the PRNG chain is
-consumed identically. That is the *parity mode* the rewired
-`FederatedTrainer._run_async` runs in (tested float-close in
-tests/test_async_fleet.py).
+consumed identically. That is the *parity mode* the api's single-device
+async path runs in (tested float-close in tests/test_async_fleet.py).
 """
 from __future__ import annotations
 
@@ -93,10 +93,18 @@ def make_window_folds(cfg: "AsyncFleetConfig", need_audit: bool = False):
     structurally identical), or — with ``need_audit`` (a traced run) — the
     per-slot detection audit: the ring threshold and occupancy each
     arrival was judged against, enough to replay every Alg. 2 verdict from
-    the event stream alone."""
+    the event stream alone.
 
-    def sequential_fold(params, version, ring, count, omegas, accs,
-                        vdisp_c, arrived):
+    With ``cfg.backend == "pallas"`` the sequential fold splits into a
+    scalar control scan (ring / staleness / version bookkeeping, emitting
+    per-arrival mix gates + coefficients) and the
+    `kernels.window_fold.window_fold_fleet` Pallas kernel, which folds the
+    param mixing with each param block resident in VMEM across the window
+    instead of carrying the whole model through a lax.scan.  Bit-equal for
+    f32 params; non-f32 models fall back to the reference scan."""
+
+    def sequential_fold_reference(params, version, ring, count, omegas,
+                                  accs, vdisp_c, arrived):
         """Eq. (6)/mix_stale over arrival order with streaming
         detection — the event loop, as one lax.scan."""
 
@@ -133,6 +141,64 @@ def make_window_folds(cfg: "AsyncFleetConfig", need_audit: bool = False):
         p_seq, v_seq, rej, taus = ys[:4]
         audit = {"thr": ys[4], "held": ys[5]} if need_audit else {}
         return params, version, ring, count, p_seq, v_seq, rej, taus, audit
+
+    def control_scan(version, ring, count, accs, vdisp_c, arrived):
+        """The reference fold's scalar bookkeeping only: ring pushes,
+        detection verdicts, staleness and version tracking — emitting, per
+        arrival, the gate + (a, b) coefficients of the params mix
+        ``gate ? a·params + b·omega : params`` for the param-fold kernel.
+        Rejection never depends on params, so the split is exact."""
+
+        def body(carry, inp):
+            version, ring, count = carry
+            acc_i, vdisp_i, arr_i = inp
+            r2, c2 = detection.ring_push(ring, count, acc_i)
+            ring = jnp.where(arr_i, r2, ring)
+            count = jnp.where(arr_i, c2, count)
+            if cfg.detect:
+                rej = arr_i & detection.ring_detect(
+                    ring, count, acc_i, cfg.detect_s, cfg.detect_warmup)
+            else:
+                rej = jnp.zeros((), bool)
+            tau = version - vdisp_i
+            if cfg.staleness_adaptive:
+                w = async_update.staleness_alpha(cfg.alpha, tau,
+                                                 cfg.staleness_a)
+                a_i, b_i = 1.0 - w, w
+            else:
+                a_i = jnp.float32(cfg.alpha)
+                b_i = jnp.float32(1.0 - cfg.alpha)
+            do_mix = arr_i & ~rej
+            version = version + do_mix.astype(jnp.int32)
+            out = (version, rej, tau, do_mix, a_i, b_i)
+            if need_audit:
+                out += (detection.ring_threshold(ring, count, cfg.detect_s),
+                        jnp.minimum(count, ring.shape[0]))
+            return (version, ring, count), out
+
+        (version, ring, count), ys = jax.lax.scan(
+            body, (version, ring, count), (accs, vdisp_c, arrived))
+        v_seq, rej, taus, gates, a, b = ys[:6]
+        audit = {"thr": ys[6], "held": ys[7]} if need_audit else {}
+        return version, ring, count, v_seq, rej, taus, gates, a, b, audit
+
+    def sequential_fold_pallas(params, version, ring, count, omegas, accs,
+                               vdisp_c, arrived):
+        from ..kernels.window_fold import window_fold_fleet
+
+        if any(l.dtype != jnp.float32 for l in jax.tree.leaves(params)):
+            return sequential_fold_reference(params, version, ring, count,
+                                             omegas, accs, vdisp_c, arrived)
+        version, ring, count, v_seq, rej, taus, gates, a, b, audit = \
+            control_scan(version, ring, count, accs, vdisp_c, arrived)
+        layout = stages.cohort_layout(omegas)
+        final, seq = window_fold_fleet(layout.flatten_one(params),
+                                       layout.flatten(omegas), gates, a, b)
+        return (layout.unflatten_one(final), version, ring, count,
+                layout.unflatten(seq), v_seq, rej, taus, audit)
+
+    sequential_fold = (sequential_fold_pallas if cfg.backend == "pallas"
+                       else sequential_fold_reference)
 
     def buffered_fold(params, version, ring, count, omegas, accs,
                       vdisp_c, arrived):

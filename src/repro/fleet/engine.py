@@ -1,6 +1,6 @@
 """FleetEngine: cohort-batched federated rounds — one dispatch per round.
 
-The sequential `FederatedTrainer` calls `_node_update` K times per round, so
+The sequential reference loop dispatches each node separately per round, so
 wall-clock at fleet scale is dominated by Python dispatch, not math. The
 engine stacks the whole cohort along a leading node axis and runs
 
@@ -14,15 +14,15 @@ residual state folded into the same program.
 Pluggable pieces:
   * client sampling — `FullParticipation`, `UniformSampler` (paper's
     "m of K nodes"), `AvailabilityTrace` (availability/churn traces);
-  * per-node compute/bandwidth via `NodeProfile` (replaces the trainer's
-    scalar `node_time` array);
+  * per-node compute/bandwidth via `NodeProfile` (replaces the seed
+    implementation's scalar `node_time` array);
   * upload-pipeline backend — "reference" (pure-jnp `accumulator`/`aldp`,
-    bit-compatible with the sequential trainer) or "pallas" (the fused
+    bit-compatible with the sequential reference loop) or "pallas" (the fused
     `sparsify`/`ldp_noise` kernels in node-batched form).
 
-With `key_mode="sequential"` the engine reproduces the sequential trainer's
-per-node PRNG chain exactly (see `state.chain_node_keys`), which is how the
-rewired `FederatedTrainer` sync path stays numerically faithful to the seed
+With `key_mode="sequential"` the engine reproduces the sequential reference
+loop's per-node PRNG chain exactly (see `state.chain_node_keys`), which is
+how the api's single-device sync path stays numerically faithful to the seed
 implementation.
 """
 from __future__ import annotations
@@ -167,7 +167,7 @@ class FleetConfig:
     detect: bool = True
     detect_s: float = 80.0
     sparsify_ratio: float = 1.0
-    key_mode: str = "parallel"      # parallel | sequential (trainer-compat)
+    key_mode: str = "parallel"      # parallel | sequential (seed-loop parity)
     backend: str = "reference"      # reference (jnp) | pallas (fused kernels)
     seed: int = 0
 

@@ -25,6 +25,8 @@ below is the one cross-node stage: sharded callers hand it the
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -81,23 +83,73 @@ def upload_pipeline(cfg, deltas, residuals_c, k2s, need_nnz: bool = False):
     aggregates is denser than the priced wire message — the byte counts
     model the intended wire, not the reference pipeline's dense-noise
     artifact."""
+    if cfg.backend == "pallas":
+        return _upload_pipeline_fused(cfg, deltas, residuals_c, k2s,
+                                      need_nnz)
     if cfg.sparsify_ratio < 1.0:
-        if cfg.backend == "pallas":
-            deltas, residuals_c = sparsify_pallas_cohort(
-                deltas, residuals_c, cfg.sparsify_ratio)
-        else:
-            deltas, residuals_c, _ = jax.vmap(
-                lambda r, d: accum.accumulate_and_sparsify(
-                    r, d, cfg.sparsify_ratio))(residuals_c, deltas)
+        deltas, residuals_c, _ = jax.vmap(
+            lambda r, d: accum.accumulate_and_sparsify(
+                r, d, cfg.sparsify_ratio))(residuals_c, deltas)
     nnz = count_upload_nnz(deltas, cfg.backend) if need_nnz else None
     if cfg.sigma > 0.0:
-        if cfg.backend == "pallas":
-            deltas = aldp_pallas_cohort(deltas, k2s, cfg.sigma, cfg.clip_s)
-        else:
-            deltas = jax.vmap(
-                lambda d, k: aldp.aldp_perturb(d, k, cfg.sigma,
-                                               cfg.clip_s)[0])(deltas, k2s)
+        deltas = jax.vmap(
+            lambda d, k: aldp.aldp_perturb(d, k, cfg.sigma,
+                                           cfg.clip_s)[0])(deltas, k2s)
     return deltas, residuals_c, nnz
+
+
+def _upload_pipeline_fused(cfg, deltas, residuals_c, k2s, need_nnz: bool):
+    """The pallas backend's upload pipeline: one fused megakernel launch
+    (`kernels.upload_fused`) over the flattened cohort instead of the
+    per-stage dispatch chain.  The two whole-tensor reductions the kernel
+    cannot fuse past (per-leaf DGC quantile threshold; post-sparsify L2
+    clip norm) run here as a single jnp pre-pass over `combined`."""
+    from ..kernels import upload_fused as uf
+
+    do_sparsify = cfg.sparsify_ratio < 1.0
+    apply_ldp = cfg.sigma > 0.0
+    if not (do_sparsify or apply_ldp):
+        # nothing to compute per element: skip the identity kernel (and,
+        # without nnz, the flatten too)
+        nnz = count_upload_nnz(deltas, "pallas") if need_nnz else None
+        return deltas, residuals_c, nnz
+    layout = cohort_layout(deltas)
+    flat_d = layout.flatten(deltas)
+    thresholds = flat_r = comb = None
+    if do_sparsify:
+        flat_r = layout.flatten(residuals_c)
+        comb = flat_d + flat_r
+        thresholds = jnp.stack(
+            [jax.vmap(lambda v: accum.leaf_threshold(
+                v, cfg.sparsify_ratio))(comb[:, off:off + size])
+             for off, size in zip(layout.offsets, layout.sizes)], axis=1)
+    seeds = scales = None
+    if apply_ldp:
+        if do_sparsify:
+            thr_elem = uf.spread_thresholds(thresholds, layout.offsets,
+                                            layout.total)
+            sp = jnp.where(jnp.abs(comb) >= thr_elem, comb, 0.0)
+        else:
+            sp = flat_d
+        norms = jnp.sqrt(jnp.sum(jnp.square(sp), axis=1))
+        scales = 1.0 / jnp.maximum(1.0, norms / cfg.clip_s)
+        seeds = node_noise_seeds(k2s)
+    up, newr, nnz = uf.upload_fused_fleet(
+        flat_d, flat_r, thresholds, seeds, scales, cfg.sigma, cfg.clip_s,
+        boundaries=layout.offsets, need_nnz=need_nnz)
+    deltas = layout.unflatten(up)
+    if do_sparsify:
+        residuals_c = layout.unflatten_like(newr, residuals_c)
+    return deltas, residuals_c, nnz
+
+
+def node_noise_seeds(k2s) -> jnp.ndarray:
+    """Node-distinct int32 noise seeds folded from the per-node PRNG keys —
+    shared by the fused and unfused pallas ALDP paths."""
+    raw = k2s
+    if jnp.issubdtype(k2s.dtype, jax.dtypes.prng_key):   # new-style typed keys
+        raw = jax.random.key_data(k2s)
+    return (raw[:, 0] ^ raw[:, -1]).astype(jnp.int32)
 
 
 def count_upload_nnz(deltas, backend: str = "reference") -> jnp.ndarray:
@@ -108,7 +160,7 @@ def count_upload_nnz(deltas, backend: str = "reference") -> jnp.ndarray:
     flatten/concat materialization)."""
     if backend == "pallas":
         from ..net.codecs import count_nnz
-        flat, _ = flatten_cohort(deltas)
+        flat = cohort_layout(deltas).flatten(deltas)
         return count_nnz(flat, backend="pallas")
     c = jax.tree.leaves(deltas)[0].shape[0]
     return sum(jnp.sum(d.reshape(c, -1) != 0, axis=1).astype(jnp.int32)
@@ -149,26 +201,80 @@ def detect_masked(accs: jnp.ndarray, valid: jnp.ndarray, s: float
 
 
 # ---------------------------------------------------------------------------
-# pallas-backed cohort upload pipeline
+# cohort flat layout (cached) + the pallas-backed cohort upload pipeline
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CohortLayout:
+    """Static flat layout of a stacked cohort tree: leaf order, shapes,
+    dtypes and start offsets in the concatenated (C, P) f32 view.  Built
+    once per (treedef, shapes, dtypes) via `cohort_layout` — the flatten /
+    unflatten closures and leaf boundaries used to be rebuilt on every
+    trace by each pipeline stage separately; now every pallas stage (the
+    fused pipeline, the unfused ALDP chain, nnz counting, the window fold)
+    shares one cached layout."""
+    treedef: object
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[np.dtype, ...]
+    sizes: Tuple[int, ...]
+    offsets: Tuple[int, ...]        # start of each leaf in the flat axis
+    total: int                      # P — flattened per-node element count
+
+    def flatten(self, tree) -> jnp.ndarray:
+        """Stacked tree with leading cohort axis -> (C, P) f32."""
+        return jnp.concatenate(
+            [l.reshape(l.shape[0], -1).astype(jnp.float32)
+             for l in jax.tree.leaves(tree)], axis=1)
+
+    def flatten_one(self, tree) -> jnp.ndarray:
+        """Unbatched tree (no cohort axis) -> (P,) f32, same leaf order."""
+        return jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                                for l in jax.tree.leaves(tree)])
+
+    def unflatten(self, flat: jnp.ndarray):
+        out = [flat[:, o:o + s].reshape((flat.shape[0],) + shape).astype(dt)
+               for shape, dt, s, o in zip(self.shapes, self.dtypes,
+                                          self.sizes, self.offsets)]
+        return jax.tree.unflatten(self.treedef, out)
+
+    def unflatten_one(self, flat: jnp.ndarray):
+        out = [flat[o:o + s].reshape(shape).astype(dt)
+               for shape, dt, s, o in zip(self.shapes, self.dtypes,
+                                          self.sizes, self.offsets)]
+        return jax.tree.unflatten(self.treedef, out)
+
+    def unflatten_like(self, flat: jnp.ndarray, tree):
+        """Unflatten casting to `tree`'s leaf dtypes (e.g. residual trees,
+        whose dtypes may differ from the deltas this layout was built on)."""
+        leaves = jax.tree.leaves(tree)
+        out = [flat[:, o:o + s].reshape((flat.shape[0],) + shape)
+               .astype(l.dtype)
+               for shape, l, s, o in zip(self.shapes, leaves, self.sizes,
+                                         self.offsets)]
+        return jax.tree.unflatten(self.treedef, out)
+
+
+@functools.lru_cache(maxsize=128)
+def _cohort_layout(treedef, shapes, dtypes) -> CohortLayout:
+    sizes = tuple(int(np.prod(s)) for s in shapes)
+    offsets = tuple(int(o) for o in np.concatenate(
+        [[0], np.cumsum(sizes)[:-1]]))
+    return CohortLayout(treedef, shapes, dtypes, sizes, offsets,
+                        int(sum(sizes)))
+
+
+def cohort_layout(tree) -> CohortLayout:
+    """Cached `CohortLayout` for a stacked tree (leading cohort axis)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return _cohort_layout(treedef,
+                          tuple(tuple(l.shape[1:]) for l in leaves),
+                          tuple(np.dtype(l.dtype) for l in leaves))
+
 
 def flatten_cohort(tree):
     """Stacked tree with leading cohort axis -> ((C, P) flat, unflatten)."""
-    leaves, treedef = jax.tree.flatten(tree)
-    shapes = [l.shape[1:] for l in leaves]
-    sizes = [int(np.prod(s)) for s in shapes]
-    flat = jnp.concatenate([l.reshape(l.shape[0], -1).astype(jnp.float32)
-                            for l in leaves], axis=1)
-
-    def unflatten(f):
-        out, off = [], 0
-        for shape, size, leaf in zip(shapes, sizes, leaves):
-            out.append(f[:, off:off + size].reshape((f.shape[0],) + shape)
-                       .astype(leaf.dtype))
-            off += size
-        return jax.tree.unflatten(treedef, out)
-
-    return flat, unflatten
+    layout = cohort_layout(tree)
+    return layout.flatten(tree), layout.unflatten
 
 
 def sparsify_pallas_cohort(deltas, residuals, ratio: float):
@@ -197,18 +303,18 @@ def sparsify_pallas_cohort(deltas, residuals, ratio: float):
 def aldp_pallas_cohort(deltas, k2s, sigma: float, clip_s: float):
     """Cohort ALDP via the node-batched `ldp_perturb_fleet` kernel: whole-
     delta clip scale per node, in-kernel Gaussian noise (node-distinct
-    seeds folded from the per-node PRNG keys)."""
+    seeds folded from the per-node PRNG keys).  Kept as the unfused
+    comparator for `kernels.upload_fused` (benchmarks + property tests);
+    the engines' pallas backend runs the fused pipeline."""
     from ..kernels.ldp_noise import ldp_perturb_fleet
 
-    flat, unflatten = flatten_cohort(deltas)
+    layout = cohort_layout(deltas)
+    flat = layout.flatten(deltas)
     norms = jnp.sqrt(jnp.sum(jnp.square(flat), axis=1))
     scales = 1.0 / jnp.maximum(1.0, norms / clip_s)
-    raw = k2s
-    if jnp.issubdtype(k2s.dtype, jax.dtypes.prng_key):   # new-style typed keys
-        raw = jax.random.key_data(k2s)
-    seeds = (raw[:, 0] ^ raw[:, -1]).astype(jnp.int32)
-    out = ldp_perturb_fleet(flat, seeds, scales, sigma, clip_s)
-    return unflatten(out)
+    out = ldp_perturb_fleet(flat, node_noise_seeds(k2s), scales, sigma,
+                            clip_s)
+    return layout.unflatten(out)
 
 
 # ---------------------------------------------------------------------------

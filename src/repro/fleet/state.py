@@ -1,7 +1,7 @@
 """Stacked fleet state: every per-node quantity lives on a leading node axis.
 
-The sequential `FederatedTrainer` keeps per-node state in Python lists
-(`self.residuals`, `self.node_time`) and touches one node at a time. The
+The sequential reference loop keeps per-node state in Python lists
+(residuals, node compute times) and touches one node at a time. The
 fleet engine instead stacks everything — residual pytrees, PRNG keys, data
 shards — along axis 0 so a whole cohort moves through local SGD, ALDP and
 detection in a single device program. This module is the stacking/indexing

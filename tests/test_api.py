@@ -1,14 +1,15 @@
 """The `repro.api` redesign acceptance suite.
 
-* Parity: for every mode in {sfl, afl, sldpfl, aldpfl} × {single-device,
-  forced-8-device mesh}, ``run(compile_plan(spec))`` reproduces the
-  pre-redesign `FederatedTrainer` round-record trajectory bit-equal-to-
-  float-close (the trainer is now a shim over the same runner, and the
-  shim itself must keep emitting the legacy trajectories).
-* Deprecation shim: every legacy ``FederatedTrainer(...).run()`` call
-  keeps working and emits exactly one DeprecationWarning.
-* Spec/plan validation: `compile_plan` and `FedConfig.validate` reject
-  the cross-field contradictions the old flag soup let through.
+* Parity: for every scheme in {sync, async} × {σ=0, σ>0} (the paper's
+  sfl/afl/sldpfl/aldpfl), the single-device fleet engines and the
+  forced-8-device mesh reproduce the sequential reference loop's
+  round-record trajectory bit-equal-to-float-close — the reference loops
+  (`Topology(kind="sequential")`) are the retained parity oracles from
+  the seed implementation.
+* Shim retirement: the legacy `FederatedTrainer`/`FedConfig` surface is
+  gone (its deprecation horizon was PR 4 -> ~PR 7).
+* Spec/plan validation: `compile_plan` rejects the cross-field
+  contradictions the old flag soup let through.
 * Serialization: `ExperimentSpec` and `RunReport` JSON round trips
   (example-based + hypothesis).
 * Window policies: resolve math and the load-aware target-arrivals
@@ -20,7 +21,6 @@ import os
 import subprocess
 import sys
 import textwrap
-import warnings
 
 import jax
 import numpy as np
@@ -29,8 +29,7 @@ import pytest
 from _optional import given, settings, st
 
 from repro import api
-from repro.core import FedConfig, FederatedTrainer
-from repro.core.federated import RoundRecord
+from repro.api import RoundRecord
 from repro.data import make_federated_image_data
 from repro.fleet import NodeProfile
 from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
@@ -44,6 +43,10 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 N, ROUNDS = 5, 3
 
+# the paper's four schemes as (schedule kind, noise multiplier)
+SCHEMES = {"sfl": ("sync", 0.0), "afl": ("async", 0.0),
+           "sldpfl": ("sync", 0.05), "aldpfl": ("async", 0.05)}
+
 
 @pytest.fixture(scope="module")
 def small_data():
@@ -52,10 +55,19 @@ def small_data():
         n_cloud_test=64, hw=(8, 8))
 
 
-def _cfg(mode, use_fleet=True, **kw):
-    return FedConfig(mode=mode, n_nodes=N, rounds=ROUNDS, local_steps=3,
-                     batch_size=16, lr=0.1, detect=True, sigma=0.05,
-                     sparsify_ratio=0.5, seed=0, use_fleet=use_fleet, **kw)
+def _parity_spec(mode, topology="single", **kw):
+    kind, sigma = SCHEMES[mode]
+    base = dict(
+        fleet=api.FleetSpec(n_nodes=N),
+        schedule=api.SchedulePolicy(kind=kind),
+        privacy=api.PrivacySpec(sigma=sigma),
+        compression=api.CompressionSpec(sparsify_ratio=0.5),
+        defense=api.DefenseSpec(detect=True),
+        topology=api.Topology(kind=topology),
+        train=api.TrainSpec(local_steps=3, batch_size=16, lr=0.1),
+        rounds=ROUNDS, seed=0)
+    base.update(kw)
+    return api.ExperimentSpec(**base)
 
 
 def _population(small_data):
@@ -67,72 +79,70 @@ def _population(small_data):
         profile=NodeProfile.lognormal(N, 1.0, 0.5, 12.5e6, seed=0))
 
 
-def _records_close(a, b, atol=2e-3):
+def _records_close(a, b, atol=2e-3, t_rtol=1e-5):
+    # cross-engine virtual time accumulates in a different op order, so the
+    # event-loop vs batched-window clocks agree to ~1e-5 relative (the same
+    # tolerance the fleet-vs-sequential suite has pinned since PR 2), not
+    # bitwise.
     assert len(a) == len(b)
     np.testing.assert_allclose([r.accuracy for r in a],
                                [r.accuracy for r in b], atol=atol)
     np.testing.assert_allclose([r.t for r in a], [r.t for r in b],
-                               rtol=1e-9)
+                               rtol=t_rtol)
     assert [r.n_rejected for r in a] == [r.n_rejected for r in b]
     assert [r.comm_bytes for r in a] == [r.comm_bytes for r in b]
     assert [r.version for r in a] == [r.version for r in b]
 
 
 # ---------------------------------------------------------------------------
-# parity: api.run(compile_plan(spec)) ≡ legacy trainer, all four modes
+# parity: fleet engines ≡ sequential reference loop, all four schemes
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("mode", ["sfl", "afl", "sldpfl", "aldpfl"])
-def test_api_matches_trainer_single_device(mode, small_data):
-    """Single-device acceptance: the declarative path reproduces the
-    trainer trajectory bit-equal-to-float-close, and the shim emits
-    exactly one DeprecationWarning per run()."""
-    node_data, test, cloud, _ = small_data
-    cfg = _cfg(mode)
-    tr = FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64), mlp_loss,
-                          mlp_accuracy, node_data, test, cloud, cfg)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        hist = tr.run()
-    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
-    assert len(deps) == 1, [str(w.message) for w in deps]
+def test_api_fleet_matches_sequential_reference(mode, small_data):
+    """Single-device acceptance: the batched fleet engines reproduce the
+    sequential reference loop (the seed per-node/per-arrival
+    implementation, kept as `Topology(kind='sequential')`)
+    bit-equal-to-float-close."""
+    seq_plan = api.compile_plan(_parity_spec(mode, topology="sequential"))
+    assert seq_plan.engine == "sequential"
+    ref = api.run(seq_plan, population=_population(small_data))
 
-    plan = api.compile_plan(api.spec_from_fed_config(cfg))
+    plan = api.compile_plan(_parity_spec(mode, topology="single"))
+    assert plan.engine == "fleet"
     rep = api.run(plan, population=_population(small_data))
-    _records_close(hist, rep.records)
-    assert rep.epsilon_spent == pytest.approx(tr.epsilon_spent())
-    assert rep.kappa == pytest.approx(tr.kappa())
+    _records_close(ref.records, rep.records)
+    assert rep.epsilon_spent == pytest.approx(ref.epsilon_spent)
+    assert rep.kappa == pytest.approx(ref.kappa)
     # report invariants
     assert rep.final_accuracy == rep.records[-1].accuracy
     assert rep.mode == ("sync" if mode in ("sfl", "sldpfl") else "async")
     assert all(d["n_rejected"] > 0 for d in rep.detections)
 
 
-@pytest.mark.parametrize("mode", ["sfl", "aldpfl"])
-def test_api_sequential_topology_matches_reference_loop(mode, small_data):
-    """Topology(kind='sequential') is the seed per-node/per-arrival loop."""
-    node_data, test, cloud, _ = small_data
-    cfg = _cfg(mode, use_fleet=False)
-    tr = FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64), mlp_loss,
-                          mlp_accuracy, node_data, test, cloud, cfg)
-    hist = tr.run()
-    plan = api.compile_plan(api.spec_from_fed_config(cfg))
-    assert plan.engine == "sequential"
-    rep = api.run(plan, population=_population(small_data))
-    _records_close(hist, rep.records)
+def test_legacy_trainer_shim_removed():
+    """The `FederatedTrainer`/`FedConfig` deprecation shim (horizon set at
+    PR 4) is gone: neither the legacy classes nor the lowering helpers
+    survive anywhere on the public surface."""
+    import repro.core as core
+    assert not hasattr(core, "FedConfig")
+    assert not hasattr(core, "FederatedTrainer")
+    assert not hasattr(api, "spec_from_fed_config")
+    assert not hasattr(api, "plan_from_fed_config")
+    with pytest.raises(ImportError):
+        from repro.core import federated  # noqa: F401
 
 
-def test_api_matches_trainer_on_8_device_mesh():
-    """Mesh acceptance: all four modes, forced-8-device host mesh —
-    run(compile_plan(spec)) float-closes the trainer's fleet_mesh=8
-    trajectory (subprocess pattern from test_fleet_shard.py)."""
+def test_api_mesh_matches_single_device_on_8_devices():
+    """Mesh acceptance: all four schemes, forced-8-device host mesh —
+    Topology('mesh') float-closes the single-device fleet trajectory
+    (subprocess pattern from test_fleet_shard.py)."""
     script = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import json, warnings
+        import dataclasses, json
         import jax, numpy as np
         from repro import api
-        from repro.core import FedConfig, FederatedTrainer
         from repro.data import make_federated_image_data
         from repro.fleet import NodeProfile
         from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
@@ -142,24 +152,33 @@ def test_api_matches_trainer_on_8_device_mesh():
             0, n_nodes=n, n_malicious=2, n_train=320, n_test=128,
             n_cloud_test=64, hw=(8, 8))
         out = {"n_devices": len(jax.devices())}
-        for mode in ("sfl", "afl", "sldpfl", "aldpfl"):
-            cfg = FedConfig(mode=mode, n_nodes=n, rounds=2, local_steps=3,
-                            batch_size=16, lr=0.1, detect=True, sigma=0.05,
-                            sparsify_ratio=0.5, seed=0, fleet_mesh=8)
-            tr = FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64),
-                                  mlp_loss, mlp_accuracy, node_data, test,
-                                  cloud, cfg)
-            with warnings.catch_warnings():
-                warnings.simplefilter("ignore", DeprecationWarning)
-                hist = tr.run()
-            plan = api.compile_plan(api.spec_from_fed_config(cfg))
-            pop = api.Population(
-                params=init_mlp(jax.random.PRNGKey(0), 64),
-                loss_fn=mlp_loss, acc_fn=mlp_accuracy, node_data=node_data,
-                test_data=test, cloud_test=cloud,
-                profile=NodeProfile.lognormal(n, 1.0, 0.5, 12.5e6, seed=0))
-            rep = api.run(plan, population=pop)
+        schemes = {"sfl": ("sync", 0.0), "afl": ("async", 0.0),
+                   "sldpfl": ("sync", 0.05), "aldpfl": ("async", 0.05)}
+        for mode, (kind, sigma) in schemes.items():
+            spec = api.ExperimentSpec(
+                fleet=api.FleetSpec(n_nodes=n),
+                schedule=api.SchedulePolicy(kind=kind),
+                privacy=api.PrivacySpec(sigma=sigma),
+                compression=api.CompressionSpec(sparsify_ratio=0.5),
+                defense=api.DefenseSpec(detect=True),
+                topology=api.Topology(kind="single"),
+                train=api.TrainSpec(local_steps=3, batch_size=16, lr=0.1),
+                rounds=2, seed=0)
+
+            def pop():
+                return api.Population(
+                    params=init_mlp(jax.random.PRNGKey(0), 64),
+                    loss_fn=mlp_loss, acc_fn=mlp_accuracy,
+                    node_data=node_data, test_data=test, cloud_test=cloud,
+                    profile=NodeProfile.lognormal(n, 1.0, 0.5, 12.5e6,
+                                                  seed=0))
+
+            ref = api.run(api.compile_plan(spec), population=pop())
+            mesh_spec = dataclasses.replace(
+                spec, topology=api.Topology(kind="mesh", devices=8))
+            rep = api.run(api.compile_plan(mesh_spec), population=pop())
             assert rep.engine == "fleet-mesh", rep.engine
+            hist = ref.records
             out[f"{mode}_len"] = len(hist) - len(rep.records)
             out[f"{mode}_acc"] = max(abs(a.accuracy - b.accuracy)
                                      for a, b in zip(hist, rep.records))
@@ -184,22 +203,25 @@ def test_api_matches_trainer_on_8_device_mesh():
         assert rec[f"{mode}_rej"] == 0, rec
 
 
-def test_shim_hands_back_state(small_data):
-    """The shim keeps the trainer's PRNG key/residuals faithful across
-    run() — follow-on runs continue the chain like the pre-redesign
-    trainer did."""
-    node_data, test, cloud, _ = small_data
-    cfg = _cfg("aldpfl")
-    tr = FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64), mlp_loss,
-                          mlp_accuracy, node_data, test, cloud, cfg)
-    key_before = np.asarray(tr.key).copy()
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        tr.run()
-    assert not np.array_equal(np.asarray(tr.key), key_before)
-    assert len(tr.history) == ROUNDS
+def test_execute_hands_back_state(small_data):
+    """`execute` keeps the run state's PRNG key/residuals faithful —
+    follow-on `execute` calls continue the chain, like the pre-redesign
+    trainer's repeated run() did."""
+    plan = api.compile_plan(_parity_spec("aldpfl"))
+    pop = _population(small_data)
+    state = api.init_state(plan, pop)
+    key_before = np.asarray(state.key).copy()
+    api.execute(plan, pop, state)
+    assert not np.array_equal(np.asarray(state.key), key_before)
+    assert len(state.history) == ROUNDS
     assert any(float(np.abs(np.asarray(leaf)).sum()) > 0
-               for leaf in jax.tree.leaves(tr.residuals))
+               for res in state.residuals
+               for leaf in jax.tree.leaves(res))
+    # a second execute continues the chain and the history
+    key_mid = np.asarray(state.key).copy()
+    api.execute(plan, pop, state)
+    assert not np.array_equal(np.asarray(state.key), key_mid)
+    assert len(state.history) == 2 * ROUNDS
 
 
 def test_execute_rejects_mismatched_population(small_data):
@@ -207,8 +229,7 @@ def test_execute_rejects_mismatched_population(small_data):
     arrival budget and record cadence derive from the spec, so a silent
     mismatch would run the wrong experiment (or return an empty report)."""
     spec = dataclasses.replace(
-        api.spec_from_fed_config(_cfg("afl")),
-        fleet=api.FleetSpec(n_nodes=N + 1))
+        _parity_spec("afl"), fleet=api.FleetSpec(n_nodes=N + 1))
     with pytest.raises(api.SpecError, match="population has"):
         api.run(api.compile_plan(spec),
                 population=_population(small_data))
@@ -230,7 +251,7 @@ def test_sync_cohort_accountant_charges_participants_only():
 
 
 # ---------------------------------------------------------------------------
-# validation: compile_plan cross-field errors + FedConfig gaps
+# validation: compile_plan cross-field errors
 # ---------------------------------------------------------------------------
 
 def _spec(**kw):
@@ -290,41 +311,25 @@ def test_compile_plan_resolves_derived_fields():
 
 
 @pytest.mark.parametrize("bad,match", [
-    (dict(mode="fedavg"), "mode"),
-    (dict(use_fleet=False, fleet_mesh=4), "use_fleet"),
-    (dict(fleet_mesh=0), "fleet_mesh"),
-    (dict(n_nodes=0), "n_nodes"),
-    (dict(rounds=0), "rounds"),
-    (dict(lr=0.0), "lr"),
-    (dict(alpha=1.5), "alpha"),
-    (dict(sparsify_ratio=0.0), "sparsify_ratio"),
-    (dict(detect_s=0.0), "detect_s"),
-    (dict(detect_warmup=0), "detect_warmup"),
-    (dict(detect_window=0), "detect_window"),
-    (dict(sigma=-1.0), "sigma"),
-    (dict(sigma=None, delta=1.5), "delta"),
-    (dict(bandwidth_bytes_per_s=0.0), "bandwidth"),
-    (dict(heterogeneity=-0.1), "heterogeneity"),
+    (dict(fleet=api.FleetSpec(n_nodes=0)), "n_nodes"),
+    (dict(train=api.TrainSpec(local_steps=1, batch_size=4, lr=0.0)), "lr"),
+    (dict(schedule=api.SchedulePolicy(kind="sync", alpha=1.5)), "alpha"),
+    (dict(defense=api.DefenseSpec(detect_warmup=0)), "detect_warmup"),
+    (dict(defense=api.DefenseSpec(detect_window=0)), "detect_window"),
+    (dict(privacy=api.PrivacySpec(sigma=-1.0)), "sigma"),
+    (dict(fleet=api.FleetSpec(
+        n_nodes=4, profile=api.NodeHeterogeneity(bandwidth_bps=0.0))),
+     "bandwidth"),
+    (dict(fleet=api.FleetSpec(
+        n_nodes=4, profile=api.NodeHeterogeneity(heterogeneity=-0.1))),
+     "heterogeneity"),
 ])
-def test_fedconfig_validate_rejects(bad, match):
-    cfg = FedConfig(**bad)
-    with pytest.raises(ValueError, match=match):
-        cfg.validate()
-
-
-def test_fedconfig_validation_gaps_raise_at_construction(small_data):
-    """The gaps compile_plan surfaced are now constructor errors: an
-    unknown mode no longer falls through to the async branch, and a mesh
-    without the fleet engines no longer has anything to shard."""
-    node_data, test, cloud, _ = small_data
-    params = init_mlp(jax.random.PRNGKey(0), 64)
-    with pytest.raises(ValueError, match="mode"):
-        FederatedTrainer(params, mlp_loss, mlp_accuracy, node_data, test,
-                         cloud, FedConfig(mode="typo", n_nodes=N))
-    with pytest.raises(ValueError, match="use_fleet"):
-        FederatedTrainer(params, mlp_loss, mlp_accuracy, node_data, test,
-                         cloud, FedConfig(n_nodes=N, use_fleet=False,
-                                          fleet_mesh=2))
+def test_compile_plan_rejects_out_of_range_knobs(bad, match):
+    """The range checks the old FedConfig.validate carried now live only
+    in `compile_plan` — out-of-range knobs fail at compile time, not deep
+    inside a jitted round."""
+    with pytest.raises(api.SpecError, match=match):
+        api.compile_plan(_spec(**bad))
 
 
 # ---------------------------------------------------------------------------

@@ -7,9 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (FedConfig, FederatedTrainer, detection_threshold,
-                        mix_stale, mix_stale_sequence, ring_detect, ring_init,
-                        ring_push, ring_threshold)
+from repro import api
+from repro.core import (detection_threshold, mix_stale, mix_stale_sequence,
+                        ring_detect, ring_init, ring_push, ring_threshold)
 from repro.data import make_federated_image_data
 from repro.fleet import (build_async_engine, chain_node_keys,
                          chain_node_keys_masked, get_scenario)
@@ -111,35 +111,60 @@ def test_mix_stale_sequence_gate_skips_arrivals():
 # engine ≡ sequential event loop (the acceptance bar)
 # ---------------------------------------------------------------------------
 
-def _paired_async_trainers(mode, sigma, sparsify, staleness_adaptive=False):
+def _paired_async_runs(sigma, sparsify, staleness_adaptive=False):
+    """((fleet report, fleet state), (reference report, reference state))
+    for one async scheme — the seed per-arrival event loop
+    (`Topology('sequential')`) is the parity oracle."""
     node_data, test, cloud, _ = make_federated_image_data(
         0, n_nodes=8, n_malicious=2, n_train=640, n_test=256,
         n_cloud_test=128, hw=(8, 8))
 
-    def mk(use_fleet):
-        cfg = FedConfig(mode=mode, n_nodes=8, rounds=4, local_steps=8,
-                        batch_size=16, lr=0.1, detect=True, sigma=sigma,
-                        sparsify_ratio=sparsify, seed=0, use_fleet=use_fleet,
-                        staleness_adaptive=staleness_adaptive)
-        return FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64),
-                                mlp_loss, mlp_accuracy, node_data, test,
-                                cloud, cfg)
+    def run(topology):
+        from repro.fleet import NodeProfile
+        spec = api.ExperimentSpec(
+            fleet=api.FleetSpec(n_nodes=8),
+            schedule=api.SchedulePolicy(
+                kind="async", staleness_adaptive=staleness_adaptive),
+            privacy=api.PrivacySpec(sigma=sigma),
+            compression=api.CompressionSpec(sparsify_ratio=sparsify),
+            defense=api.DefenseSpec(detect=True),
+            topology=api.Topology(kind=topology),
+            train=api.TrainSpec(local_steps=8, batch_size=16, lr=0.1),
+            rounds=4, seed=0)
+        plan = api.compile_plan(spec)
+        pop = api.Population(
+            params=init_mlp(jax.random.PRNGKey(0), 64), loss_fn=mlp_loss,
+            acc_fn=mlp_accuracy, node_data=node_data, test_data=test,
+            cloud_test=cloud,
+            profile=NodeProfile.lognormal(8, 1.0, 0.5, 12.5e6, seed=0))
+        state = api.init_state(plan, pop)
+        api.execute(plan, pop, state)
+        comm = sum(r.comm_time for r in state.history)
+        comp = sum(r.comp_time for r in state.history)
+        eps = (state.accountant.epsilon(spec.privacy.delta)
+               if state.accountant is not None else 0.0)
+        from repro.core.async_update import communication_efficiency
+        rep = api.RunReport(
+            mode=plan.mode, engine=plan.engine, records=state.history,
+            kappa=communication_efficiency(comm, comp), epsilon_spent=eps,
+            final_accuracy=state.history[-1].accuracy,
+            final_params=state.params)
+        return rep, state
 
-    return mk(True), mk(False)
+    return run("single"), run("sequential")
 
 
-@pytest.mark.parametrize("mode,sigma,sparsify,stale", [
-    ("afl", None, 1.0, False),        # plain async + detection
-    ("aldpfl", 0.05, 1.0, False),     # + LDP noise (shared PRNG chain)
-    ("aldpfl", 0.05, 0.25, False),    # + DGC sparsified uploads
-    ("afl", None, 1.0, True),         # staleness-adaptive mixing
+@pytest.mark.parametrize("sigma,sparsify,stale", [
+    (0.0, 1.0, False),      # plain async + detection (afl)
+    (0.05, 1.0, False),     # + LDP noise, shared PRNG chain (aldpfl)
+    (0.05, 0.25, False),    # + DGC sparsified uploads
+    (0.0, 1.0, True),       # staleness-adaptive mixing
 ])
-def test_async_fleet_matches_event_loop(mode, sigma, sparsify, stale):
-    fleet_tr, seq_tr = _paired_async_trainers(mode, sigma, sparsify, stale)
-    hf = fleet_tr.run()
-    hs = seq_tr.run()
-    for a, b in zip(jax.tree.leaves(fleet_tr.params),
-                    jax.tree.leaves(seq_tr.params)):
+def test_async_fleet_matches_event_loop(sigma, sparsify, stale):
+    (fleet_rep, _), (seq_rep, _) = _paired_async_runs(sigma, sparsify, stale)
+    hf, hs = fleet_rep.records, seq_rep.records
+    for a, b in zip(jax.tree.leaves(fleet_rep.final_params),
+                    jax.tree.leaves(seq_rep.final_params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
     # same record cadence (one per n_nodes arrivals) and same trajectory
     assert len(hf) == len(hs)
@@ -149,53 +174,66 @@ def test_async_fleet_matches_event_loop(mode, sigma, sparsify, stale):
                                rtol=1e-5)
     assert [r.comm_bytes for r in hf] == [r.comm_bytes for r in hs]
     assert [r.n_rejected for r in hf] == [r.n_rejected for r in hs]
-    assert fleet_tr.epsilon_spent() == pytest.approx(seq_tr.epsilon_spent())
+    assert fleet_rep.epsilon_spent == pytest.approx(seq_rep.epsilon_spent)
 
 
 def test_async_fleet_key_chain_hand_back():
-    """After a fleet-async run the trainer's PRNG key equals the event
+    """After a fleet-async run the handed-back PRNG key equals the event
     loop's, so follow-on work stays faithful."""
-    fleet_tr, seq_tr = _paired_async_trainers("afl", None, 1.0)
-    fleet_tr.run()
-    seq_tr.run()
-    np.testing.assert_array_equal(np.asarray(fleet_tr.key),
-                                  np.asarray(seq_tr.key))
+    (_, fleet_state), (_, seq_state) = _paired_async_runs(0.0, 1.0)
+    np.testing.assert_array_equal(np.asarray(fleet_state.key),
+                                  np.asarray(seq_state.key))
 
 
 # ---------------------------------------------------------------------------
 # async metrics accounting (the comm_bytes/kappa fix)
 # ---------------------------------------------------------------------------
 
-def _total_bytes(mode, use_fleet):
+def _total_bytes(kind, topology):
     node_data, test, cloud, _ = make_federated_image_data(
         0, n_nodes=6, n_malicious=0, n_train=360, n_test=128,
         n_cloud_test=64, hw=(8, 8))
-    cfg = FedConfig(mode=mode, n_nodes=6, rounds=3, local_steps=4,
-                    batch_size=16, lr=0.1, detect=False, sparsify_ratio=1.0,
-                    seed=0, use_fleet=use_fleet)
-    tr = FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64), mlp_loss,
-                          mlp_accuracy, node_data, test, cloud, cfg)
-    hist = tr.run()
-    return sum(r.comm_bytes for r in hist), tr
+    from repro.fleet import NodeProfile
+    spec = api.ExperimentSpec(
+        fleet=api.FleetSpec(n_nodes=6),
+        schedule=api.SchedulePolicy(kind=kind),
+        defense=api.DefenseSpec(detect=False),
+        topology=api.Topology(kind=topology),
+        train=api.TrainSpec(local_steps=4, batch_size=16, lr=0.1),
+        rounds=3, seed=0)
+    pop = api.Population(
+        params=init_mlp(jax.random.PRNGKey(0), 64), loss_fn=mlp_loss,
+        acc_fn=mlp_accuracy, node_data=node_data, test_data=test,
+        cloud_test=cloud,
+        profile=NodeProfile.lognormal(6, 1.0, 0.5, 12.5e6, seed=0))
+    rep = api.run(api.compile_plan(spec), pop)
+    return sum(r.comm_bytes for r in rep.records), rep
 
 
-@pytest.mark.parametrize("use_fleet", [True, False])
-def test_async_total_bytes_match_sync(use_fleet):
+@pytest.mark.parametrize("topology", ["single", "sequential"])
+def test_async_total_bytes_match_sync(topology):
     """rounds×n_nodes arrivals at sparsify=1 move exactly as many bytes as
     rounds synchronous cohorts — the old per-record accounting understated
     async traffic by ~n_nodes×."""
-    async_bytes, async_tr = _total_bytes("afl", use_fleet)
-    sync_bytes, _ = _total_bytes("sfl", use_fleet)
+    async_bytes, async_rep = _total_bytes("async", topology)
+    sync_bytes, _ = _total_bytes("sync", topology)
     assert async_bytes == sync_bytes
     # kappa now reflects per-arrival comp/comm totals, not the last arrival
-    assert 0.0 < async_tr.kappa() < 1.0
+    assert 0.0 < async_rep.kappa < 1.0
 
 
-def test_fedconfig_detection_window_fields():
-    cfg = FedConfig(n_nodes=10)
-    assert cfg.detection_window() == 10 and cfg.detect_warmup == 4
-    assert FedConfig(n_nodes=2).detection_window() == 4
-    assert FedConfig(n_nodes=10, detect_window=6).detection_window() == 6
+def test_plan_detection_window_defaults():
+    def window(n_nodes, **defense_kw):
+        spec = api.ExperimentSpec(
+            fleet=api.FleetSpec(n_nodes=n_nodes),
+            schedule=api.SchedulePolicy(kind="async"),
+            defense=api.DefenseSpec(detect=True, **defense_kw))
+        return api.compile_plan(spec).detect_window
+
+    assert window(10) == 10
+    assert window(2) == 4
+    assert window(10, detect_window=6) == 6
+    assert api.DefenseSpec().detect_warmup == 4
 
 
 # ---------------------------------------------------------------------------

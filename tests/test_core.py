@@ -89,22 +89,31 @@ def test_accountant_rejects_zero_sigma():
         MomentsAccountant(sigma=-1.0)
 
 
-def test_trainer_no_noise_modes_have_no_accountant():
+def test_no_noise_runs_have_no_accountant():
     import numpy as _np
-    from repro.core import FedConfig, FederatedTrainer
+    from repro import api
+    from repro.fleet import NodeProfile
     from repro.models.mlp import init_mlp, mlp_accuracy, mlp_loss
     x = _np.zeros((8, 4, 4, 1), _np.float32)
     y = _np.zeros((8,), _np.int32)
-    data = ([(x, y), (x, y)], (x, y), (x, y))
     params = init_mlp(jax.random.PRNGKey(0), 16)
-    for mode, has_acct in [("sfl", False), ("afl", False),
-                           ("sldpfl", True), ("aldpfl", True)]:
-        tr = FederatedTrainer(params, mlp_loss, mlp_accuracy, data[0],
-                              data[1], data[2],
-                              FedConfig(mode=mode, n_nodes=2, sigma=0.05))
-        assert (tr.accountant is not None) == has_acct, mode
-        if not has_acct:
-            assert tr.sigma == 0.0 and tr.epsilon_spent() == 0.0
+    for kind in ("sync", "async"):
+        for sigma, has_acct in [(0.0, False), (0.05, True)]:
+            spec = api.ExperimentSpec(
+                fleet=api.FleetSpec(n_nodes=2),
+                schedule=api.SchedulePolicy(kind=kind),
+                privacy=api.PrivacySpec(sigma=sigma), rounds=1)
+            plan = api.compile_plan(spec)
+            pop = api.Population(params=params, loss_fn=mlp_loss,
+                                 acc_fn=mlp_accuracy,
+                                 node_data=[(x, y), (x, y)],
+                                 test_data=(x, y), cloud_test=(x, y),
+                                 profile=NodeProfile.lognormal(
+                                     2, 1.0, 0.5, 12.5e6, seed=0))
+            state = api.init_state(plan, pop)
+            assert (state.accountant is not None) == has_acct, (kind, sigma)
+            if not has_acct:
+                assert plan.sigma == 0.0
 
 
 def test_accountant_single_gaussian_close_to_classic():

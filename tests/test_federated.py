@@ -4,53 +4,67 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.configs import get_smoke_config
-from repro.core import FedConfig, FederatedTrainer, FedStepConfig
+from repro.core import FedStepConfig
 from repro.core.attacks import (attack_success_rate, dlg_attack, flip_labels,
                                 reconstruction_mse)
 from repro.core.fed_step import fed_train_step
 from repro.data import make_federated_image_data
+from repro.fleet import NodeProfile
 from repro.models import loss_fn as model_loss_fn
 from repro.models import init_params
 from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
 
+_KIND = {"sfl": "sync", "afl": "async", "sldpfl": "sync", "aldpfl": "async"}
 
-def small_fed_setup(mode, n_malicious=0, detect=False, rounds=4, seed=0,
-                    sparsify=1.0, sigma=0.05):
-    """sigma=0.05 keeps a workable SNR at this tiny scale; the paper's own
+
+def small_fed_run(mode, n_malicious=0, detect=False, rounds=4, seed=0,
+                  sparsify=1.0, sigma=0.05):
+    """(report, plan, population) for one small CNN run of a paper scheme.
+
+    sigma=0.05 keeps a workable SNR at this tiny scale; the paper's own
     calibration (ε=8, δ=1e-3 ⇒ σ≈0.47) collapses accuracy — a finding we
     assert explicitly in test_paper_calibrated_sigma_hurts (EXPERIMENTS.md)."""
     node_data, test, cloud, _ = make_federated_image_data(
         seed, n_nodes=5, n_malicious=n_malicious, n_train=800, n_test=300,
         n_cloud_test=200, hw=(14, 14))
-    cfg = FedConfig(mode=mode, n_nodes=5, rounds=rounds, local_steps=15,
-                    batch_size=32, lr=0.1, detect=detect, sigma=sigma,
-                    sparsify_ratio=sparsify, seed=seed)
-    params = init_cnn(jax.random.PRNGKey(seed), in_hw=(14, 14))
-    return FederatedTrainer(params, cnn_loss, cnn_accuracy, node_data, test,
-                            cloud, cfg)
+    if mode in ("sfl", "afl"):
+        sigma = 0.0                  # noiseless schemes, whatever sigma says
+    spec = api.ExperimentSpec(
+        fleet=api.FleetSpec(n_nodes=5),
+        schedule=api.SchedulePolicy(kind=_KIND[mode]),
+        privacy=api.PrivacySpec(sigma=sigma),
+        compression=api.CompressionSpec(sparsify_ratio=sparsify),
+        defense=api.DefenseSpec(detect=detect),
+        train=api.TrainSpec(local_steps=15, batch_size=32, lr=0.1),
+        rounds=rounds, seed=seed)
+    plan = api.compile_plan(spec)
+    pop = api.Population(
+        params=init_cnn(jax.random.PRNGKey(seed), in_hw=(14, 14)),
+        loss_fn=cnn_loss, acc_fn=cnn_accuracy, node_data=node_data,
+        test_data=test, cloud_test=cloud,
+        profile=NodeProfile.lognormal(5, 1.0, 0.5, 12.5e6, seed=seed))
+    return api.run(plan, pop), plan, pop
 
 
 def test_sfl_learns():
-    tr = small_fed_setup("sfl", rounds=5)
-    hist = tr.run()
-    assert hist[-1].accuracy > 0.5, hist[-1].accuracy
+    rep, _, _ = small_fed_run("sfl", rounds=5)
+    assert rep.final_accuracy > 0.5, rep.final_accuracy
 
 
 def test_afl_learns_and_is_faster_than_sfl():
-    tr_a = small_fed_setup("afl", rounds=4)
-    ha = tr_a.run()
-    tr_s = small_fed_setup("sfl", rounds=4)
-    hs = tr_s.run()
-    assert ha[-1].accuracy > 0.4
+    rep_a, _, _ = small_fed_run("afl", rounds=4)
+    rep_s, _, _ = small_fed_run("sfl", rounds=4)
+    assert rep_a.final_accuracy > 0.4
     # async: no barrier on the slowest node => lower simulated wall clock
-    assert ha[-1].t < hs[-1].t
+    assert rep_a.records[-1].t < rep_s.records[-1].t
 
 
 def test_aldpfl_close_to_afl():
     """Paper Fig. 7a: LDP costs only a little accuracy."""
-    acc_afl = small_fed_setup("afl", rounds=4).run()[-1].accuracy
-    acc_aldp = small_fed_setup("aldpfl", rounds=4).run()[-1].accuracy
+    acc_afl = small_fed_run("afl", rounds=4)[0].final_accuracy
+    acc_aldp = small_fed_run("aldpfl", rounds=4)[0].final_accuracy
     assert acc_aldp > acc_afl - 0.25
 
 
@@ -59,16 +73,15 @@ def test_detection_mitigates_label_flipping():
     craters class-1 accuracy, and detection rejects poisoned updates. (The
     general task moves much less — exactly the paper's observation.)"""
     from repro.models.cnn import per_class_accuracy
-    t_attack = small_fed_setup("aldpfl", n_malicious=2, detect=False,
-                               rounds=5)
-    t_attack.run()
-    cls1_attacked = float(per_class_accuracy(t_attack.params,
-                                             *t_attack.test_data, 1))
-    t_def = small_fed_setup("aldpfl", n_malicious=2, detect=True, rounds=5)
-    t_def.run()
-    cls1_defended = float(per_class_accuracy(t_def.params,
-                                             *t_def.test_data, 1))
-    rejected = sum(r.n_rejected for r in t_def.history)
+    rep_attack, _, pop_a = small_fed_run("aldpfl", n_malicious=2,
+                                         detect=False, rounds=5)
+    cls1_attacked = float(per_class_accuracy(rep_attack.final_params,
+                                             *pop_a.test_data, 1))
+    rep_def, _, pop_d = small_fed_run("aldpfl", n_malicious=2, detect=True,
+                                      rounds=5)
+    cls1_defended = float(per_class_accuracy(rep_def.final_params,
+                                             *pop_d.test_data, 1))
+    rejected = sum(r.n_rejected for r in rep_def.records)
     assert rejected > 0
     assert cls1_defended >= cls1_attacked - 0.05
 
@@ -78,31 +91,44 @@ def test_staleness_adaptive_async_runs():
     node_data, test, cloud, _ = make_federated_image_data(
         0, n_nodes=4, n_malicious=0, n_train=400, n_test=150,
         n_cloud_test=100, hw=(14, 14))
-    cfg = FedConfig(mode="aldpfl", n_nodes=4, rounds=2, local_steps=8,
-                    batch_size=32, lr=0.1, detect=False, sigma=0.05,
-                    staleness_adaptive=True, heterogeneity=1.0)
-    tr = FederatedTrainer(init_cnn(jax.random.PRNGKey(0), in_hw=(14, 14)),
-                          cnn_loss, cnn_accuracy, node_data, test, cloud, cfg)
-    hist = tr.run()
-    assert hist[-1].accuracy > 0.1
+    spec = api.ExperimentSpec(
+        fleet=api.FleetSpec(n_nodes=4),
+        schedule=api.SchedulePolicy(kind="async", staleness_adaptive=True),
+        privacy=api.PrivacySpec(sigma=0.05),
+        defense=api.DefenseSpec(detect=False),
+        train=api.TrainSpec(local_steps=8, batch_size=32, lr=0.1),
+        rounds=2, seed=0)
+    pop = api.Population(
+        params=init_cnn(jax.random.PRNGKey(0), in_hw=(14, 14)),
+        loss_fn=cnn_loss, acc_fn=cnn_accuracy, node_data=node_data,
+        test_data=test, cloud_test=cloud,
+        profile=NodeProfile.lognormal(4, 1.0, 1.0, 12.5e6, seed=0))
+    rep = api.run(api.compile_plan(spec), pop)
+    assert rep.final_accuracy > 0.1
 
 
 def test_noniid_dirichlet_trains():
     node_data, test, cloud, _ = make_federated_image_data(
         0, n_nodes=5, n_malicious=0, n_train=800, n_test=200,
         n_cloud_test=100, hw=(14, 14), iid=False, dirichlet_alpha=0.3)
-    cfg = FedConfig(mode="afl", n_nodes=5, rounds=4, local_steps=12,
-                    batch_size=32, lr=0.1, detect=False)
-    tr = FederatedTrainer(init_cnn(jax.random.PRNGKey(0), in_hw=(14, 14)),
-                          cnn_loss, cnn_accuracy, node_data, test, cloud, cfg)
-    hist = tr.run()
-    assert hist[-1].accuracy > 0.3
+    spec = api.ExperimentSpec(
+        fleet=api.FleetSpec(n_nodes=5),
+        schedule=api.SchedulePolicy(kind="async"),
+        defense=api.DefenseSpec(detect=False),
+        train=api.TrainSpec(local_steps=12, batch_size=32, lr=0.1),
+        rounds=4, seed=0)
+    pop = api.Population(
+        params=init_cnn(jax.random.PRNGKey(0), in_hw=(14, 14)),
+        loss_fn=cnn_loss, acc_fn=cnn_accuracy, node_data=node_data,
+        test_data=test, cloud_test=cloud,
+        profile=NodeProfile.lognormal(5, 1.0, 0.5, 12.5e6, seed=0))
+    rep = api.run(api.compile_plan(spec), pop)
+    assert rep.final_accuracy > 0.3
 
 
 def test_privacy_accountant_tracks():
-    tr = small_fed_setup("aldpfl", rounds=2)
-    tr.run()
-    assert tr.epsilon_spent() > 0
+    rep, _, _ = small_fed_run("aldpfl", rounds=2)
+    assert rep.epsilon_spent > 0
 
 
 def test_paper_calibrated_sigma_hurts():
@@ -110,20 +136,17 @@ def test_paper_calibrated_sigma_hurts():
     whole-delta L2 ball), per-coordinate SNR is far below 1 and accuracy
     degrades vs the low-noise run — the paper's 'negligible accuracy loss'
     claim does not survive honest Eq.-8 calibration at this scale."""
-    noisy = small_fed_setup("aldpfl", rounds=3, sigma=None)  # ε=8 calibrated
-    acc_paper = noisy.run()[-1].accuracy
-    mild = small_fed_setup("aldpfl", rounds=3, sigma=0.02)
-    acc_mild = mild.run()[-1].accuracy
-    assert noisy.sigma > 0.4
+    rep_paper, plan, _ = small_fed_run("aldpfl", rounds=3, sigma=None)
+    acc_paper = rep_paper.final_accuracy
+    acc_mild = small_fed_run("aldpfl", rounds=3, sigma=0.02)[0].final_accuracy
+    assert plan.sigma > 0.4
     assert acc_mild > acc_paper - 0.05   # low-noise at least as good
 
 
 def test_sparsified_uploads_smaller():
-    tr = small_fed_setup("aldpfl", rounds=2, sparsify=0.1)
-    hist = tr.run()
-    tr_full = small_fed_setup("aldpfl", rounds=2, sparsify=1.0)
-    hist_full = tr_full.run()
-    assert hist[-1].comm_bytes < hist_full[-1].comm_bytes
+    rep, _, _ = small_fed_run("aldpfl", rounds=2, sparsify=0.1)
+    rep_full, _, _ = small_fed_run("aldpfl", rounds=2, sparsify=1.0)
+    assert rep.records[-1].comm_bytes < rep_full.records[-1].comm_bytes
 
 
 # ---------------------------------------------------------------------------

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import FedConfig, FederatedTrainer
+from repro import api
 from repro.data import make_federated_image_data
 from repro.fleet import (AvailabilityTrace, FleetData, FullParticipation,
                          SCENARIOS, UniformSampler, build_engine,
@@ -153,46 +153,58 @@ def test_detect_masked_excludes_invalid_slots():
 
 
 # ---------------------------------------------------------------------------
-# engine ≡ sequential trainer (the acceptance bar: K=8, 5 rounds, synthetic)
+# engine ≡ sequential reference loop (the acceptance bar: K=8, 5 rounds)
 # ---------------------------------------------------------------------------
 
-def _paired_trainers(mode, sigma, sparsify):
+def _paired_sync_reports(sigma, sparsify):
+    """(fleet report, sequential-reference report) for one sync scheme —
+    the seed per-node loop (`Topology('sequential')`) is the parity
+    oracle the batched engine is held to."""
     node_data, test, cloud, _ = make_federated_image_data(
         0, n_nodes=8, n_malicious=2, n_train=640, n_test=256,
         n_cloud_test=128, hw=(8, 8))
 
-    def mk(use_fleet):
-        cfg = FedConfig(mode=mode, n_nodes=8, rounds=5, local_steps=8,
-                        batch_size=16, lr=0.1, detect=True, sigma=sigma,
-                        sparsify_ratio=sparsify, seed=0, use_fleet=use_fleet)
-        return FederatedTrainer(init_mlp(jax.random.PRNGKey(0), 64),
-                                mlp_loss, mlp_accuracy, node_data, test,
-                                cloud, cfg)
+    def run(topology):
+        from repro.fleet import NodeProfile
+        spec = api.ExperimentSpec(
+            fleet=api.FleetSpec(n_nodes=8),
+            schedule=api.SchedulePolicy(kind="sync"),
+            privacy=api.PrivacySpec(sigma=sigma),
+            compression=api.CompressionSpec(sparsify_ratio=sparsify),
+            defense=api.DefenseSpec(detect=True),
+            topology=api.Topology(kind=topology),
+            train=api.TrainSpec(local_steps=8, batch_size=16, lr=0.1),
+            rounds=5, seed=0)
+        pop = api.Population(
+            params=init_mlp(jax.random.PRNGKey(0), 64), loss_fn=mlp_loss,
+            acc_fn=mlp_accuracy, node_data=node_data, test_data=test,
+            cloud_test=cloud,
+            profile=NodeProfile.lognormal(8, 1.0, 0.5, 12.5e6, seed=0))
+        return api.run(api.compile_plan(spec), population=pop)
 
-    return mk(True), mk(False)
+    return run("single"), run("sequential")
 
 
-@pytest.mark.parametrize("mode,sigma,sparsify", [
-    ("sfl", None, 1.0),          # plain sync FedAvg + detection
-    ("sldpfl", 0.05, 1.0),       # + LDP noise (shared PRNG chain)
-    ("sldpfl", 0.05, 0.25),      # + DGC sparsified uploads
+@pytest.mark.parametrize("sigma,sparsify", [
+    (0.0, 1.0),           # plain sync FedAvg + detection (sfl)
+    (0.05, 1.0),          # + LDP noise, shared PRNG chain (sldpfl)
+    (0.05, 0.25),         # + DGC sparsified uploads
 ])
-def test_fleet_sync_matches_sequential(mode, sigma, sparsify):
-    fleet_tr, seq_tr = _paired_trainers(mode, sigma, sparsify)
-    hf = fleet_tr.run()
-    hs = seq_tr.run()
+def test_fleet_sync_matches_sequential(sigma, sparsify):
+    fleet_rep, seq_rep = _paired_sync_reports(sigma, sparsify)
+    hf, hs = fleet_rep.records, seq_rep.records
     accs_f = np.array([r.accuracy for r in hf])
     accs_s = np.array([r.accuracy for r in hs])
     np.testing.assert_allclose(accs_f, accs_s, atol=2e-3)
-    for a, b in zip(jax.tree.leaves(fleet_tr.params),
-                    jax.tree.leaves(seq_tr.params)):
+    for a, b in zip(jax.tree.leaves(fleet_rep.final_params),
+                    jax.tree.leaves(seq_rep.final_params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
     # simulated clock, wire bytes and rejections agree too
     np.testing.assert_allclose([r.t for r in hf], [r.t for r in hs],
                                rtol=1e-9)
     assert [r.n_rejected for r in hf] == [r.n_rejected for r in hs]
     assert [r.comm_bytes for r in hf] == [r.comm_bytes for r in hs]
-    assert fleet_tr.epsilon_spent() == pytest.approx(seq_tr.epsilon_spent())
+    assert fleet_rep.epsilon_spent == pytest.approx(seq_rep.epsilon_spent)
 
 
 # ---------------------------------------------------------------------------

@@ -213,7 +213,7 @@ def test_network_spec_json_round_trip_and_v1_acceptance():
 
 
 def test_report_round_trip_with_net_and_bytes_source():
-    from repro.core.federated import RoundRecord
+    from repro.api import RoundRecord
     rep = api.RunReport(
         mode="async", engine="fleet",
         records=[RoundRecord(1.0, 0, 0.5, 1e4, 2.0, 0.1, 0,

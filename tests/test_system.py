@@ -16,28 +16,30 @@ def test_end_to_end_aldpfl_beats_attacked_baseline():
     """The paper's headline: ALDPFL with detection trains to useful accuracy
     under label-flipping + provides a privacy guarantee, at accuracy
     comparable to the non-private baseline."""
-    from repro.core import FedConfig, FederatedTrainer
+    from repro import api
     from repro.data import make_federated_image_data
+    from repro.fleet import NodeProfile
     from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
 
     node_data, test, cloud, malicious = make_federated_image_data(
         0, n_nodes=6, n_malicious=2, n_train=900, n_test=300,
         n_cloud_test=200, hw=(14, 14))
-
-    def run(mode, detect):
-        cfg = FedConfig(mode=mode, n_nodes=6, rounds=5, local_steps=15,
-                        batch_size=32, lr=0.1, detect=detect, seed=0,
-                        sigma=0.05)
-        tr = FederatedTrainer(init_cnn(jax.random.PRNGKey(0), in_hw=(14, 14)),
-                              cnn_loss, cnn_accuracy, node_data, test, cloud,
-                              cfg)
-        tr.run()
-        return tr
-
-    aldpfl = run("aldpfl", True)
-    assert aldpfl.history[-1].accuracy > 0.45
-    assert aldpfl.epsilon_spent() > 0
-    assert aldpfl.kappa() >= 0
+    spec = api.ExperimentSpec(
+        fleet=api.FleetSpec(n_nodes=6),
+        schedule=api.SchedulePolicy(kind="async"),
+        privacy=api.PrivacySpec(sigma=0.05),
+        defense=api.DefenseSpec(detect=True),
+        train=api.TrainSpec(local_steps=15, batch_size=32, lr=0.1),
+        rounds=5, seed=0)
+    pop = api.Population(
+        params=init_cnn(jax.random.PRNGKey(0), in_hw=(14, 14)),
+        loss_fn=cnn_loss, acc_fn=cnn_accuracy, node_data=node_data,
+        test_data=test, cloud_test=cloud,
+        profile=NodeProfile.lognormal(6, 1.0, 0.5, 12.5e6, seed=0))
+    aldpfl = api.run(api.compile_plan(spec), pop)
+    assert aldpfl.final_accuracy > 0.45
+    assert aldpfl.epsilon_spent > 0
+    assert aldpfl.kappa >= 0
 
 
 def test_dryrun_lowering_in_subprocess():

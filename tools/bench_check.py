@@ -33,7 +33,7 @@ BASELINES = os.path.join(REPO, "tools", "bench_baselines.json")
 # timing/noise columns: never part of the fingerprint
 _NOISE = re.compile(
     r"^ts$|^wall_s$|^speedup$|s_per_(round|window|call)|^us_per_call$"
-    r"|_wall_s$|^seq_estimated$")
+    r"|_wall_s$|^seq_estimated$|_us$")
 
 
 def fingerprint(records):
