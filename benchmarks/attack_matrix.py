@@ -1,0 +1,186 @@
+"""Attack matrix: the adversary zoo × defense × schedule resilience grid.
+
+Runs every `api.AttackMix` adversary (label_flip, sybil, backdoor,
+adaptive, ddos) against every defense posture (none, the paper's
+percentile detector, trust/uncertainty-weighted aggregation) under both
+schedules (sync cohort rounds, async arrival windows), and reports the
+attack success rate each cell achieves:
+
+  * label_flip / sybil / adaptive — `attacks.flip_success_rate`: the
+    fraction of true flip-source test samples the final model labels as
+    the flip destination (paper Fig. 8's special-task metric);
+  * backdoor — `attacks.backdoor_success_rate`: the fraction of
+    non-target test samples stamped with the pixel trigger that flip to
+    the trigger label;
+  * ddos — the shared-uplink communication-time slowdown vs a clean run
+    of the same spec (flash traffic degrades the wire, not the labels).
+
+Rows land in ``results/attack_matrix.json`` through the api's
+schema-stamped serializer and are pinned by ``tools/bench_check.py``.
+
+  PYTHONPATH=src python -m benchmarks.attack_matrix          # full grid
+  PYTHONPATH=src python -m benchmarks.attack_matrix --smoke  # tiny CI run
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from repro import api
+from repro.core.attacks import backdoor_success_rate, flip_success_rate
+from repro.models.mlp import mlp_forward
+
+from .common import append_trajectory, emit
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "attack_matrix.json")
+
+ATTACKS = ("label_flip", "sybil", "backdoor", "adaptive", "ddos")
+DEFENSES = ("none", "percentile", "trust_weighted")
+SCHEDULES = ("sync", "async")
+
+N_NODES = 10
+# a contested cohort: under plain-mean aggregation on IID shards a small
+# malicious minority is diluted to ASR noise, so the grid staffs half the
+# fleet — the regime where defenses visibly separate
+MALICIOUS_FRAC = 0.5
+FLIP_SRC, FLIP_DST = 1, 7
+TRIGGER_LABEL = 0
+HW = (8, 8)
+SHARED_UPLINK_BPS = 1.5e6       # congested enough that flood flows bite
+
+
+def _defense(name: str) -> api.DefenseSpec:
+    if name == "none":
+        return api.DefenseSpec(detect=False)
+    return api.DefenseSpec(detect=True, kind=(
+        "trust_weighted" if name == "trust_weighted" else "percentile"))
+
+
+def _spec(attack: str, defense: str, schedule: str, *, rounds: int,
+          samples: int, malicious_frac: float = MALICIOUS_FRAC,
+          seed: int = 0) -> api.ExperimentSpec:
+    # ddos needs a simulated shared uplink for its flood flows to contend
+    # on; its clean baseline (malicious_frac=0) runs the same wire so the
+    # slowdown isolates the attack
+    network = (api.NetworkSpec(codec="dense_f32", latency_s=0.01,
+                               shared_uplink_bps=SHARED_UPLINK_BPS)
+               if attack == "ddos" else api.NetworkSpec())
+    return api.ExperimentSpec(
+        fleet=api.FleetSpec(
+            n_nodes=N_NODES, samples_per_node=samples, n_test=256,
+            n_cloud_test=128, hw=HW,
+            attack=api.AttackMix(malicious_frac=malicious_frac, kind=attack,
+                                 flip_src=FLIP_SRC, flip_dst=FLIP_DST,
+                                 trigger_label=TRIGGER_LABEL),
+            profile=api.NodeHeterogeneity(heterogeneity=0.5)),
+        schedule=api.SchedulePolicy(kind=schedule),
+        defense=_defense(defense),
+        network=network,
+        train=api.TrainSpec(local_steps=8, batch_size=16, lr=0.2),
+        rounds=rounds, seed=seed)
+
+
+def _asr(attack: str, rep: api.RunReport, pop, clean_comm: float) -> float:
+    x, y = pop.test_data
+    if attack == "backdoor":
+        return backdoor_success_rate(mlp_forward, rep.final_params, x, y,
+                                     TRIGGER_LABEL)
+    if attack == "ddos":
+        comm = sum(r.comm_time for r in rep.records)
+        return comm / clean_comm - 1.0 if clean_comm > 0 else 0.0
+    return flip_success_rate(mlp_forward, rep.final_params, x, y,
+                             FLIP_SRC, FLIP_DST)
+
+
+def run_cell(attack: str, defense: str, schedule: str, *, rounds: int,
+             samples: int, clean_comm: float) -> dict:
+    spec = _spec(attack, defense, schedule, rounds=rounds, samples=samples)
+    pop = api.materialize(spec)
+    rep = api.run(api.compile_plan(spec), population=pop)
+    asr = _asr(attack, rep, pop, clean_comm)
+    row = {
+        "bench": "attack_matrix", "attack": attack, "defense": defense,
+        "schedule": schedule, "n_nodes": N_NODES,
+        "malicious_frac": MALICIOUS_FRAC, "rounds": rounds,
+        "final_accuracy": rep.final_accuracy, "asr": float(asr),
+        "n_rejected": sum(r.n_rejected for r in rep.records),
+        "comm_time": sum(r.comm_time for r in rep.records),
+        "comm_bytes": sum(r.comm_bytes for r in rep.records),
+    }
+    emit(f"attack_{attack}_{defense}_{schedule}", 0.0,
+         f"acc={row['final_accuracy']:.3f};asr={asr:.3f};"
+         f"rej={row['n_rejected']}")
+    return row
+
+
+def clean_comm_baseline(schedule: str, *, rounds: int, samples: int
+                        ) -> float:
+    """Total comm_time of an attack-free run on the ddos cells' congested
+    shared uplink — the denominator of the ddos slowdown metric."""
+    spec = _spec("ddos", "none", schedule, rounds=rounds, samples=samples,
+                 malicious_frac=0.0)
+    rep = api.run(api.compile_plan(spec))
+    return sum(r.comm_time for r in rep.records)
+
+
+def run_grid(*, rounds: int, samples: int) -> list:
+    rows = []
+    for schedule in SCHEDULES:
+        clean_comm = clean_comm_baseline(schedule, rounds=rounds,
+                                         samples=samples)
+        emit(f"attack_clean_{schedule}", 0.0, f"comm={clean_comm:.3f}s")
+        for attack in ATTACKS:
+            for defense in DEFENSES:
+                rows.append(run_cell(attack, defense, schedule,
+                                     rounds=rounds, samples=samples,
+                                     clean_comm=clean_comm))
+    return rows
+
+
+def check_defense_wins(rows) -> None:
+    """The PR's acceptance bar: trust-weighted aggregation must measurably
+    beat no-defense on the flip-style attacks, per schedule."""
+    by = {(r["attack"], r["defense"], r["schedule"]): r for r in rows}
+    for attack in ("label_flip", "sybil"):
+        for schedule in SCHEDULES:
+            none = by[(attack, "none", schedule)]["asr"]
+            trust = by[(attack, "trust_weighted", schedule)]["asr"]
+            assert trust < none, (
+                f"{attack}/{schedule}: trust_weighted ASR {trust:.3f} not "
+                f"below no-defense ASR {none:.3f}")
+
+
+def run() -> None:
+    stamp = time.strftime("%Y-%m-%dT%H:%M:%S")
+    rows = run_grid(rounds=10, samples=100)
+    check_defense_wins(rows)
+    for r in rows:
+        r["ts"] = stamp
+    append_trajectory(RESULTS_PATH, rows)
+
+
+def smoke() -> None:
+    """One attack per mechanism class on a tiny budget — asserts the grid
+    plumbing end-to-end without touching results/."""
+    clean = clean_comm_baseline("async", rounds=2, samples=24)
+    cells = [("label_flip", "trust_weighted", "sync"),
+             ("sybil", "percentile", "async"),
+             ("ddos", "none", "async")]
+    for attack, defense, schedule in cells:
+        row = run_cell(attack, defense, schedule, rounds=2, samples=24,
+                       clean_comm=clean)
+        assert 0.0 <= row["final_accuracy"] <= 1.0
+    assert row["asr"] > 0.0, "ddos flood must slow the shared uplink"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="three representative cells, no results write")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        run()

@@ -23,6 +23,9 @@ SCHEDULE_KINDS = ("sync", "async", "buffered")
 TOPOLOGY_KINDS = ("sequential", "single", "mesh")
 BACKENDS = ("reference", "pallas")
 NET_CODECS = ("analytic",) + CODEC_NAMES
+ATTACK_KINDS = ("label_flip", "sybil", "backdoor", "adaptive", "ddos")
+DEFENSE_KINDS = ("percentile", "trust_weighted")
+PLACEMENTS = ("random", "first")
 
 
 class SpecError(ValueError):
@@ -196,6 +199,73 @@ def compile_plan(spec: ExperimentSpec) -> ExperimentPlan:
                  "the sequential reference loop has no network simulation "
                  "— use topology.kind='single' or 'mesh'")
 
+    # -- adversary zoo + defense --------------------------------------------
+    atk = f.attack
+    attacking = atk.malicious_frac > 0.0
+    _require(atk.kind in ATTACK_KINDS,
+             f"fleet.attack.kind {atk.kind!r} not in {ATTACK_KINDS}")
+    _require(atk.placement in PLACEMENTS,
+             f"fleet.attack.placement {atk.placement!r} not in {PLACEMENTS}")
+    _require(f.n_classes >= 2,
+             f"fleet.n_classes must be >= 2, got {f.n_classes}")
+    _require(0 <= atk.flip_src < f.n_classes,
+             f"fleet.attack.flip_src={atk.flip_src} is not a class id in "
+             f"[0, {f.n_classes}) — check fleet.n_classes")
+    _require(0 <= atk.flip_dst < f.n_classes,
+             f"fleet.attack.flip_dst={atk.flip_dst} is not a class id in "
+             f"[0, {f.n_classes}) — check fleet.n_classes")
+    _require(not (attacking and atk.kind in ("label_flip", "sybil", "adaptive")
+                  and atk.flip_src == atk.flip_dst),
+             f"fleet.attack.flip_src == flip_dst == {atk.flip_src} flips "
+             f"every label onto itself — a silent no-op 'attack', not a "
+             f"default")
+    _require(atk.sybil_boost > 0,
+             f"fleet.attack.sybil_boost must be > 0, got {atk.sybil_boost}")
+    _require(0.0 < atk.adapt_poison_scale < 1.0,
+             f"fleet.attack.adapt_poison_scale must be in (0, 1) — the "
+             f"throttle must actually back off on rejection, got "
+             f"{atk.adapt_poison_scale}")
+    _require(0.0 < atk.trigger_frac <= 1.0,
+             f"fleet.attack.trigger_frac must be in (0, 1], got "
+             f"{atk.trigger_frac}")
+    _require(0 <= atk.trigger_label < f.n_classes,
+             f"fleet.attack.trigger_label={atk.trigger_label} is not a class "
+             f"id in [0, {f.n_classes})")
+    _require(1 <= atk.trigger_size <= min(f.hw),
+             f"fleet.attack.trigger_size={atk.trigger_size} must fit the "
+             f"{f.hw} image (1 <= size <= {min(f.hw)})")
+    _require(atk.ddos_uploads >= 1,
+             f"fleet.attack.ddos_uploads must be >= 1, got "
+             f"{atk.ddos_uploads}")
+    if attacking and atk.kind == "ddos":
+        _require(net.enabled and net.shared_uplink_bps > 0,
+                 "fleet.attack.kind='ddos' floods the shared uplink — it "
+                 "needs a real network.codec and network.shared_uplink_bps "
+                 "> 0 (the analytic comm model has no contention to abuse)")
+    if attacking and atk.kind in ("sybil", "adaptive", "ddos"):
+        _require(topo.kind != "sequential",
+                 f"fleet.attack.kind={atk.kind!r} manipulates the engines' "
+                 f"delta/verdict/link pipeline — the sequential reference "
+                 f"loop only supports data-level attacks (label_flip, "
+                 f"backdoor); use topology.kind='single' or 'mesh'")
+    _require(dfs.kind in DEFENSE_KINDS,
+             f"defense.kind {dfs.kind!r} not in {DEFENSE_KINDS}")
+    _require(0.0 < dfs.trust_eta <= 1.0,
+             f"defense.trust_eta must be in (0, 1], got {dfs.trust_eta}")
+    _require(0.0 <= dfs.trust_floor <= 1.0,
+             f"defense.trust_floor must be in [0, 1], got {dfs.trust_floor}")
+    _require(dfs.uncertainty_scale >= 0,
+             f"defense.uncertainty_scale must be >= 0, got "
+             f"{dfs.uncertainty_scale}")
+    if dfs.kind == "trust_weighted":
+        _require(dfs.detect,
+                 "defense.kind='trust_weighted' accumulates trust from "
+                 "detection verdicts — it needs defense.detect=True")
+        _require(topo.kind != "sequential",
+                 "defense.kind='trust_weighted' keeps trust state in "
+                 "FleetState — the sequential reference loop has none; use "
+                 "topology.kind='single' or 'mesh'")
+
     # -- observability ------------------------------------------------------
     obs = spec.obs
     for name in ("events_jsonl", "chrome_trace", "records_jsonl"):
@@ -242,6 +312,8 @@ def compile_plan(spec: ExperimentSpec) -> ExperimentPlan:
                      else detection.default_window(f.n_nodes))
 
     stages = ["local_sgd"]
+    if attacking:
+        stages.append(f"attack[{atk.kind}]")
     if comp.sparsify_ratio < 1.0:
         stages.append("dgc_sparsify")
     if sigma > 0:
@@ -251,6 +323,8 @@ def compile_plan(spec: ExperimentSpec) -> ExperimentPlan:
         stages.append("link_sim")
     if dfs.detect:
         stages.append("cloud_detect")
+        if dfs.kind == "trust_weighted":
+            stages.append("trust_weighted_agg")
     if obs.enabled:
         stages.append("obs_trace")
     stages.append({"barrier": "masked_mean_mix",

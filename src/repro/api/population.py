@@ -64,13 +64,17 @@ def materialize(spec: ExperimentSpec) -> Population:
     calls of the same spec are identical.
     """
     f = spec.fleet
-    n_malicious = int(round(f.attack.malicious_frac * f.n_nodes))
+    atk = f.attack
+    n_malicious = int(round(atk.malicious_frac * f.n_nodes))
     node_data, test, cloud, malicious = make_federated_image_data(
         spec.seed, n_nodes=f.n_nodes, n_malicious=n_malicious,
         n_train=f.samples_per_node * f.n_nodes, n_test=f.n_test,
-        n_cloud_test=f.n_cloud_test, hw=f.hw,
-        flip_src=f.attack.flip_src, flip_dst=f.attack.flip_dst,
-        iid=f.iid, dirichlet_alpha=f.dirichlet_alpha)
+        n_cloud_test=f.n_cloud_test, hw=f.hw, n_classes=f.n_classes,
+        flip_src=atk.flip_src, flip_dst=atk.flip_dst,
+        iid=f.iid, dirichlet_alpha=f.dirichlet_alpha,
+        attack_kind=atk.kind, placement=atk.placement,
+        trigger_frac=atk.trigger_frac, trigger_label=atk.trigger_label,
+        trigger_size=atk.trigger_size, trigger_value=atk.trigger_value)
 
     key = jax.random.PRNGKey(spec.seed)
     if f.model == "cnn":
@@ -85,6 +89,14 @@ def materialize(spec: ExperimentSpec) -> Population:
         f.n_nodes, p.base_compute_s, p.heterogeneity, p.bandwidth_bps,
         seed=spec.seed, straggler_frac=p.straggler_frac,
         straggler_slowdown=p.straggler_slowdown)
+    if atk.kind == "sybil" and malicious:
+        # a sybil cohort is one adversary behind many identities: identical
+        # compute pins its clones' arrivals to the same async window, so
+        # the colluding copies land (and collude) together
+        comp = profile.compute_s.copy()
+        comp[list(malicious)] = p.base_compute_s
+        profile = NodeProfile(compute_s=comp,
+                              bandwidth_bps=profile.bandwidth_bps)
     return Population(params=params, loss_fn=loss_fn, acc_fn=acc_fn,
                       node_data=node_data, test_data=test, cloud_test=cloud,
                       profile=profile, sampler=default_sampler(spec),

@@ -193,11 +193,21 @@ def make_engine(plan: ExperimentPlan, population: Population,
         lr=spec.train.lr, alpha=spec.schedule.alpha,
         clip_s=spec.privacy.clip_s, sigma=plan.sigma,
         detect=spec.defense.detect, detect_s=spec.defense.detect_s,
+        defense_kind=spec.defense.kind, trust_eta=spec.defense.trust_eta,
+        trust_floor=spec.defense.trust_floor,
+        uncertainty_scale=spec.defense.uncertainty_scale,
         sparsify_ratio=spec.compression.sparsify_ratio,
         key_mode=plan.key_mode, backend=spec.topology.backend,
         seed=spec.seed)
     args = (population.params, population.loss_fn, population.acc_fn,
             population.node_data, population.test_data, population.cloud_test)
+    # model-delta adversary stages (sybil/adaptive scaling, ddos flood
+    # accounting) ride the engines only when the spec staffs the fleet
+    # with malicious nodes; None keeps the jitted programs byte-identical
+    attack = (fleet_stages.AttackPlan.from_spec(
+                  spec.fleet.attack, population.n_nodes,
+                  population.malicious_ids)
+              if population.malicious_ids else None)
 
     n_params = sum(x.size for x in jax.tree.leaves(population.params))
     # the repro.net transport (None with NetworkSpec at its analytic
@@ -211,7 +221,7 @@ def make_engine(plan: ExperimentPlan, population: Population,
         return fleet.FleetEngine(
             *args, cfg, profile=population.profile,
             sampler=population.sampler or fleet.FullParticipation(),
-            mesh=mesh, net=net)
+            mesh=mesh, net=net, attack=attack)
 
     bpn = fleet_stages.bytes_per_node(n_params,
                                       spec.compression.sparsify_ratio)
@@ -225,7 +235,7 @@ def make_engine(plan: ExperimentPlan, population: Population,
         detect_window=plan.detect_window)
     return fleet.AsyncFleetEngine(*args, cfg, profile=population.profile,
                                   sampler=population.sampler, mesh=mesh,
-                                  net=net)
+                                  net=net, attack=attack)
 
 
 # ---------------------------------------------------------------------------

@@ -36,11 +36,13 @@ from typing import Dict, Optional, Tuple
 from .window import AutoWindow, WindowPolicy, window_policy_from_dict
 
 # v2: NetworkSpec axis + RoundRecord.bytes_source.  v3: ObsSpec axis.
-# Older payloads are still accepted on read (network defaults to analytic,
-# bytes_source to "analytic", obs to disabled); everything written is
-# stamped v3.
-SCHEMA_VERSION = 3
-ACCEPTED_SCHEMA_VERSIONS = (1, 2, 3)
+# v4: the adversary zoo (AttackMix.kind + per-kind knobs, seeded-random
+# malicious placement, FleetSpec.n_classes) and the trust-scored defense
+# (DefenseSpec.kind + trust knobs).  Older payloads are still accepted on
+# read (attack defaults to the paper's label flip, defense to the plain
+# percentile test); everything written is stamped v4.
+SCHEMA_VERSION = 4
+ACCEPTED_SCHEMA_VERSIONS = (1, 2, 3, 4)
 
 
 # ---------------------------------------------------------------------------
@@ -61,12 +63,44 @@ class NodeHeterogeneity:
 
 @dataclass(frozen=True)
 class AttackMix:
-    """Adversary composition: ``malicious_frac`` of nodes flip labels
-    ``flip_src`` -> ``flip_dst`` in their local shards (the paper's
-    poisoning attack)."""
+    """Adversary composition: ``malicious_frac`` of nodes run the attack
+    selected by ``kind`` (the adversary zoo).
+
+    ``kind="label_flip"`` — the paper's poisoning attack: flip labels
+      ``flip_src`` -> ``flip_dst`` in the malicious nodes' local shards;
+    ``kind="sybil"``      — colluding clones: every sybil trains the same
+      flipped shard on an identical compute cadence (so their uploads land
+      inside one async arrival window) and scales its poisoned delta by
+      ``sybil_boost``;
+    ``kind="backdoor"``   — trigger poisoning: ``trigger_frac`` of each
+      malicious shard gets a ``trigger_size``² corner patch of
+      ``trigger_value`` and label ``trigger_label`` (clean-label accuracy
+      stays high — percentile detection is nearly blind to it);
+    ``kind="adaptive"``   — detection-aware label flipper: a per-node
+      throttle scales the poisoned delta down by ``adapt_poison_scale``
+      whenever the cloud rejects the node, creeping back up on acceptance
+      — hovering under the accuracy threshold;
+    ``kind="ddos"``       — clean-data flash traffic: each malicious node
+      injects ``ddos_uploads`` flood uploads per round/window into the
+      shared uplink (`NetworkSpec.shared_uplink_bps`), starving honest
+      transfers without ever uploading a detectable model.
+
+    ``placement`` places the malicious ids: ``"random"`` draws them from a
+    seeded stream (reproducible per spec seed); ``"first"`` keeps the
+    legacy nodes ``0..k-1`` placement.
+    """
     malicious_frac: float = 0.0
     flip_src: int = 1
     flip_dst: int = 7
+    kind: str = "label_flip"
+    sybil_boost: float = 3.0
+    adapt_poison_scale: float = 0.5
+    trigger_frac: float = 0.5
+    trigger_label: int = 0
+    trigger_size: int = 2
+    trigger_value: float = 1.0
+    ddos_uploads: int = 4
+    placement: str = "random"
 
 
 @dataclass(frozen=True)
@@ -85,6 +119,7 @@ class FleetSpec:
     n_cloud_test: int = 128
     iid: bool = True                # False => Dirichlet(alpha) partition
     dirichlet_alpha: float = 0.5
+    n_classes: int = 10             # label alphabet (bounds flip/trigger ids)
 
 
 # ---------------------------------------------------------------------------
@@ -133,11 +168,26 @@ class CompressionSpec:
 
 @dataclass(frozen=True)
 class DefenseSpec:
-    """Cloud-side malicious-update detection (§5.4, Alg. 2)."""
+    """Cloud-side malicious-update detection (§5.4, Alg. 2).
+
+    ``kind="percentile"`` keeps the paper's accuracy-percentile accept/
+    reject gate.  ``kind="trust_weighted"`` layers per-node trust scores
+    on top: each verdict moves a node's trust by an EWMA
+    (``trust_eta``), and accepted updates are aggregated with
+    trust/uncertainty weights — trust floored at ``trust_floor`` and
+    discounted by ``uncertainty_scale`` × the node's accuracy deviation
+    from the accepted cohort mean (a cheap per-update uncertainty
+    proxy).  Requires ``detect=True``; trust state lives device-side in
+    `FleetState.trust` (ring-compatible, shard-oblivious).
+    """
     detect: bool = False
     detect_s: float = 80.0              # top-s percentile threshold
     detect_warmup: int = 4              # async: min arrivals before detecting
     detect_window: Optional[int] = None  # async ring; None => default_window
+    kind: str = "percentile"            # percentile | trust_weighted
+    trust_eta: float = 0.25             # EWMA step toward each verdict
+    trust_floor: float = 0.05           # min aggregation weight for accepted
+    uncertainty_scale: float = 4.0      # accuracy-deviation discount strength
 
 
 @dataclass(frozen=True)

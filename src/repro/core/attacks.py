@@ -1,12 +1,19 @@
-"""Attacks the framework defends against — paper §3.3.
+"""Attacks the framework defends against — paper §3.3 + the adversary zoo.
 
 * Label-flipping (data poisoning): malicious nodes change all labels of a
   source class to a target class in their local data (paper: MNIST '1'→'7',
   CIFAR 'dog'→'cat').
+* Backdoor/trigger poisoning: a small corner patch stamped on a fraction of
+  the malicious shards with the labels rewritten to a target class — the
+  clean task barely moves, but triggered inputs are misclassified.
 * Gradient-leakage (DLG, Zhu et al. 2019): a malicious cloud reconstructs a
   node's training batch from its uploaded gradients by gradient matching
   (Eq. 4). Used here to evaluate the ALDP defence: reconstruction quality
   (MSE / attack success rate) vs noise multiplier σ.
+
+The poisoning success metrics (`flip_success_rate`,
+`backdoor_success_rate`) measure the attacker's objective directly on held
+-out data, which is what `benchmarks/attack_matrix.py` grids over.
 """
 from __future__ import annotations
 
@@ -14,6 +21,7 @@ from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 # ---------------------------------------------------------------------------
@@ -23,6 +31,48 @@ import jax.numpy as jnp
 def flip_labels(labels: jnp.ndarray, src: int, dst: int) -> jnp.ndarray:
     """Change every label `src` to `dst` (the paper's attack)."""
     return jnp.where(labels == src, dst, labels)
+
+
+# ---------------------------------------------------------------------------
+# Backdoor/trigger poisoning
+# ---------------------------------------------------------------------------
+
+def stamp_trigger(x: np.ndarray, size: int = 2,
+                  value: float = 1.0) -> np.ndarray:
+    """Stamp a ``size``×``size`` trigger patch of ``value`` into the
+    top-left corner of every image in ``x`` ((..., H, W, C) float array);
+    returns a copy."""
+    out = np.array(x, copy=True)
+    out[..., :size, :size, :] = value
+    return out
+
+
+def flip_success_rate(forward: Callable, params, x: np.ndarray,
+                      y: np.ndarray, src: int, dst: int) -> float:
+    """Label-flip attacker objective on held-out data: the fraction of
+    true-``src`` samples the model now assigns to ``dst``."""
+    x = jnp.asarray(x)
+    sel = np.asarray(y) == src
+    if not sel.any():
+        return 0.0
+    pred = np.asarray(jnp.argmax(forward(params, x[np.where(sel)[0]]), -1))
+    return float((pred == dst).mean())
+
+
+def backdoor_success_rate(forward: Callable, params, x: np.ndarray,
+                          y: np.ndarray, trigger_label: int,
+                          trigger_size: int = 2,
+                          trigger_value: float = 1.0) -> float:
+    """Backdoor attacker objective: the fraction of non-target-class
+    held-out samples that flip to ``trigger_label`` once the trigger is
+    stamped on them."""
+    sel = np.asarray(y) != trigger_label
+    if not sel.any():
+        return 0.0
+    xt = stamp_trigger(np.asarray(x)[sel], size=trigger_size,
+                       value=trigger_value)
+    pred = np.asarray(jnp.argmax(forward(params, jnp.asarray(xt)), -1))
+    return float((pred == trigger_label).mean())
 
 
 # ---------------------------------------------------------------------------

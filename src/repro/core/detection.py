@@ -13,6 +13,7 @@ from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def detection_threshold(accuracies: jnp.ndarray, s: float) -> jnp.ndarray:
@@ -65,6 +66,60 @@ def masked_weighted_mean(trees, mask: jnp.ndarray, weights: jnp.ndarray):
         return (x.astype(jnp.float32) * wf).sum(0) / denom
 
     return jax.tree.map(agg, trees)
+
+
+def detect_fell_back(accuracies, thr, valid=None) -> bool:
+    """Did `detect`'s all-equal guard fire?  True when no (valid) node
+    cleared the strict ``A > Thr`` comparison — the state in which the
+    fallback marks *every* node normal, including known-malicious ones.
+    Host-side companion to `detect`/the engines' fused detection: pure
+    numpy on fetched metrics, used to emit the ``detect.fallback`` obs
+    counter (a detection-aware attacker forces exactly this state early
+    in training)."""
+    accs = np.asarray(accuracies)
+    strict = accs > np.asarray(thr)
+    if valid is not None:
+        strict = strict & np.asarray(valid, bool)
+    return not bool(strict.any())
+
+
+# ---------------------------------------------------------------------------
+# trust scores (defense.kind="trust_weighted")
+#
+# Per-node trust is an EWMA over detection verdicts: each accepted update
+# moves trust toward 1, each rejection toward 0 (step `eta`); nodes that
+# don't participate keep their score.  Aggregation weights are the trust
+# scores floored at `floor` and discounted by an uncertainty proxy — the
+# node's accuracy deviation from the accepted cohort mean (cheap, already
+# computed, and large exactly when an update is unlike its peers).  All
+# (N,)-shaped elementwise ops: shard-oblivious under the mesh engines'
+# node-axis shard_map, and ring-compatible with the detection state.
+# ---------------------------------------------------------------------------
+
+def trust_update(trust: jnp.ndarray, accepted: jnp.ndarray,
+                 seen: jnp.ndarray, eta: float) -> jnp.ndarray:
+    """EWMA trust step: trust += eta·(verdict − trust) for nodes ``seen``
+    this round/window (verdict 1 if accepted, 0 if rejected); everyone
+    else keeps their score."""
+    target = accepted.astype(jnp.float32)
+    stepped = trust + float(eta) * (target - trust)
+    return jnp.where(seen, stepped, trust)
+
+
+def trust_weights(trust: jnp.ndarray, accuracies: jnp.ndarray,
+                  mask: jnp.ndarray, floor: float, uncertainty_scale: float,
+                  ref: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Aggregation weights for `masked_weighted_mean`: floored trust,
+    discounted by uncertainty ∝ |A_j − ref| (ref defaults to the accepted
+    cohort's mean accuracy; mesh callers pass the globally-reduced ref so
+    every shard discounts against the same anchor)."""
+    if ref is None:
+        m = mask.astype(jnp.float32)
+        ref = ((accuracies.astype(jnp.float32) * m).sum()
+               / jnp.maximum(m.sum(), 1.0))
+    dev = jnp.abs(accuracies.astype(jnp.float32) - ref)
+    unc = 1.0 + float(uncertainty_scale) * dev
+    return jnp.maximum(trust, float(floor)) / unc
 
 
 def staleness_weights(taus: jnp.ndarray, a: float) -> jnp.ndarray:

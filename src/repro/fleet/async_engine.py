@@ -104,13 +104,22 @@ def make_window_folds(cfg: "AsyncFleetConfig", need_audit: bool = False):
     f32 params; non-f32 models fall back to the reference scan."""
 
     def sequential_fold_reference(params, version, ring, count, omegas,
-                                  accs, vdisp_c, arrived):
+                                  accs, vdisp_c, arrived, trust_c=None):
         """Eq. (6)/mix_stale over arrival order with streaming
-        detection — the event loop, as one lax.scan."""
+        detection — the event loop, as one lax.scan.  With ``trust_c``
+        (the cohort's per-node trust scores; defense
+        ``kind="trust_weighted"``) each arrival's new-model mixing
+        coefficient is scaled by its `detection.trust_weights` weight —
+        w ∈ (0, 1], anchored on the sliding window's mean accuracy, so
+        low-trust / outlier arrivals take proportionally smaller steps."""
+        use_trust = trust_c is not None
 
         def body(carry, inp):
             params, version, ring, count = carry
-            omega_i, acc_i, vdisp_i, arr_i = inp
+            if use_trust:
+                omega_i, acc_i, vdisp_i, arr_i, t_i = inp
+            else:
+                omega_i, acc_i, vdisp_i, arr_i = inp
             r2, c2 = detection.ring_push(ring, count, acc_i)
             ring = jnp.where(arr_i, r2, ring)
             count = jnp.where(arr_i, c2, count)
@@ -120,7 +129,27 @@ def make_window_folds(cfg: "AsyncFleetConfig", need_audit: bool = False):
             else:
                 rej = jnp.zeros((), bool)
             tau = version - vdisp_i
-            if cfg.staleness_adaptive:
+            if use_trust:
+                # uncertainty anchor: mean of the occupied ring slots (the
+                # arrival's own accuracy is already pushed, matching the
+                # detection semantics)
+                occupied = jnp.arange(ring.shape[0]) < count
+                held = jnp.minimum(count, ring.shape[0])
+                ref = (jnp.where(occupied, ring, 0.0).sum()
+                       / jnp.maximum(held, 1).astype(jnp.float32))
+                w = detection.trust_weights(
+                    t_i, acc_i, arr_i, cfg.trust_floor,
+                    cfg.uncertainty_scale, ref=ref)
+                if cfg.staleness_adaptive:
+                    b = async_update.staleness_alpha(
+                        cfg.alpha, tau, cfg.staleness_a) * w
+                else:
+                    b = jnp.float32(1.0 - cfg.alpha) * w
+                mixed = jax.tree.map(
+                    lambda p, o: ((1.0 - b) * p.astype(jnp.float32)
+                                  + b * o.astype(jnp.float32)),
+                    params, omega_i)
+            elif cfg.staleness_adaptive:
                 mixed = async_update.mix_stale(params, omega_i, cfg.alpha,
                                                tau, cfg.staleness_a)
             else:
@@ -135,9 +164,11 @@ def make_window_folds(cfg: "AsyncFleetConfig", need_audit: bool = False):
                         jnp.minimum(count, ring.shape[0]))
             return (params, version, ring, count), out
 
+        xs = (omegas, accs, vdisp_c, arrived)
+        if use_trust:
+            xs += (trust_c,)
         (params, version, ring, count), ys = \
-            jax.lax.scan(body, (params, version, ring, count),
-                         (omegas, accs, vdisp_c, arrived))
+            jax.lax.scan(body, (params, version, ring, count), xs)
         p_seq, v_seq, rej, taus = ys[:4]
         audit = {"thr": ys[4], "held": ys[5]} if need_audit else {}
         return params, version, ring, count, p_seq, v_seq, rej, taus, audit
@@ -183,9 +214,15 @@ def make_window_folds(cfg: "AsyncFleetConfig", need_audit: bool = False):
         return version, ring, count, v_seq, rej, taus, gates, a, b, audit
 
     def sequential_fold_pallas(params, version, ring, count, omegas, accs,
-                               vdisp_c, arrived):
+                               vdisp_c, arrived, trust_c=None):
         from ..kernels.window_fold import window_fold_fleet
 
+        if trust_c is not None:
+            # trust-weighted mixing needs the per-arrival ring mean, which
+            # the control/param-fold split doesn't carry — reference scan
+            return sequential_fold_reference(params, version, ring, count,
+                                             omegas, accs, vdisp_c, arrived,
+                                             trust_c)
         if any(l.dtype != jnp.float32 for l in jax.tree.leaves(params)):
             return sequential_fold_reference(params, version, ring, count,
                                              omegas, accs, vdisp_c, arrived)
@@ -201,12 +238,14 @@ def make_window_folds(cfg: "AsyncFleetConfig", need_audit: bool = False):
                        else sequential_fold_reference)
 
     def buffered_fold(params, version, ring, count, omegas, accs,
-                      vdisp_c, arrived):
+                      vdisp_c, arrived, trust_c=None):
         """FedBuff-style: one detection pass over the updated window, one
         masked-mean Eq. (6) mix for the whole buffer.  With
         ``staleness_adaptive`` the buffer mean is staleness-weighted per
         update — (τ+1)^-a FedAsync discounts inside the FedBuff mean
-        (uniform weights reproduce the plain masked mean bit-for-bit)."""
+        (uniform weights reproduce the plain masked mean bit-for-bit).
+        With ``trust_c`` the buffer mean is additionally trust/uncertainty
+        weighted via `detection.trust_weights`."""
 
         def push(carry, inp):
             ring, count = carry
@@ -227,7 +266,14 @@ def make_window_folds(cfg: "AsyncFleetConfig", need_audit: bool = False):
             rej = jnp.zeros_like(arrived)
         mask = arrived & ~rej
         taus = version0 - vdisp_c         # staleness at mix time
-        if cfg.staleness_adaptive:
+        if trust_c is not None:
+            w = detection.trust_weights(trust_c, accs, mask,
+                                        cfg.trust_floor,
+                                        cfg.uncertainty_scale)
+            if cfg.staleness_adaptive:
+                w = w * detection.staleness_weights(taus, cfg.staleness_a)
+            omega_mean = detection.masked_weighted_mean(omegas, mask, w)
+        elif cfg.staleness_adaptive:
             omega_mean = detection.masked_weighted_mean(
                 omegas, mask, detection.staleness_weights(taus,
                                                           cfg.staleness_a))
@@ -280,9 +326,10 @@ class AsyncFleetEngine(MeshStateIO):
                  profile: Optional[NodeProfile] = None,
                  sampler: Optional[ClientSampler] = None,
                  mesh: Optional[FleetMesh] = None,
-                 net=None, tracer=None):
+                 net=None, tracer=None, attack=None):
         self.cfg = cfg
         self.params = init_params
+        self.attack = attack    # Optional[stages.AttackPlan]: adversary zoo
         # the obs tracer is bound at construction: whether the jitted
         # window carries detection-audit outputs is decided here, so an
         # untraced engine's program is structurally identical to pre-obs
@@ -320,7 +367,9 @@ class AsyncFleetEngine(MeshStateIO):
             [self._comp_s, np.full(self.n_pad - self.n_nodes, np.inf)])
         self.state = init_async_fleet_state(
             init_params, self.n_pad, jax.random.PRNGKey(cfg.seed),
-            first_arrival=first_arrival, detect_window=cfg.detect_window)
+            first_arrival=first_arrival, detect_window=cfg.detect_window,
+            trust=cfg.trust_on,
+            throttle=attack is not None and attack.needs_throttle)
         self._window_idx = 0
         self.history: List[AsyncWindowRecord] = []
         if mesh is not None:
@@ -335,7 +384,11 @@ class AsyncFleetEngine(MeshStateIO):
                 chain_key=mesh.put_replicated(self.state.chain_key),
                 version=mesh.put_replicated(self.state.version),
                 acc_ring=mesh.put_replicated(self.state.acc_ring),
-                acc_count=mesh.put_replicated(self.state.acc_count))
+                acc_count=mesh.put_replicated(self.state.acc_count),
+                trust=(mesh.put_nodes(self.state.trust)
+                       if self.state.trust is not None else None),
+                throttle=(mesh.put_nodes(self.state.throttle)
+                          if self.state.throttle is not None else None))
             self.params = mesh.put_replicated(self.params)
             self._window_fn = jax.jit(self._build_window_sharded())
         else:
@@ -353,6 +406,11 @@ class AsyncFleetEngine(MeshStateIO):
         need_nnz = self.net is not None     # byte-accurate pricing only
         need_audit = self._need_audit
         sequential_fold, buffered_fold = make_window_folds(cfg, need_audit)
+        attack_stage = stages.make_delta_attack(self.attack)
+        mal_full = (self.attack.mask(self.n_pad)
+                    if attack_stage is not None else None)
+        eta, adapt_scale = cfg.trust_eta, (
+            self.attack.adapt_poison_scale if self.attack else 1.0)
 
         def window_fn(params, state: FleetState, x, y, sizes,
                       order, proc, avail, up_s):
@@ -381,6 +439,11 @@ class AsyncFleetEngine(MeshStateIO):
             local = jax.vmap(local_train)(disp_c, xg, yg, sz, k1s)
             deltas = jax.tree.map(lambda l, d: l - d.astype(l.dtype),
                                   local, disp_c)
+            if attack_stage is not None:
+                mal_c = jnp.take(mal_full, order)
+                thr_c = (jnp.take(state.throttle, order)
+                         if state.throttle is not None else None)
+                deltas = attack_stage(deltas, mal_c, thr_c)
             deltas, res_c, nnz = stages.upload_pipeline(cfg, deltas, res_c,
                                                         k2s,
                                                         need_nnz=need_nnz)
@@ -388,11 +451,13 @@ class AsyncFleetEngine(MeshStateIO):
                 raw_acc_fn, disp_c, deltas, cloud_x, cloud_y)
 
             arrived = proc & avail
+            trust_c = (jnp.take(state.trust, order)
+                       if state.trust is not None else None)
             fold = (sequential_fold if cfg.mixing == "sequential"
                     else buffered_fold)
             params, version, ring, count, p_seq, v_seq, rej, taus, aud = \
                 fold(params, state.version, state.acc_ring, state.acc_count,
-                     omegas, accs, vdisp_c, arrived)
+                     omegas, accs, vdisp_c, arrived, trust_c=trust_c)
 
             # redispatch: processed nodes get the model right after their
             # own slot (sequential) / the post-window model (buffered), the
@@ -407,11 +472,26 @@ class AsyncFleetEngine(MeshStateIO):
             t_next = t_arr + up_s + jnp.take(comp_s, order)
             na = state.next_arrival.at[drop_idx].set(t_next, mode="drop")
 
+            # trust EWMA / adaptive-attacker throttle, from this window's
+            # verdicts (only arrived slots were judged; churned slots keep
+            # their scores — trust_update's `seen` mask is the identity
+            # for them, so the proc-indexed scatter is harmless)
+            trust = state.trust
+            if trust is not None:
+                t_new = detection.trust_update(trust_c, arrived & ~rej,
+                                               arrived, eta)
+                trust = trust.at[drop_idx].set(t_new, mode="drop")
+            throttle = state.throttle
+            if throttle is not None:
+                th_new = stages.adaptive_throttle_update(
+                    thr_c, rej & arrived, arrived, adapt_scale)
+                throttle = throttle.at[drop_idx].set(th_new, mode="drop")
+
             new_state = dataclasses.replace(
                 state, residuals=residuals, chain_key=chain_key,
                 dispatched=dispatched, next_arrival=na,
                 dispatched_version=dv, version=version, acc_ring=ring,
-                acc_count=count)
+                acc_count=count, trust=trust, throttle=throttle)
             metrics = {
                 "n_rejected": (rej & arrived).sum(),
                 "max_staleness": jnp.where(arrived, taus, 0).max(),
@@ -459,11 +539,16 @@ class AsyncFleetEngine(MeshStateIO):
         need_nnz = self.net is not None     # byte-accurate pricing only
         need_audit = self._need_audit
         sequential_fold, buffered_fold = make_window_folds(cfg, need_audit)
+        attack_stage = stages.make_delta_attack(self.attack)
+        mal_full = (self.attack.mask(self.n_pad)
+                    if attack_stage is not None else None)
+        eta, adapt_scale = cfg.trust_eta, (
+            self.attack.adapt_poison_scale if self.attack else 1.0)
 
         def window_body(params, residuals, chain_key, dispatched,
                         next_arrival, dispatched_version, version, ring,
-                        count, x, y, sizes, order, proc, avail, up_s,
-                        cx, cy):
+                        count, trust, throttle, x, y, sizes, order, proc,
+                        avail, up_s, cx, cy):
             # 1. cohort gather: node-sharded -> replicated (C, ...) rows
             t_arr = mesh_lib.gather_rows(next_arrival, order, axis, b)
             vdisp_c = mesh_lib.gather_rows(dispatched_version, order,
@@ -487,6 +572,15 @@ class AsyncFleetEngine(MeshStateIO):
                                           blk(k1s))
             deltas = jax.tree.map(lambda l, dd: l - dd.astype(l.dtype),
                                   local, disp_b)
+            thr_c = (mesh_lib.gather_rows(throttle, order, axis, b)
+                     if throttle is not None else None)
+            if attack_stage is not None:
+                # shard-oblivious per-node row scaling on this device's
+                # cohort block (mal_full closes over as a replicated const)
+                mal_b = mesh_lib.my_block(jnp.take(mal_full, order), axis, d)
+                thr_b = (mesh_lib.my_block(thr_c, axis, d)
+                         if thr_c is not None else None)
+                deltas = attack_stage(deltas, mal_b, thr_b)
             deltas, res_b, nnz_b = stages.upload_pipeline(
                 cfg, deltas, res_b, blk(k2s), need_nnz=need_nnz)
             omegas_b, accs_b = stages.rebuild_and_evaluate(
@@ -498,11 +592,15 @@ class AsyncFleetEngine(MeshStateIO):
             res_c = mesh_lib.all_gather_tree(res_b, axis)
 
             arrived = proc & avail
+            # the cohort trust rows are gathered replicated, so the fold's
+            # trust-weighted mixing stays identical on every device
+            trust_c = (mesh_lib.gather_rows(trust, order, axis, b)
+                       if trust is not None else None)
             fold = (sequential_fold if cfg.mixing == "sequential"
                     else buffered_fold)
             params, version, ring, count, p_seq, v_seq, rej, taus, aud = \
                 fold(params, version, ring, count, omegas, accs, vdisp_c,
-                     arrived)
+                     arrived, trust_c=trust_c)
 
             # 4. redispatch: scatter processed rows back to their owners
             dispatched = mesh_lib.scatter_rows_tree(dispatched, order, p_seq,
@@ -514,6 +612,16 @@ class AsyncFleetEngine(MeshStateIO):
             t_next = t_arr + up_s + jnp.take(comp_s, order)
             next_arrival = mesh_lib.scatter_rows(next_arrival, order, t_next,
                                                  proc, axis, b)
+            if trust is not None:
+                t_new = detection.trust_update(trust_c, arrived & ~rej,
+                                               arrived, eta)
+                trust = mesh_lib.scatter_rows(trust, order, t_new, proc,
+                                              axis, b)
+            if throttle is not None:
+                th_new = stages.adaptive_throttle_update(
+                    thr_c, rej & arrived, arrived, adapt_scale)
+                throttle = mesh_lib.scatter_rows(throttle, order, th_new,
+                                                 proc, axis, b)
             metrics = {
                 "n_rejected": (rej & arrived).sum(),
                 "max_staleness": jnp.where(arrived, taus, 0).max(),
@@ -524,7 +632,8 @@ class AsyncFleetEngine(MeshStateIO):
                 # accs and the fold outputs are already replicated
                 metrics["audit"] = dict(aud, accs=accs, rej=rej, taus=taus)
             return (params, residuals, chain_key, dispatched, next_arrival,
-                    dispatched_version, version, ring, count, metrics)
+                    dispatched_version, version, ring, count, trust,
+                    throttle, metrics)
 
         pn, pr = mesh.spec_nodes(), mesh.spec_replicated()
         m_specs = {"n_rejected": pr, "max_staleness": pr}
@@ -533,11 +642,14 @@ class AsyncFleetEngine(MeshStateIO):
         if need_audit:
             m_specs["audit"] = {"accs": pr, "rej": pr, "taus": pr,
                                 "thr": pr, "held": pr}
+        # trust/throttle are node-sharded when present and leafless Nones
+        # when the spec keeps the defaults (specs over None are vacuous)
         return mesh.shard_map(
             window_body,
-            in_specs=(pr, pn, pr, pn, pn, pn, pr, pr, pr,
+            in_specs=(pr, pn, pr, pn, pn, pn, pr, pr, pr, pn, pn,
                       pn, pn, pn, pr, pr, pr, pr, pr, pr),
-            out_specs=(pr, pn, pr, pn, pn, pn, pr, pr, pr, m_specs))
+            out_specs=(pr, pn, pr, pn, pn, pn, pr, pr, pr, pn, pn,
+                       m_specs))
 
     # -- host-side driver ---------------------------------------------------
     def select_window(self, max_arrivals: Optional[int] = None
@@ -595,8 +707,11 @@ class AsyncFleetEngine(MeshStateIO):
         draw = None
         if self.net is not None:
             up_host = np.zeros(order.size, np.float64)
+            # DDoS flash traffic: flood flows contend for the shared
+            # uplink alongside every window's real uploads
+            flood = self.attack.flood_uploads if self.attack else 0
             with timed_stage(tr, "net.draw", window=w):
-                draw = self.net.draw(sel)
+                draw = self.net.draw(sel, extra_concurrency=flood)
             up_host[proc] = draw.transfer_s
         else:
             up_host = self._comm_pad32[order].astype(np.float64)
@@ -607,10 +722,12 @@ class AsyncFleetEngine(MeshStateIO):
         if self.mesh is not None:
             st = self.state
             (self.params, residuals, chain_key, dispatched, next_arrival,
-             dispatched_version, version, ring, count, m) = self._window_fn(
+             dispatched_version, version, ring, count, trust, throttle,
+             m) = self._window_fn(
                 self.params, st.residuals, st.chain_key, st.dispatched,
                 st.next_arrival, st.dispatched_version, st.version,
-                st.acc_ring, st.acc_count, self.data.x, self.data.y,
+                st.acc_ring, st.acc_count, st.trust, st.throttle,
+                self.data.x, self.data.y,
                 self.data.sizes, jnp.asarray(order, jnp.int32),
                 jnp.asarray(proc), jnp.asarray(avail), up_s,
                 *self.cloud_test)
@@ -618,7 +735,8 @@ class AsyncFleetEngine(MeshStateIO):
                 st, residuals=residuals, chain_key=chain_key,
                 dispatched=dispatched, next_arrival=next_arrival,
                 dispatched_version=dispatched_version, version=version,
-                acc_ring=ring, acc_count=count)
+                acc_ring=ring, acc_count=count, trust=trust,
+                throttle=throttle)
         else:
             self.params, self.state, m = self._window_fn(
                 self.params, self.state, self.data.x, self.data.y,

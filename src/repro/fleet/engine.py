@@ -170,6 +170,16 @@ class FleetConfig:
     key_mode: str = "parallel"      # parallel | sequential (seed-loop parity)
     backend: str = "reference"      # reference (jnp) | pallas (fused kernels)
     seed: int = 0
+    # trust-scored defense (api.DefenseSpec.kind="trust_weighted"): verdict-
+    # EWMA trust per node, trust/uncertainty-weighted aggregation
+    defense_kind: str = "percentile"   # percentile | trust_weighted
+    trust_eta: float = 0.25
+    trust_floor: float = 0.05
+    uncertainty_scale: float = 4.0
+
+    @property
+    def trust_on(self) -> bool:
+        return self.detect and self.defense_kind == "trust_weighted"
 
 
 @dataclass
@@ -217,7 +227,7 @@ class FleetEngine(MeshStateIO):
                  profile: Optional[NodeProfile] = None,
                  sampler: Optional[ClientSampler] = None,
                  mesh: Optional[FleetMesh] = None,
-                 net=None, tracer=None):
+                 net=None, tracer=None, attack=None):
         self.cfg = cfg
         # per-round events/metrics go to the injected tracer, else whatever
         # global one `api.run` scoped in (disabled -> all no-ops); the jitted
@@ -234,15 +244,22 @@ class FleetEngine(MeshStateIO):
         self.mesh = mesh
         self.net = net          # Optional[repro.net.NetSim]: wire codecs +
                                 # link sim replace the analytic comm model
+        self.attack = attack    # Optional[stages.AttackPlan]: adversary zoo
         self.n_pad = mesh.padded(self.n_nodes) if mesh else self.n_nodes
-        self.state = init_fleet_state(init_params, self.n_pad,
-                                      jax.random.PRNGKey(cfg.seed))
+        self.state = init_fleet_state(
+            init_params, self.n_pad, jax.random.PRNGKey(cfg.seed),
+            trust=cfg.trust_on,
+            throttle=attack is not None and attack.needs_throttle)
         self.history: List[FleetRoundRecord] = []
         if mesh is not None:
             self.data = mesh.put_nodes(self.data.pad_to(self.n_pad))
             self.state = dataclasses.replace(
                 self.state, residuals=mesh.put_nodes(self.state.residuals),
-                chain_key=mesh.put_replicated(self.state.chain_key))
+                chain_key=mesh.put_replicated(self.state.chain_key),
+                trust=(mesh.put_nodes(self.state.trust)
+                       if self.state.trust is not None else None),
+                throttle=(mesh.put_nodes(self.state.throttle)
+                          if self.state.throttle is not None else None))
             self.params = mesh.put_replicated(self.params)
             self._round_fn = jax.jit(self._build_round_sharded())
         else:
@@ -260,8 +277,12 @@ class FleetEngine(MeshStateIO):
         local_train = stages.make_local_train(self.loss_fn, cfg.local_steps,
                                               cfg.lr, cfg.batch_size)
         need_nnz = self.net is not None     # byte-accurate pricing only
+        attack_stage = stages.make_delta_attack(self.attack)
+        mal_full = (self.attack.mask(self.n_pad)
+                    if attack_stage is not None else None)
 
-        def round_fn(params, residuals, chain_key, x, y, sizes, idx, valid):
+        def round_fn(params, residuals, chain_key, trust, throttle,
+                     x, y, sizes, idx, valid):
             c = idx.shape[0]
             xg = jnp.take(x, idx, axis=0)
             yg = jnp.take(y, idx, axis=0)
@@ -277,6 +298,11 @@ class FleetEngine(MeshStateIO):
                 params, xg, yg, sz, k1s)
             deltas = jax.tree.map(lambda l, g: l - g[None].astype(l.dtype),
                                   local, params)
+            if attack_stage is not None:
+                mal_c = jnp.take(mal_full, idx)
+                thr_c = (jnp.take(throttle, idx)
+                         if throttle is not None else None)
+                deltas = attack_stage(deltas, mal_c, thr_c)
             deltas, res_c, nnz = stages.upload_pipeline(cfg, deltas, res_c,
                                                         k2s,
                                                         need_nnz=need_nnz)
@@ -288,7 +314,14 @@ class FleetEngine(MeshStateIO):
                 mask, thr = detect_masked(accs, valid, cfg.detect_s)
             else:
                 mask, thr = valid, jnp.zeros((), jnp.float32)
-            omega_mean = detection.masked_mean(omegas, mask)
+            if trust is not None:
+                trust_c = jnp.take(trust, idx)
+                w = detection.trust_weights(
+                    trust_c, accs, mask, cfg.trust_floor,
+                    cfg.uncertainty_scale)
+                omega_mean = detection.masked_weighted_mean(omegas, mask, w)
+            else:
+                omega_mean = detection.masked_mean(omegas, mask)
             new_params = async_update.mix(params, omega_mean, cfg.alpha)
 
             # write cohort residuals back; padded slots scatter out of bounds
@@ -297,10 +330,19 @@ class FleetEngine(MeshStateIO):
             residuals = jax.tree.map(
                 lambda full, part: full.at[drop_idx].set(part, mode="drop"),
                 residuals, res_c)
+            if trust is not None:
+                trust_c = detection.trust_update(
+                    jnp.take(trust, idx), mask, valid, cfg.trust_eta)
+                trust = trust.at[drop_idx].set(trust_c, mode="drop")
+            if throttle is not None:
+                thr_new = stages.adaptive_throttle_update(
+                    jnp.take(throttle, idx), valid & ~mask, valid,
+                    self.attack.adapt_poison_scale)
+                throttle = throttle.at[drop_idx].set(thr_new, mode="drop")
             m = {"accs": accs, "mask": mask, "thr": thr}
             if need_nnz:
                 m["nnz"] = nnz
-            return new_params, residuals, chain_key, m
+            return new_params, residuals, chain_key, trust, throttle, m
 
         return round_fn
 
@@ -325,9 +367,12 @@ class FleetEngine(MeshStateIO):
                                               cfg.lr, cfg.batch_size)
         n, n_pad, d, axis = self.n_nodes, self.n_pad, mesh.n_devices, mesh.axis
         need_nnz = self.net is not None     # byte-accurate pricing only
+        attack_stage = stages.make_delta_attack(self.attack)
+        mal_full = (self.attack.mask(n_pad)
+                    if attack_stage is not None else None)
 
-        def round_body(params, residuals, chain_key, x, y, sizes, valid,
-                       cx, cy):
+        def round_body(params, residuals, chain_key, trust, throttle,
+                       x, y, sizes, valid, cx, cy):
             # local leaves: residuals/x/y/sizes/valid lead with B = n_pad/d
             # keys are derived over the *true* node count then padded, so
             # both modes yield the exact per-node streams the single-device
@@ -345,6 +390,11 @@ class FleetEngine(MeshStateIO):
                 params, x, y, sizes, k1)
             deltas = jax.tree.map(lambda l, g: l - g[None].astype(l.dtype),
                                   local, params)
+            if attack_stage is not None:
+                # the attack stage is shard-oblivious: per-node row scaling
+                # on this device's block of the (replicated) malicious mask
+                mal_blk = mesh_lib.my_block(mal_full, axis, d)
+                deltas = attack_stage(deltas, mal_blk, throttle)
             deltas, res_new, nnz = stages.upload_pipeline(
                 cfg, deltas, residuals, k2, need_nnz=need_nnz)
             omegas, accs = stages.rebuild_and_evaluate(
@@ -360,9 +410,21 @@ class FleetEngine(MeshStateIO):
                 mask_all, thr = valid_all, jnp.zeros((), jnp.float32)
             mask = mesh_lib.my_block(mask_all, axis, d)
 
-            # masked mean: per-shard weighted partial sums + psum
-            w = mask.astype(jnp.float32)
-            denom = jnp.maximum(jax.lax.psum(w.sum(), axis), 1.0)
+            if trust is not None:
+                # trust/uncertainty weights against the globally-reduced
+                # accepted-mean accuracy (every shard shares the anchor)
+                m_all = mask_all.astype(jnp.float32)
+                ref = ((accs_all.astype(jnp.float32) * m_all).sum()
+                       / jnp.maximum(m_all.sum(), 1.0))
+                w = mask.astype(jnp.float32) * detection.trust_weights(
+                    trust, accs, mask, cfg.trust_floor,
+                    cfg.uncertainty_scale, ref=ref)
+                total = jax.lax.psum(w.sum(), axis)
+                denom = jnp.where(total > 0, total, 1.0)
+            else:
+                # masked mean: per-shard weighted partial sums + psum
+                w = mask.astype(jnp.float32)
+                denom = jnp.maximum(jax.lax.psum(w.sum(), axis), 1.0)
 
             def agg(o):
                 wf = w.reshape((-1,) + (1,) * (o.ndim - 1))
@@ -377,10 +439,17 @@ class FleetEngine(MeshStateIO):
                 lambda old, new: jnp.where(
                     valid.reshape((-1,) + (1,) * (old.ndim - 1)), new, old),
                 residuals, res_new)
+            if trust is not None:
+                trust = detection.trust_update(trust, mask, valid,
+                                               cfg.trust_eta)
+            if throttle is not None:
+                throttle = stages.adaptive_throttle_update(
+                    throttle, valid & ~mask, valid,
+                    self.attack.adapt_poison_scale)
             m = {"accs": accs_all, "mask": mask_all, "thr": thr}
             if need_nnz:
                 m["nnz"] = jax.lax.all_gather(nnz, axis, tiled=True)
-            return new_params, residuals, chain_key, m
+            return new_params, residuals, chain_key, trust, throttle, m
 
         pn, pr = mesh.spec_nodes(), mesh.spec_replicated()
         m_specs = {"accs": pr, "mask": pr, "thr": pr}
@@ -388,8 +457,8 @@ class FleetEngine(MeshStateIO):
             m_specs["nnz"] = pr
         return mesh.shard_map(
             round_body,
-            in_specs=(pr, pn, pr, pn, pn, pn, pn, pr, pr),
-            out_specs=(pr, pn, pr, m_specs))
+            in_specs=(pr, pn, pr, pn, pn, pn, pn, pn, pn, pr, pr),
+            out_specs=(pr, pn, pr, pn, pn, m_specs))
 
     # -- host-side driver ---------------------------------------------------
     def run_round(self) -> FleetRoundRecord:
@@ -402,18 +471,22 @@ class FleetEngine(MeshStateIO):
         with timed_stage(tr, "round.device", round=r) as st:
             if self.mesh is not None:
                 up = self._participation_mask(idx, valid)
-                self.params, residuals, chain_key, m = self._round_fn(
+                (self.params, residuals, chain_key, trust, throttle,
+                 m) = self._round_fn(
                     self.params, self.state.residuals, self.state.chain_key,
+                    self.state.trust, self.state.throttle,
                     self.data.x, self.data.y, self.data.sizes,
                     self.mesh.put_nodes(jnp.asarray(up)), *self.cloud_test)
             else:
-                self.params, residuals, chain_key, m = self._round_fn(
+                (self.params, residuals, chain_key, trust, throttle,
+                 m) = self._round_fn(
                     self.params, self.state.residuals, self.state.chain_key,
+                    self.state.trust, self.state.throttle,
                     self.data.x, self.data.y, self.data.sizes,
                     jnp.asarray(idx, jnp.int32), jnp.asarray(valid))
             st.fence((self.params, m))
         self.state = FleetState(residuals=residuals, chain_key=chain_key,
-                                round=r + 1)
+                                round=r + 1, trust=trust, throttle=throttle)
 
         n_part = int(valid.sum())
         if self.mesh is not None:   # sharded mask is per-node over n_pad
@@ -437,8 +510,9 @@ class FleetEngine(MeshStateIO):
                 valid_np = np.asarray(valid)
                 sel_nodes = np.asarray(idx)[valid_np]
                 nnz_sel = np.asarray(m["nnz"])[valid_np]
+            flood = self.attack.flood_uploads if self.attack else 0
             with timed_stage(tr, "net.draw", round=r) as st:
-                draw = self.net.draw(sel_nodes)
+                draw = self.net.draw(sel_nodes, extra_concurrency=flood)
             with timed_stage(tr, "net.commit", round=r) as st:
                 enc = self.net.commit(draw, nnz_sel)
             comm = float(draw.transfer_s.max()) if sel_nodes.size else 0.0
@@ -482,6 +556,11 @@ class FleetEngine(MeshStateIO):
                        threshold=thr, rejected=bool(~mask[i]),
                        detect=bool(self.cfg.detect))
         mx = tr.metrics
+        if self.cfg.detect and nodes.size and detection.detect_fell_back(
+                accs, thr):
+            # the all-equal guard accepted everyone — the exact state a
+            # detection-aware attacker forces; auditable from the trace
+            mx.counter("detect.fallback").inc()
         mx.histogram("round.size", WINDOW_SIZE_EDGES).observe(
             rec.n_participating)
         mx.counter("round.participants").inc(rec.n_participating)

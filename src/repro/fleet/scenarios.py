@@ -26,7 +26,9 @@ class Scenario:
     name: str
     n_nodes: int = 10
     # population composition
-    malicious_frac: float = 0.0         # label-flipping adversaries (1 -> 7)
+    malicious_frac: float = 0.0         # adversary fraction (see attack_kind)
+    attack_kind: str = "label_flip"     # api.AttackMix zoo kind
+    placement: str = "random"           # malicious-node placement
     straggler_frac: float = 0.0         # nodes with `straggler_slowdown`x compute
     straggler_slowdown: float = 10.0
     availability: float = 1.0           # per-round P(node is reachable)
@@ -45,6 +47,7 @@ class Scenario:
     clip_s: float = 1.0
     detect: bool = False
     detect_s: float = 80.0
+    defense_kind: str = "percentile"    # percentile | trust_weighted
     sparsify_ratio: float = 1.0
     # async scheduling (consumed by build_async_engine only)
     staleness_adaptive: bool = False
@@ -91,7 +94,9 @@ class Scenario:
                     bandwidth_bps=self.bandwidth_bps,
                     straggler_frac=self.straggler_frac,
                     straggler_slowdown=self.straggler_slowdown),
-                attack=s.AttackMix(malicious_frac=self.malicious_frac),
+                attack=s.AttackMix(malicious_frac=self.malicious_frac,
+                                   kind=self.attack_kind,
+                                   placement=self.placement),
                 availability=self.availability,
                 cohort_frac=self.cohort_frac,
                 model=self.model, hw=self.hw,
@@ -106,7 +111,8 @@ class Scenario:
             compression=s.CompressionSpec(
                 sparsify_ratio=self.sparsify_ratio),
             defense=s.DefenseSpec(detect=self.detect,
-                                  detect_s=self.detect_s),
+                                  detect_s=self.detect_s,
+                                  kind=self.defense_kind),
             topology=topology,
             train=s.TrainSpec(local_steps=self.local_steps,
                               batch_size=self.batch_size, lr=self.lr),
@@ -124,11 +130,19 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
     Scenario("churn", availability=0.7),
     Scenario("sampled_cohort", n_nodes=50, cohort_frac=0.2),
     Scenario("private_sparse", sigma=0.05, sparsify_ratio=0.1, detect=True),
+    # adversary-zoo populations (api.AttackMix kinds + trust defense)
+    Scenario("sybil_trust", malicious_frac=0.2, attack_kind="sybil",
+             detect=True, defense_kind="trust_weighted"),
+    Scenario("backdoor_20", malicious_frac=0.2, attack_kind="backdoor",
+             detect=True),
     # asynchronous populations (run via build_async_engine)
     Scenario("async_stragglers", straggler_frac=0.2, straggler_slowdown=20.0,
              staleness_adaptive=True),
     Scenario("async_churn", availability=0.7),
     Scenario("async_label_flip", malicious_frac=0.2, detect=True),
+    Scenario("async_adaptive_trust", malicious_frac=0.2,
+             attack_kind="adaptive", detect=True,
+             defense_kind="trust_weighted", staleness_adaptive=True),
     Scenario("async_buffered", async_mixing="buffered", async_window=2.0),
 ]}
 

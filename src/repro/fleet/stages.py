@@ -201,6 +201,102 @@ def detect_masked(accs: jnp.ndarray, valid: jnp.ndarray, s: float
 
 
 # ---------------------------------------------------------------------------
+# stage: the adversary zoo's delta-level attacks
+#
+# Data-level attacks (label_flip, backdoor, the sybils' shared shard) are
+# baked into the shards by `data.federated`; what remains engine-side is
+# per-node row scaling of the uploaded deltas — sybil boosting and the
+# adaptive attacker's detection-aware throttle — plus the DDoS flood count
+# the host feeds to `NetSim.draw`.  All of it is elementwise along the
+# leading node axis (no cross-node reduction), so the stage runs unchanged
+# inside the mesh engines' shard_map: shard-oblivious by construction.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttackPlan:
+    """Engine-side view of an `api.AttackMix` + the materialized malicious
+    ids: which rows are adversarial and how their uploads misbehave."""
+    kind: str                       # label_flip|sybil|backdoor|adaptive|ddos
+    malicious: np.ndarray           # (N,) bool host-side membership
+    sybil_boost: float = 3.0
+    adapt_poison_scale: float = 0.5
+    ddos_uploads: int = 4
+
+    @classmethod
+    def from_spec(cls, attack, n_nodes: int, malicious_ids) -> "AttackPlan":
+        mal = np.zeros(int(n_nodes), bool)
+        mal[np.asarray(list(malicious_ids), int)] = True
+        return cls(kind=attack.kind, malicious=mal,
+                   sybil_boost=float(attack.sybil_boost),
+                   adapt_poison_scale=float(attack.adapt_poison_scale),
+                   ddos_uploads=int(attack.ddos_uploads))
+
+    @property
+    def n_malicious(self) -> int:
+        return int(self.malicious.sum())
+
+    @property
+    def needs_throttle(self) -> bool:
+        """Does this attack carry device-side state (`FleetState.throttle`)?"""
+        return self.kind == "adaptive"
+
+    @property
+    def flood_uploads(self) -> int:
+        """Extra concurrent flows the host injects into `NetSim.draw`'s
+        shared-uplink contention each round/window (the DDoS attack)."""
+        return (self.n_malicious * self.ddos_uploads
+                if self.kind == "ddos" else 0)
+
+    def mask(self, n_total: int = None) -> jnp.ndarray:
+        """(n_total,) bool device mask, padded False (mesh pad rows are
+        honest dummies)."""
+        m = self.malicious
+        if n_total is not None and n_total > m.shape[0]:
+            m = np.concatenate([m, np.zeros(n_total - m.shape[0], bool)])
+        return jnp.asarray(m)
+
+
+def scale_node_rows(tree, scale: jnp.ndarray):
+    """Multiply every leaf's node rows by the (C,) per-node scale."""
+    return jax.tree.map(
+        lambda x: (x * scale.reshape((-1,) + (1,) * (x.ndim - 1))
+                   .astype(x.dtype)), tree)
+
+
+def make_delta_attack(plan):
+    """The pluggable delta-level attack stage, or None when the attack
+    does not touch uploads.  Returns stage(deltas, mal_c, throttle_c) —
+    ``mal_c`` the cohort's malicious mask, ``throttle_c`` the adaptive
+    attacker's per-node poison scale (ignored by sybil)."""
+    if plan is None or plan.kind not in ("sybil", "adaptive"):
+        return None
+    if plan.kind == "sybil":
+        boost = float(plan.sybil_boost)
+
+        def stage(deltas, mal_c, throttle_c=None):
+            return scale_node_rows(
+                deltas, jnp.where(mal_c, boost, 1.0).astype(jnp.float32))
+    else:
+        def stage(deltas, mal_c, throttle_c):
+            return scale_node_rows(
+                deltas, jnp.where(mal_c, throttle_c, 1.0)
+                .astype(jnp.float32))
+    return stage
+
+
+def adaptive_throttle_update(throttle: jnp.ndarray, rejected: jnp.ndarray,
+                             seen: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """The detection-aware attacker's control law, per participating node:
+    caught ⇒ back the poison off (× ``scale``); accepted ⇒ creep back up
+    (× 1.1, capped at full strength).  Non-participants keep their state.
+    Applied to malicious rows only (honest rows carry throttle 1.0 and are
+    never scaled)."""
+    upd = jnp.where(rejected, throttle * float(scale),
+                    jnp.minimum(1.0, throttle * 1.1))
+    return jnp.where(seen, upd, throttle)
+
+
+# ---------------------------------------------------------------------------
 # cohort flat layout (cached) + the pallas-backed cohort upload pipeline
 # ---------------------------------------------------------------------------
 

@@ -121,6 +121,15 @@ class FleetState:
         accuracies (NaN = empty slot) — replaces the trainer's Python
         `acc_window` list; acc_count: () i32 total accuracies ever pushed
         (write cursor = acc_count % W).
+
+    The trust-scored defense and the adaptive attacker add two optional
+    (N,) rings of their own (None unless the spec opts in — absent fields
+    keep the default jitted programs byte-identical):
+      trust: per-node trust scores in [0, 1], EWMA'd from detection
+        verdicts (`detection.trust_update`), consumed as aggregation
+        weights (`detection.trust_weights`).
+      throttle: the detection-aware attacker's per-node poison scale —
+        device-side adversary state, updated from the same verdicts.
     """
     residuals: object
     chain_key: jnp.ndarray
@@ -131,6 +140,8 @@ class FleetState:
     version: Optional[jnp.ndarray] = None
     acc_ring: Optional[jnp.ndarray] = None
     acc_count: Optional[jnp.ndarray] = None
+    trust: Optional[jnp.ndarray] = None
+    throttle: Optional[jnp.ndarray] = None
 
     @property
     def n_nodes(self) -> int:
@@ -140,25 +151,35 @@ class FleetState:
 jax.tree_util.register_dataclass(
     FleetState,
     data_fields=["residuals", "chain_key", "dispatched", "next_arrival",
-                 "dispatched_version", "version", "acc_ring", "acc_count"],
+                 "dispatched_version", "version", "acc_ring", "acc_count",
+                 "trust", "throttle"],
     meta_fields=["round"])
 
 
-def init_fleet_state(template_params, n_nodes: int, key) -> FleetState:
-    """Zero residuals for every node + the engine's starting chain key."""
+def init_fleet_state(template_params, n_nodes: int, key, *,
+                     trust: bool = False,
+                     throttle: bool = False) -> FleetState:
+    """Zero residuals for every node + the engine's starting chain key.
+    ``trust``/``throttle`` allocate the optional (N,) defense/adversary
+    rings (both start at full score/scale 1.0)."""
     residuals = jax.tree.map(
         lambda x: jnp.zeros((n_nodes,) + x.shape, jnp.float32),
         template_params)
-    return FleetState(residuals=residuals, chain_key=key, round=0)
+    return FleetState(
+        residuals=residuals, chain_key=key, round=0,
+        trust=jnp.ones((n_nodes,), jnp.float32) if trust else None,
+        throttle=jnp.ones((n_nodes,), jnp.float32) if throttle else None)
 
 
 def init_async_fleet_state(template_params, n_nodes: int, key,
                            first_arrival: np.ndarray,
-                           detect_window: int) -> FleetState:
+                           detect_window: int, *, trust: bool = False,
+                           throttle: bool = False) -> FleetState:
     """Async extension of :func:`init_fleet_state`: every node starts with
     the global model (version 0) in flight, arriving when its first local
     compute finishes; the detection ring starts empty."""
-    st = init_fleet_state(template_params, n_nodes, key)
+    st = init_fleet_state(template_params, n_nodes, key, trust=trust,
+                          throttle=throttle)
     return dataclasses.replace(
         st,
         dispatched=broadcast_tree(template_params, n_nodes),

@@ -119,10 +119,13 @@ class NetSim:
         return self._tracer if self._tracer is not None else get_tracer()
 
     # -- phase 1: pre-flight transfer times ---------------------------------
-    def draw(self, nodes: np.ndarray) -> UploadDraw:
+    def draw(self, nodes: np.ndarray,
+             extra_concurrency: int = 0) -> UploadDraw:
         """Sample transfer times for one batch of concurrent uploads and
         advance each node's upload counter.  Concurrency for the shared-
-        uplink cap is the batch size.
+        uplink cap is the batch size plus ``extra_concurrency`` — flood
+        uploads contending for the shared uplink without being real model
+        uploads (the DDoS flash-traffic attack injects its flows here).
 
         Stochastic links are drawn through the batched counter-based
         (seed, node, seq) hash stream in `link.draw_transfer_batch` — one
@@ -130,13 +133,14 @@ class NetSim:
         upload alone (the determinism contract, property-tested)."""
         nodes = np.asarray(nodes, np.int64)   # unique per batch (one window/
         u = nodes.size                        # cohort row set per draw)
+        conc = u + max(0, int(extra_concurrency))
         seqs = self._counters[nodes].copy()
         np.add.at(self._counters, nodes, 1)
         link = self.link
         if link.loss_prob == 0.0 and link.jitter_s == 0.0:
             bw = self.eff_bandwidth_bps[nodes]
             if link.shared_uplink_bps > 0.0:
-                bw = np.minimum(bw, link.shared_uplink_bps / max(1, u))
+                bw = np.minimum(bw, link.shared_uplink_bps / max(1, conc))
             transfer = (link.latency_s
                         + float(self.nominal_payload_bytes) / bw)
             return UploadDraw(nodes=nodes, seqs=seqs, transfer_s=transfer,
@@ -144,7 +148,7 @@ class NetSim:
                               retransmits=np.zeros(u, np.int64))
         transfer, overhead, retrans = draw_transfer_batch(
             link, self.nominal_payload_bytes, self.eff_bandwidth_bps[nodes],
-            self.seed, nodes, seqs, concurrency=u)
+            self.seed, nodes, seqs, concurrency=conc)
         return UploadDraw(nodes=nodes, seqs=seqs, transfer_s=transfer,
                           overhead_bytes=overhead, retransmits=retrans)
 

@@ -57,12 +57,28 @@ def materialize_bandwidth(base_bps: np.ndarray, sigma: float,
                           seed: int) -> np.ndarray:
     """Per-node effective uplink rates: the fleet profile's bandwidths
     scaled by a lognormal factor exp(N(0, sigma)) — sigma=0 returns the
-    profile rates untouched (byte-for-byte the analytic model's)."""
+    profile rates untouched (byte-for-byte the analytic model's).
+
+    Rates are validated strictly positive and finite: a zero/negative/NaN
+    uplink would otherwise divide through `draw_transfer_batch` into
+    inf/NaN transfer times and silently poison the async arrival clocks.
+    """
     base = np.asarray(base_bps, np.float64)
+    _require_positive_bw(base, "node bandwidth")
     if sigma <= 0:
         return base.copy()
     rng = np.random.default_rng(np.random.SeedSequence([int(seed), 0xB]))
-    return base * np.exp(rng.normal(0.0, sigma, base.shape[0]))
+    out = base * np.exp(rng.normal(0.0, sigma, base.shape[0]))
+    _require_positive_bw(out, "materialized bandwidth")
+    return out
+
+
+def _require_positive_bw(bw: np.ndarray, what: str) -> None:
+    if bw.size and not (np.isfinite(bw).all() and (bw > 0).all()):
+        bad = bw[~(np.isfinite(bw) & (bw > 0))]
+        raise ValueError(
+            f"{what} must be finite and > 0 (transfer time divides by it); "
+            f"got {bad[:4].tolist()}{'...' if bad.size > 4 else ''}")
 
 
 # -- the counter-based per-upload uniform stream ----------------------------
@@ -147,6 +163,7 @@ def draw_transfer_batch(link: LinkProfile, payload_bytes: float,
                     np.log(us) * inv_log_loss).astype(np.int64).sum(axis=1)
     overhead = retrans * float(link.mtu_bytes)
     bw = np.asarray(node_bw_bps, np.float64).copy()
+    _require_positive_bw(bw, "node bandwidth")
     if link.shared_uplink_bps > 0.0:
         bw = np.minimum(bw, link.shared_uplink_bps / max(1, concurrency))
     transfer = (link.latency_s + jitter

@@ -1,0 +1,488 @@
+"""Adversary zoo + trust-scored detection acceptance suite.
+
+Covers the PR's attack/defense surface end to end:
+
+* `compile_plan` validation of the grown `AttackMix`/`DefenseSpec`
+  (flip-label ranges, kind/placement enums, ddos's network requirement,
+  trust_weighted's detect requirement) and the new plan stage names;
+* the attack-path bugfixes: seeded-random malicious placement (with the
+  legacy first-k default preserved for direct data callers), the
+  `net.link` bandwidth positivity guard, and the `detect` all-equal
+  fallback (pinned + surfaced as the ``detect.fallback`` obs counter);
+* per-attack unit semantics (trigger stamping, sybil boost, adaptive
+  throttling, per-kind data poisoning) and the ASR metrics;
+* sybil cohort collusion inside one async arrival window;
+* forced-8-device mesh parity for the attack + trust-weighted path.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro import obs as obs_lib
+from repro.core import detection
+from repro.core.attacks import (backdoor_success_rate, flip_success_rate,
+                                stamp_trigger)
+from repro.data import make_federated_image_data
+from repro.data.federated import select_malicious
+from repro.fleet import get_scenario, stages
+from repro.fleet.scenarios import build_engine
+from repro.net.link import (LinkProfile, draw_transfer_batch,
+                            materialize_bandwidth)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _spec(**kw):
+    base = dict(
+        fleet=api.FleetSpec(n_nodes=6, samples_per_node=20, n_test=32,
+                            n_cloud_test=16,
+                            attack=api.AttackMix(malicious_frac=0.34)),
+        defense=api.DefenseSpec(detect=True),
+        train=api.TrainSpec(local_steps=2, batch_size=8, lr=0.1),
+        rounds=2, seed=0)
+    base.update(kw)
+    return api.ExperimentSpec(**base)
+
+
+def _attack(**kw):
+    return api.FleetSpec(n_nodes=6, samples_per_node=20, n_test=32,
+                         n_cloud_test=16,
+                         attack=api.AttackMix(malicious_frac=0.34, **kw))
+
+
+# ---------------------------------------------------------------------------
+# compile_plan validation (satellite 1 + tentpole spec surface)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw, match", [
+    (dict(flip_src=3, flip_dst=3), "flip_src"),
+    (dict(flip_src=10), "n_classes"),
+    (dict(flip_dst=-1), "flip_dst"),
+    (dict(kind="gradient_ascent"), "attack.kind"),
+    (dict(placement="last"), "placement"),
+    (dict(kind="sybil", sybil_boost=0.0), "sybil_boost"),
+    (dict(kind="adaptive", adapt_poison_scale=1.5), "adapt_poison_scale"),
+    (dict(kind="backdoor", trigger_frac=0.0), "trigger_frac"),
+    (dict(kind="backdoor", trigger_label=11), "trigger_label"),
+    (dict(kind="backdoor", trigger_size=9), "trigger_size"),
+    (dict(kind="ddos", ddos_uploads=0), "ddos_uploads"),
+])
+def test_compile_plan_rejects_bad_attack(kw, match):
+    with pytest.raises(api.SpecError, match=match):
+        api.compile_plan(_spec(fleet=_attack(**kw)))
+
+
+def test_flip_labels_unconstrained_when_not_attacking():
+    """flip_src == flip_dst is only a contradiction when label flipping
+    actually runs — an honest fleet carries the fields inert."""
+    fleet = api.FleetSpec(n_nodes=6, attack=api.AttackMix(flip_src=3,
+                                                          flip_dst=3))
+    api.compile_plan(_spec(fleet=fleet))
+    # ... and a backdoor fleet never flips labels either
+    api.compile_plan(_spec(fleet=_attack(kind="backdoor", flip_src=3,
+                                         flip_dst=3)))
+
+
+def test_compile_plan_ddos_requires_shared_uplink():
+    with pytest.raises(api.SpecError, match="shared_uplink"):
+        api.compile_plan(_spec(fleet=_attack(kind="ddos")))
+    api.compile_plan(_spec(
+        fleet=_attack(kind="ddos"),
+        network=api.NetworkSpec(codec="dense_f32", shared_uplink_bps=1e6)))
+
+
+def test_compile_plan_trust_weighted_requires_detect():
+    with pytest.raises(api.SpecError, match="detect"):
+        api.compile_plan(_spec(
+            defense=api.DefenseSpec(detect=False, kind="trust_weighted")))
+    with pytest.raises(api.SpecError, match="defense.kind"):
+        api.compile_plan(_spec(defense=api.DefenseSpec(kind="tofu")))
+
+
+def test_compile_plan_zoo_forbids_sequential_topology():
+    with pytest.raises(api.SpecError, match="sequential"):
+        api.compile_plan(_spec(fleet=_attack(kind="sybil"),
+                               topology=api.Topology(kind="sequential")))
+    # data-level attacks still run on the reference loop
+    api.compile_plan(_spec(fleet=_attack(kind="label_flip"),
+                           topology=api.Topology(kind="sequential")))
+
+
+def test_plan_stages_name_the_adversary_and_defense():
+    plan = api.compile_plan(_spec(
+        fleet=_attack(kind="sybil"),
+        defense=api.DefenseSpec(detect=True, kind="trust_weighted")))
+    assert "attack[sybil]" in plan.stages
+    assert "trust_weighted_agg" in plan.stages
+    # defaults stay stage-identical to the pre-zoo pipeline (opt-in)
+    plan0 = api.compile_plan(api.ExperimentSpec(
+        fleet=api.FleetSpec(n_nodes=4),
+        train=api.TrainSpec(local_steps=2, batch_size=8, lr=0.1),
+        rounds=1, seed=0))
+    assert not any(s.startswith("attack[") for s in plan0.stages)
+    assert "trust_weighted_agg" not in plan0.stages
+
+
+def test_spec_roundtrip_and_v3_payload_accepted():
+    """New fields serialize; a pre-zoo (schema v3) payload without them
+    still loads with the legacy semantics."""
+    spec = _spec(fleet=_attack(kind="backdoor", trigger_size=3),
+                 defense=api.DefenseSpec(detect=True,
+                                         kind="trust_weighted"))
+    again = api.ExperimentSpec.from_dict(spec.to_dict())
+    assert again == spec
+    d = api.ExperimentSpec().to_dict()
+    d["schema_version"] = 3
+    for key in ("kind", "sybil_boost", "adapt_poison_scale", "trigger_frac",
+                "trigger_label", "trigger_size", "trigger_value",
+                "ddos_uploads", "placement"):
+        d["fleet"]["attack"].pop(key, None)
+    for key in ("kind", "trust_eta", "trust_floor", "uncertainty_scale"):
+        d["defense"].pop(key, None)
+    old = api.ExperimentSpec.from_dict(d)
+    assert old.fleet.attack.kind == "label_flip"
+    assert old.defense.kind == "percentile"
+
+
+# ---------------------------------------------------------------------------
+# malicious placement (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_select_malicious_first_is_legacy_prefix():
+    assert select_malicious(7, 10, 3, placement="first") == [0, 1, 2]
+    with pytest.raises(ValueError, match="placement"):
+        select_malicious(0, 10, 3, placement="last")
+
+
+def test_select_malicious_random_is_seeded_and_varied():
+    a = select_malicious(0, 20, 5, placement="random")
+    assert a == select_malicious(0, 20, 5, placement="random")
+    assert a == sorted(a) and len(set(a)) == 5
+    assert all(0 <= i < 20 for i in a)
+    others = {tuple(select_malicious(s, 20, 5, placement="random"))
+              for s in range(8)}
+    assert len(others) > 1, "placement never leaves the same cohort"
+    # the set is over nodes, not a prefix — some seed avoids node 0
+    assert any(sel[0] != 0 for sel in others)
+
+
+def test_direct_data_callers_keep_first_k_placement():
+    """`make_federated_image_data`'s own default stays the legacy first-k
+    prefix — the byte-compat contract for every pre-zoo caller."""
+    _, _, _, malicious = make_federated_image_data(
+        0, n_nodes=5, n_malicious=2, n_train=100, n_test=32,
+        n_cloud_test=16, hw=(8, 8))
+    assert malicious == [0, 1]
+
+
+def test_spec_routes_seeded_random_placement():
+    spec = _spec(fleet=_attack())
+    pop = api.materialize(spec)
+    k = int(round(0.34 * 6))
+    assert list(pop.malicious_ids) == select_malicious(
+        spec.seed, 6, k, placement="random")
+    legacy = dataclasses.replace(
+        spec, fleet=_attack(placement="first"))
+    assert list(api.materialize(legacy).malicious_ids) == list(range(k))
+
+
+# ---------------------------------------------------------------------------
+# link bandwidth guard (satellite 3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [0.0, -5.0, float("nan"), float("inf")])
+def test_materialize_bandwidth_rejects_nonpositive(bad):
+    bw = np.array([1e6, bad, 2e6])
+    with pytest.raises(ValueError, match="bandwidth"):
+        materialize_bandwidth(bw, 0.0, seed=0)
+
+
+def test_draw_transfer_batch_rejects_bad_bandwidth():
+    link = LinkProfile(jitter_s=0.1, loss_prob=0.1)
+    nodes = np.array([0, 1])
+    seqs = np.zeros(2, np.int64)
+    with pytest.raises(ValueError, match="bandwidth"):
+        draw_transfer_batch(link, 1000, np.array([1e6, 0.0]), 0, nodes,
+                            seqs, concurrency=2)
+    t, _, _ = draw_transfer_batch(link, 1000, np.array([1e6, 1e6]), 0,
+                                  nodes, seqs, concurrency=2)
+    assert np.isfinite(t).all() and (t > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# detect() all-equal fallback (satellite 4)
+# ---------------------------------------------------------------------------
+
+def test_detect_all_equal_fallback_pinned():
+    """Regression pin: the strict A > Thr comparison rejects everyone on
+    an all-equal accuracy set, so detect() falls back to >= and accepts
+    everyone — exactly the state a detection-aware attacker forces."""
+    accs = jnp.full((5,), 0.37)
+    mask, thr = detection.detect(accs, 80.0)
+    assert bool(mask.all())
+    assert detection.detect_fell_back(np.asarray(accs), float(thr))
+    spread = jnp.asarray([0.1, 0.2, 0.9, 0.8, 0.5])
+    mask2, thr2 = detection.detect(spread, 80.0)
+    assert not bool(mask2.all())
+    assert not detection.detect_fell_back(np.asarray(spread), float(thr2))
+
+
+def test_detect_fallback_obs_counter():
+    """The fallback state is audited: one `detect.fallback` counter tick
+    per all-equal round, none otherwise."""
+    eng = build_engine(get_scenario("label_flip_20").with_nodes(5), seed=0)
+    tracer = obs_lib.Tracer(sinks=[obs_lib.MemorySink()], enabled=True)
+    eng.obs = tracer
+    rec = type(eng.history)().__class__  # noqa: F841 (engine unused below)
+    from repro.fleet.engine import FleetRoundRecord
+    rr = FleetRoundRecord(t=1.0, round=0, accuracy=0.5, comm_bytes=0.0,
+                          comp_time=0.0, comm_time=0.0, n_participating=5,
+                          n_rejected=0)
+    idx = np.arange(5)
+    valid = np.ones(5, bool)
+    equal = {"thr": np.float32(0.4), "accs": np.full(5, 0.4, np.float32),
+             "mask": np.ones(5, bool)}
+    eng._emit_round_events(rr, idx, valid, equal, None)
+    assert tracer.metrics.snapshot()["detect.fallback"]["value"] == 1.0
+    varied = {"thr": np.float32(0.4),
+              "accs": np.linspace(0.1, 0.9, 5).astype(np.float32),
+              "mask": np.ones(5, bool)}
+    eng._emit_round_events(rr, idx, valid, varied, None)
+    assert tracer.metrics.snapshot()["detect.fallback"]["value"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# per-attack unit semantics
+# ---------------------------------------------------------------------------
+
+def test_stamp_trigger_and_success_metrics():
+    x = np.zeros((4, 6, 6, 1), np.float32)
+    stamped = stamp_trigger(x, size=2, value=0.9)
+    assert float(x.max()) == 0.0, "stamp must copy, not mutate"
+    assert np.all(np.asarray(stamped)[:, :2, :2, :] == 0.9)
+    assert float(jnp.asarray(stamped)[:, 2:, :, :].max()) == 0.0
+
+    # a rigged forward that always predicts class 7
+    def always7(params, xx):
+        logits = jnp.zeros((xx.shape[0], 10))
+        return logits.at[:, 7].set(1.0)
+
+    y = np.array([1, 1, 2, 7])
+    asr = flip_success_rate(always7, {}, x, y, src=1, dst=7)
+    assert asr == pytest.approx(1.0)
+    bsr = backdoor_success_rate(always7, {}, x, y, trigger_label=7)
+    assert bsr == pytest.approx(1.0)   # non-7 samples all flip to 7
+
+    def always2(params, xx):
+        logits = jnp.zeros((xx.shape[0], 10))
+        return logits.at[:, 2].set(1.0)
+
+    assert flip_success_rate(always2, {}, x, y, 1, 7) == pytest.approx(0.0)
+    assert backdoor_success_rate(always2, {}, x, y, 7) == pytest.approx(0.0)
+
+
+def test_sybil_delta_stage_boosts_malicious_rows():
+    plan = stages.AttackPlan.from_spec(
+        api.AttackMix(malicious_frac=0.5, kind="sybil", sybil_boost=3.0),
+        4, (1, 3))
+    stage = stages.make_delta_attack(plan)
+    deltas = {"w": jnp.ones((4, 2))}
+    out = stage(deltas, plan.mask(), None)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               [[1, 1], [3, 3], [1, 1], [3, 3]])
+
+
+def test_adaptive_stage_and_throttle_update():
+    plan = stages.AttackPlan.from_spec(
+        api.AttackMix(malicious_frac=0.5, kind="adaptive",
+                      adapt_poison_scale=0.5), 4, (0, 2))
+    assert plan.needs_throttle
+    stage = stages.make_delta_attack(plan)
+    throttle = jnp.asarray([1.0, 1.0, 0.25, 1.0])
+    out = stage({"w": jnp.ones((4, 1))}, plan.mask(), throttle)
+    np.testing.assert_allclose(np.asarray(out["w"]).ravel(),
+                               [1.0, 1.0, 0.25, 1.0])
+    # rejected -> halve, accepted -> recover 1.1x (capped at 1), unseen
+    # -> unchanged
+    rej = jnp.asarray([True, False, False, False])
+    seen = jnp.asarray([True, True, False, True])
+    t2 = stages.adaptive_throttle_update(throttle, rej, seen, 0.5)
+    np.testing.assert_allclose(np.asarray(t2), [0.5, 1.0, 0.25, 1.0])
+    t3 = stages.adaptive_throttle_update(
+        jnp.asarray([0.5, 0.9, 0.99, 1.0]), jnp.zeros(4, bool),
+        jnp.ones(4, bool), 0.5)
+    np.testing.assert_allclose(np.asarray(t3), [0.55, 0.99, 1.0, 1.0])
+
+
+def test_ddos_plan_floods_but_keeps_data_clean():
+    plan = stages.AttackPlan.from_spec(
+        api.AttackMix(malicious_frac=0.5, kind="ddos", ddos_uploads=4),
+        4, (0, 2))
+    assert stages.make_delta_attack(plan) is None
+    assert plan.flood_uploads == 8
+    clean = make_federated_image_data(
+        0, n_nodes=4, n_malicious=0, n_train=80, n_test=32, n_cloud_test=16,
+        hw=(8, 8))[0]
+    flooded = make_federated_image_data(
+        0, n_nodes=4, n_malicious=2, n_train=80, n_test=32, n_cloud_test=16,
+        hw=(8, 8), attack_kind="ddos")[0]
+    for (xa, ya), (xb, yb) in zip(clean, flooded):
+        np.testing.assert_array_equal(ya, yb)
+        np.testing.assert_array_equal(xa, xb)
+
+
+def test_backdoor_data_poisoning():
+    node_data, _, _, malicious = make_federated_image_data(
+        3, n_nodes=4, n_malicious=2, n_train=160, n_test=32, n_cloud_test=16,
+        hw=(8, 8), attack_kind="backdoor", trigger_frac=0.5,
+        trigger_label=0, trigger_size=2, trigger_value=1.0)
+    for node, (x, y) in enumerate(node_data):
+        stamped = np.all(x[:, :2, :2, :] == 1.0, axis=(1, 2, 3))
+        if node in malicious:
+            assert stamped.any()
+            assert np.all(y[stamped] == 0)
+        else:
+            assert not stamped.any() or x[stamped].size == 0
+
+
+def test_sybil_cohort_shares_one_shard():
+    node_data, _, _, malicious = make_federated_image_data(
+        0, n_nodes=5, n_malicious=3, n_train=100, n_test=32, n_cloud_test=16,
+        hw=(8, 8), attack_kind="sybil")
+    first = malicious[0]
+    for m in malicious[1:]:
+        np.testing.assert_array_equal(node_data[m][0], node_data[first][0])
+        np.testing.assert_array_equal(node_data[m][1], node_data[first][1])
+    honest = next(i for i in range(5) if i not in malicious)
+    assert not np.array_equal(node_data[honest][1], node_data[first][1])
+
+
+# ---------------------------------------------------------------------------
+# sybil collusion lands in one async window
+# ---------------------------------------------------------------------------
+
+def test_sybil_cohort_colludes_in_one_async_window():
+    spec = _spec(fleet=_attack(kind="sybil"),
+                 schedule=api.SchedulePolicy(kind="async"),
+                 defense=api.DefenseSpec(detect=True,
+                                         kind="trust_weighted"))
+    plan = api.compile_plan(spec)
+    pop = api.materialize(spec)
+    mal = set(pop.malicious_ids)
+    assert len(mal) == 2
+    # materialize pins the sybil clones to identical compute
+    comp = pop.profile.compute_s
+    assert len({float(comp[i]) for i in mal}) == 1
+    eng = api.make_engine(plan, pop)
+    first_window = {}
+    for w in range(12):
+        order, proc = eng.select_window()
+        sel = set(int(i) for i in order[proc])
+        for node in sel & mal:
+            first_window.setdefault(node, w)
+        eng.run_window()
+        if mal <= set(first_window):
+            break
+    assert mal <= set(first_window), "sybils never arrived"
+    assert len(set(first_window.values())) == 1, (
+        f"sybil cohort split across windows: {first_window}")
+    # the trust ring updated for the arrived nodes
+    assert eng.state.trust is not None
+    assert float(np.asarray(eng.state.trust).min()) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# attack + trust defense: forced-8-device mesh parity
+# ---------------------------------------------------------------------------
+
+def test_attack_trust_mesh_matches_single_device_on_8_devices():
+    """The sybil delta stage, trust-weighted fold and throttle scatter are
+    shard-oblivious: the forced-8-device mesh float-closes the
+    single-device trajectory for both schedules."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses, json
+        import jax
+        from repro import api
+
+        out = {"n_devices": len(jax.devices())}
+        for label, kind, attack in (("sybil_sync", "sync", "sybil"),
+                                    ("adaptive_async", "async",
+                                     "adaptive")):
+            spec = api.ExperimentSpec(
+                fleet=api.FleetSpec(
+                    n_nodes=8, samples_per_node=20, n_test=32,
+                    n_cloud_test=16,
+                    attack=api.AttackMix(malicious_frac=0.25, kind=attack),
+                    profile=api.NodeHeterogeneity(heterogeneity=0.5)),
+                schedule=api.SchedulePolicy(kind=kind),
+                defense=api.DefenseSpec(detect=True,
+                                        kind="trust_weighted"),
+                topology=api.Topology(kind="single"),
+                train=api.TrainSpec(local_steps=2, batch_size=8, lr=0.1),
+                rounds=2, seed=0)
+            ref = api.run(api.compile_plan(spec))
+            mesh_spec = dataclasses.replace(
+                spec, topology=api.Topology(kind="mesh", devices=8))
+            rep = api.run(api.compile_plan(mesh_spec))
+            assert rep.engine == "fleet-mesh", rep.engine
+            out[label + "_len"] = len(ref.records) - len(rep.records)
+            out[label + "_acc"] = max(
+                abs(a.accuracy - b.accuracy)
+                for a, b in zip(ref.records, rep.records))
+            out[label + "_rej"] = int(sum(
+                a.n_rejected != b.n_rejected
+                for a, b in zip(ref.records, rep.records)))
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    assert rec["n_devices"] == 8
+    for label in ("sybil_sync", "adaptive_async"):
+        assert rec[f"{label}_len"] == 0, rec
+        assert rec[f"{label}_acc"] < 2e-3, rec
+        assert rec[f"{label}_rej"] == 0, rec
+
+
+# ---------------------------------------------------------------------------
+# opt-in guarantee: defaults keep the legacy detection/aggregation path
+# ---------------------------------------------------------------------------
+
+def test_defaults_allocate_no_adversary_state():
+    spec = _spec()     # attacking, but percentile defense
+    eng = api.make_engine(api.compile_plan(spec), api.materialize(spec))
+    assert eng.state.trust is None and eng.state.throttle is None
+    honest = api.ExperimentSpec(
+        fleet=api.FleetSpec(n_nodes=4),
+        train=api.TrainSpec(local_steps=2, batch_size=8, lr=0.1),
+        rounds=1, seed=0)
+    eng0 = api.make_engine(api.compile_plan(honest), api.materialize(honest))
+    assert eng0.attack is None
+    assert eng0.state.trust is None and eng0.state.throttle is None
+
+
+def test_trust_weighted_defense_updates_trust_scores():
+    spec = _spec(defense=api.DefenseSpec(detect=True,
+                                         kind="trust_weighted"))
+    eng = api.make_engine(api.compile_plan(spec), api.materialize(spec))
+    assert eng.state.trust is not None
+    before = np.asarray(eng.state.trust).copy()
+    eng.run_round()
+    after = np.asarray(eng.state.trust)
+    assert after.shape == before.shape
+    assert not np.array_equal(after, before)
+    assert (after >= 0.0).all() and (after <= 1.0).all()

@@ -7,7 +7,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== 1/8 import sweep (every repro.* and benchmarks.* module) =="
+echo "== 1/9 import sweep (every repro.* and benchmarks.* module) =="
 python - <<'EOF'
 import importlib
 import pkgutil
@@ -32,28 +32,31 @@ print(f"imported {len(mods) - len(failures)}/{len(mods)} modules")
 raise SystemExit(1 if failures else 0)
 EOF
 
-echo "== 2/8 tier-1 pytest =="
+echo "== 2/9 tier-1 pytest =="
 python -m pytest -q
 
-echo "== 3/8 fleet smokes on synthetic data (2 sync rounds + 2 async windows) =="
+echo "== 3/9 fleet smokes on synthetic data (2 sync rounds + 2 async windows) =="
 python -m benchmarks.fleet_scale --smoke
 python -m benchmarks.async_scale --smoke
 
-echo "== 4/8 multi-device sharded fleet smoke (4 forced host devices) =="
+echo "== 4/9 multi-device sharded fleet smoke (4 forced host devices) =="
 python -m benchmarks.fleet_shard --smoke
 
-echo "== 5/8 api smoke (spec -> plan -> run, every schedule x topology) =="
+echo "== 5/9 api smoke (spec -> plan -> run, every schedule x topology) =="
 python -m benchmarks.api_smoke
 XLA_FLAGS=--xla_force_host_platform_device_count=2 \
     python -m benchmarks.api_smoke --mesh 2
 
-echo "== 6/8 network smoke (wire codecs + lossy-link run) =="
+echo "== 6/9 network smoke (wire codecs + lossy-link run) =="
 python -m benchmarks.net_sweep --smoke
 
-echo "== 7/8 pallas fused-kernel smoke (megakernel + window-fold engines) =="
+echo "== 7/9 pallas fused-kernel smoke (megakernel + window-fold engines) =="
 python -m benchmarks.api_smoke --backend pallas
 
-echo "== 8/8 obs smoke (traced run + pinned benchmark baselines) =="
+echo "== 8/9 obs smoke (traced run + pinned benchmark baselines) =="
 python -m benchmarks.obs_smoke
 python tools/bench_check.py
+
+echo "== 9/9 attack-matrix smoke (adversary zoo x defense x schedule) =="
+python -m benchmarks.attack_matrix --smoke
 echo "CI OK"
