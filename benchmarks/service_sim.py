@@ -1,0 +1,135 @@
+"""Simulation-service benchmark: attack onset mid-run + kill/resume.
+
+Drives `repro.sim.SimService` through the scenario the batch runner
+cannot express: a clean fleet that comes under attack at round k (an
+``attack`` `SimEvent` rematerializes the population with poisoned
+shards), with the paper's detector toggled on two rounds later (a
+``defense`` event) and a diurnal traffic trace throttling the repro.net
+links throughout.  Reports the detection/trust response around the onset
+and verifies the service's core contract on the same spec: a run killed
+at round k, checkpointed, and resumed reproduces the uninterrupted
+trajectory bit-exactly.
+
+Rows land in ``results/service_sim.json`` through the api's
+schema-stamped serializer and are pinned by ``tools/bench_check.py``
+(wall-clock fields are fingerprint-exempt).
+
+  PYTHONPATH=src python -m benchmarks.service_sim          # full scenario
+  PYTHONPATH=src python -m benchmarks.service_sim --smoke  # tiny CI run
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+from repro import api
+from repro.sim import SimService
+
+from .common import append_trajectory
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "service_sim.json")
+
+
+def _spec(smoke: bool) -> api.ExperimentSpec:
+    n = 6 if smoke else 10
+    rounds = 6 if smoke else 10
+    onset = 2 if smoke else 3
+    detect_on = onset + 1 if smoke else onset + 2
+    sim = api.SimSpec(
+        traces=(api.TrafficTrace(kind="diurnal", period_s=40.0,
+                                 amplitude=0.3),),
+        events=(
+            api.SimEvent(at_round=onset, kind="attack",
+                         payload={"kind": "label_flip",
+                                  "malicious_frac": 0.5}),
+            api.SimEvent(at_round=detect_on, kind="defense",
+                         payload={"detect": True}),
+        ))
+    return api.ExperimentSpec(
+        fleet=api.FleetSpec(n_nodes=n, hw=(8, 8),
+                            samples_per_node=240 // n,
+                            n_test=128, n_cloud_test=64),
+        schedule=api.SchedulePolicy(kind="async"),
+        network=api.NetworkSpec(codec="sparse_coo", bandwidth_sigma=0.3,
+                                latency_s=0.01),
+        compression=api.CompressionSpec(sparsify_ratio=0.5),
+        defense=api.DefenseSpec(detect=False),
+        topology=api.Topology(kind="single"),
+        train=api.TrainSpec(local_steps=4, batch_size=16, lr=0.1),
+        sim=sim, rounds=rounds, seed=0)
+
+
+def _recs(report):
+    return [(r.t, r.version, r.accuracy, r.comm_bytes, r.comp_time,
+             r.comm_time, r.n_rejected, r.bytes_source)
+            for r in report.records]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI variant")
+    ap.add_argument("--no-write", action="store_true",
+                    help="skip the results/ append (CI smoke)")
+    args = ap.parse_args()
+
+    spec = _spec(args.smoke)
+    ev = {e.kind: e.at_round for e in spec.sim.events}
+    onset, detect_on = ev["attack"], ev["defense"]
+
+    t0 = time.time()
+    base = SimService(api.compile_plan(spec)).run()
+    base_wall = time.time() - t0
+    rejected = [r.n_rejected for r in base.records]
+    print(f"attack onset @ {onset}, detector on @ {detect_on}: "
+          f"rejected per record = {rejected}", flush=True)
+
+    # kill at the round after onset (mutated spec in the manifest), resume,
+    # and demand a bit-exact continuation
+    kill_at = onset + 1
+    svc = SimService(api.compile_plan(spec))
+    svc.run(max_records=kill_at)
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.time()
+        path = svc.checkpoint(os.path.join(d, "ck"))
+        ckpt_wall = time.time() - t0
+        ckpt_bytes = os.path.getsize(path + ".npz")
+        t0 = time.time()
+        resumed = SimService.resume(path).run()
+        resume_wall = time.time() - t0
+    bit_exact = _recs(resumed) == _recs(base)
+    net_exact = resumed.net == base.net
+    print(f"kill@{kill_at} -> resume: bit_exact={bit_exact} "
+          f"net_exact={net_exact}", flush=True)
+    if not (bit_exact and net_exact):
+        raise SystemExit("resume parity violated")
+
+    rows = [{
+        "bench": "service_sim", "phase": "attack_onset",
+        "smoke": bool(args.smoke), "mode": base.mode,
+        "rounds": len(base.records), "onset_round": onset,
+        "detect_round": detect_on,
+        "rejected_before_detect": int(sum(rejected[:detect_on])),
+        "rejected_after_detect": int(sum(rejected[detect_on:])),
+        "detections": base.detections,
+        "final_accuracy": float(base.final_accuracy),
+        "kappa": float(base.kappa),
+        "net_encoded_bytes": float(base.net["encoded_bytes"]),
+        "wall_s": base_wall,
+    }, {
+        "bench": "service_sim", "phase": "resume_parity",
+        "smoke": bool(args.smoke), "kill_at": kill_at,
+        "bit_exact": bool(bit_exact), "net_exact": bool(net_exact),
+        "resumed_from_round": int(resumed.resume_round),
+        "ckpt_bytes": int(ckpt_bytes),
+        "ckpt_wall_s": ckpt_wall, "resume_wall_s": resume_wall,
+    }]
+    if not args.no_write:
+        append_trajectory(RESULTS_PATH, rows)
+        print(f"wrote {len(rows)} rows -> {RESULTS_PATH}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

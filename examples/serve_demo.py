@@ -1,10 +1,14 @@
 """Batched serving demo: prefill + KV-cache decode across architecture
-families (dense GQA ring-cache, Mamba O(1) state, hybrid both).
+families (dense GQA ring-cache, Mamba O(1) state, hybrid both) — with a
+mid-generation checkpoint: the decode state (cache + last token) is saved
+through `repro.checkpointing` halfway, reloaded, and the tail regenerated
+to show the resumed continuation emits identical tokens.
 
   PYTHONPATH=src python examples/serve_demo.py
 """
 import os
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -13,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpointing import load_checkpoint, save_checkpoint
 from repro.configs import get_smoke_config
 from repro.models import decode_step, init_cache, init_params, prefill
 
@@ -36,16 +41,32 @@ def serve(arch: str, batch=2, prompt=16, gen=8) -> None:
     logits, cache = jax.jit(lambda p, bb, c: prefill(p, cfg, bb, c))(
         params, b, cache)
     tok = logits[:, -1].argmax(-1)[:, None].astype(jnp.int32)
-    toks = [tok]
+
+    def decode(tok, cache, steps):
+        toks = []
+        for _ in range(steps):
+            logits, cache = jdec(params, tok, cache)
+            tok = logits[:, -1].argmax(-1)[:, None].astype(jnp.int32)
+            toks.append(tok)
+        return toks, tok, cache
+
+    half = (gen - 1) // 2
     t0 = time.time()
-    for _ in range(gen - 1):
-        logits, cache = jdec(params, tok, cache)
-        tok = logits[:, -1].argmax(-1)[:, None].astype(jnp.int32)
-        toks.append(tok)
+    head, mid_tok, mid_cache = decode(tok, cache, half)
+    # snapshot the decode state mid-generation: KV/SSM cache + last token
+    ckpt = os.path.join(tempfile.mkdtemp(prefix="serve_"), arch)
+    save_checkpoint(ckpt, {"cache": mid_cache, "tok": mid_tok}, step=half)
+    tail, _, _ = decode(mid_tok, mid_cache, gen - 1 - half)
     dt = time.time() - t0
-    out = jnp.concatenate(toks, 1)
+    out = jnp.concatenate([tok] + head + tail, 1)
+    # resume: reload the snapshot and regenerate the tail — same tokens
+    loaded, _ = load_checkpoint(ckpt, {"cache": mid_cache, "tok": mid_tok})
+    tail2, _, _ = decode(loaded["tok"], loaded["cache"], gen - 1 - half)
+    resumed = jnp.concatenate([tok] + head + tail2, 1)
+    assert bool((out == resumed).all()), "resumed decode diverged"
     print(f"{arch:22s} [{cfg.family:6s}] decode {batch}x{gen-1} tokens "
-          f"in {dt:5.2f}s -> {np.asarray(out[0, :8]).tolist()}")
+          f"in {dt:5.2f}s -> {np.asarray(out[0, :8]).tolist()} "
+          f"(resume parity ok)")
 
 
 if __name__ == "__main__":

@@ -30,11 +30,13 @@ from .population import (Population, default_sampler,  # noqa: F401
 from .report import (RoundRecord, RunReport,  # noqa: F401
                      append_json_records, detection_log, load_json_records,
                      replay_records)
-from .run import RunState, execute, init_state, make_engine, run  # noqa: F401
+from .run import (RunState, execute, init_state,  # noqa: F401
+                  make_engine, make_stepper, run)
 from .spec import (ACCEPTED_SCHEMA_VERSIONS, SCHEMA_VERSION,  # noqa: F401
                    AttackMix, CompressionSpec, DefenseSpec, ExperimentSpec,
                    FleetSpec, NetworkSpec, NodeHeterogeneity, ObsSpec,
-                   PrivacySpec, SchedulePolicy, Topology, TrainSpec)
+                   PrivacySpec, SchedulePolicy, SimEvent, SimSpec, Topology,
+                   TrafficTrace, TrainSpec, apply_sim_event)
 from .window import (AutoWindow, FixedWindow,  # noqa: F401
                      TargetArrivalsWindow, WindowPolicy,
                      window_policy_from_dict)

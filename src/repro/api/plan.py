@@ -11,12 +11,14 @@ axis combinations fail loudly at compile time, not silently mid-run.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
 from ..core import aldp, detection
 from ..net.codecs import CODEC_NAMES, SparseBitpack
-from .spec import ExperimentSpec
+from .spec import (SIM_EVENT_KINDS, TRACE_KINDS, ExperimentSpec,
+                   apply_sim_event)
 from .window import AutoWindow, FixedWindow, TargetArrivalsWindow
 
 SCHEDULE_KINDS = ("sync", "async", "buffered")
@@ -285,6 +287,107 @@ def compile_plan(spec: ExperimentSpec) -> ExperimentPlan:
              "obs.stage_timings times the fleet engines' pipeline stages — "
              "the sequential reference loop has none (use topology.kind="
              "'single' or 'mesh')")
+
+    # -- simulation service (repro.sim) -------------------------------------
+    sim = spec.sim
+    if sim is not None:
+        _require(sim.checkpoint_every >= 0,
+                 f"sim.checkpoint_every must be >= 0, got "
+                 f"{sim.checkpoint_every}")
+        _require(not (sim.checkpoint_every > 0 and not sim.checkpoint_dir),
+                 "sim.checkpoint_every > 0 schedules automatic checkpoints "
+                 "— it needs sim.checkpoint_dir")
+        for i, trc in enumerate(sim.traces):
+            _require(trc.kind in TRACE_KINDS,
+                     f"sim.traces[{i}].kind {trc.kind!r} not in "
+                     f"{TRACE_KINDS}")
+            _require(0.0 <= trc.amplitude < 1.0,
+                     f"sim.traces[{i}].amplitude must be in [0, 1) — an "
+                     f"amplitude of 1 zeroes the link rate, got "
+                     f"{trc.amplitude}")
+            _require(0.0 < trc.node_frac <= 1.0,
+                     f"sim.traces[{i}].node_frac must be in (0, 1], got "
+                     f"{trc.node_frac}")
+            _require(0.0 <= trc.region_start < 1.0,
+                     f"sim.traces[{i}].region_start must be in [0, 1), got "
+                     f"{trc.region_start}")
+            if trc.kind == "diurnal":
+                _require(trc.period_s > 0,
+                         f"sim.traces[{i}] (diurnal) needs period_s > 0, "
+                         f"got {trc.period_s}")
+            else:
+                _require(trc.duration_s > 0 and trc.t_start >= 0,
+                         f"sim.traces[{i}] ({trc.kind}) is an epoch — needs "
+                         f"duration_s > 0 and t_start >= 0, got "
+                         f"({trc.t_start}, {trc.duration_s})")
+            if trc.kind in ("diurnal", "flash_crowd"):
+                _require(net.enabled,
+                         f"sim.traces[{i}] ({trc.kind}) modulates link "
+                         f"bandwidth — it needs a real network.codec "
+                         f"(network.codec='analytic' has no links to "
+                         f"throttle)")
+            if trc.kind == "outage":
+                _require(topo.kind != "sequential",
+                         f"sim.traces[{i}] (outage) drops nodes via the "
+                         f"churn sampler — the sequential reference loop "
+                         f"has none; use topology.kind='single' or 'mesh'")
+                _require(not (sch.kind == "sync" and trc.node_frac >= 1.0),
+                         f"sim.traces[{i}]: a full-fleet outage would "
+                         f"starve a synchronous barrier round — use "
+                         f"node_frac < 1 on sync schedules")
+        members = set(range(f.n_nodes))
+        last_round = 0
+        mutated = dataclasses.replace(spec, sim=None)
+        for i, ev in enumerate(sim.events):
+            _require(ev.kind in SIM_EVENT_KINDS,
+                     f"sim.events[{i}].kind {ev.kind!r} not in "
+                     f"{SIM_EVENT_KINDS}")
+            _require(isinstance(ev.payload, dict),
+                     f"sim.events[{i}].payload must be a dict, got "
+                     f"{type(ev.payload).__name__}")
+            _require(1 <= ev.at_round < spec.rounds,
+                     f"sim.events[{i}].at_round={ev.at_round} must be in "
+                     f"[1, rounds={spec.rounds}) — events fire between "
+                     f"records")
+            _require(ev.at_round >= last_round,
+                     f"sim.events[{i}] fires at round {ev.at_round}, before "
+                     f"sim.events[{i - 1}] at {last_round} — the timeline "
+                     f"must be ordered by at_round")
+            last_round = ev.at_round
+            if ev.kind == "nodes":
+                _require(topo.kind != "sequential",
+                         f"sim.events[{i}] (nodes) churns membership via "
+                         f"the dynamic sampler — the sequential reference "
+                         f"loop has none; use topology.kind='single' or "
+                         f"'mesh'")
+                _require(set(ev.payload) <= {"join", "leave"},
+                         f"sim.events[{i}] (nodes) payload keys must be a "
+                         f"subset of {{'join', 'leave'}}, got "
+                         f"{sorted(ev.payload)}")
+                for kk in ("join", "leave"):
+                    ids = ev.payload.get(kk, [])
+                    _require(all(isinstance(x, int) and 0 <= x < f.n_nodes
+                                 for x in ids),
+                             f"sim.events[{i}] (nodes) {kk} ids must be "
+                             f"node ids in [0, {f.n_nodes}), got {ids}")
+                members -= set(ev.payload.get("leave", []))
+                members |= set(ev.payload.get("join", []))
+                _require(len(members) >= 1,
+                         f"sim.events[{i}] (nodes) would leave the fleet "
+                         f"empty at round {ev.at_round}")
+            else:
+                try:
+                    mutated = apply_sim_event(mutated, ev)
+                except (TypeError, ValueError) as e:
+                    raise SpecError(
+                        f"sim.events[{i}] ({ev.kind}): bad payload "
+                        f"{ev.payload!r} — {e}") from e
+                try:
+                    compile_plan(mutated)
+                except SpecError as e:
+                    raise SpecError(
+                        f"sim.events[{i}] ({ev.kind}) at round "
+                        f"{ev.at_round} yields an invalid spec: {e}") from e
 
     # -- privacy resolution -------------------------------------------------
     if priv.sigma is None:

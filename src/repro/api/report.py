@@ -57,6 +57,10 @@ class RunReport:
     net: Optional[Dict] = None          # repro.net NetTrace summary (wire
                                         # codec + encoded/wire byte totals)
                                         # when the network subsystem ran
+    # v5 resume metadata: set when the run was restored from a checkpoint
+    # (repro.sim); None for uninterrupted runs and pre-v5 payloads
+    resumed_from: Optional[str] = None  # checkpoint base path
+    resume_round: Optional[int] = None  # record index the run resumed at
     schema_version: int = SCHEMA_VERSION
     final_params: Any = field(default=None, repr=False, compare=False)
 
@@ -73,6 +77,8 @@ class RunReport:
             "detections": self.detections,
             "spec": self.spec,
             "net": self.net,
+            "resumed_from": self.resumed_from,
+            "resume_round": self.resume_round,
         }
 
     def to_json(self, **kw) -> str:
@@ -92,6 +98,9 @@ class RunReport:
                    final_accuracy=d["final_accuracy"],
                    detections=list(d.get("detections", [])),
                    spec=d.get("spec"), net=d.get("net"),
+                   # pre-v5 payloads have no resume metadata — uninterrupted
+                   resumed_from=d.get("resumed_from"),
+                   resume_round=d.get("resume_round"),
                    schema_version=SCHEMA_VERSION)
 
     @classmethod

@@ -239,14 +239,47 @@ def make_engine(plan: ExperimentPlan, population: Population,
 
 
 # ---------------------------------------------------------------------------
-# fleet-engine execution (the trainer's _run_sync_fleet / _run_async_fleet)
+# record steppers (the trainer's former _run_* drivers, one record at a time)
 # ---------------------------------------------------------------------------
+#
+# Each execution path is a *stepper*: `step()` advances the run by exactly
+# one `RoundRecord` (a barrier round, or n_nodes async arrivals, or one
+# buffered window), `done` says whether the record budget is spent, and
+# `finalize()` hands node-local state back to the `RunState`.  `execute`
+# just drains a stepper — byte-for-byte the old loops — while `repro.sim`
+# drives the same steppers incrementally: its coordinator installs a
+# `pre_step` hook (traffic-trace modulation), checkpoints between steps
+# via `export_state`/`restore_state` (only ever called at a record
+# boundary, where the span accumulators are exactly zero), and swaps
+# steppers mid-run to apply `SimEvent` spec mutations.
 
-def _run_sync_fleet(plan, pop, state, eng) -> None:
-    n = pop.n_nodes
-    src = "encoded" if eng.net is not None else "analytic"
-    eng.load_state(fleet.stack_trees(state.residuals), state.key)
-    for r in range(plan.spec.rounds):
+class _SyncFleetStepper:
+    """Barrier rounds on the cohort-batched `FleetEngine`."""
+
+    def __init__(self, plan, pop, state, eng):
+        self.plan, self.pop, self.state, self.eng = plan, pop, state, eng
+        self.n = pop.n_nodes
+        self.src = "encoded" if eng.net is not None else "analytic"
+        eng.load_state(fleet.stack_trees(state.residuals), state.key)
+        self.emitted = 0
+        self.pre_step = None
+
+    @property
+    def net(self):
+        return self.eng.net
+
+    @property
+    def done(self) -> bool:
+        return self.emitted >= self.plan.spec.rounds
+
+    def virtual_time(self) -> float:
+        h = self.eng.history
+        return float(h[-1].t) if h else float(self.eng._t0)
+
+    def step(self) -> None:
+        if self.pre_step is not None:
+            self.pre_step(self)
+        state, eng = self.state, self.eng
         rec = eng.run_round()
         if state.accountant is not None:
             # charge only the nodes that actually uploaded a noised delta
@@ -254,75 +287,157 @@ def _run_sync_fleet(plan, pop, state, eng) -> None:
             state.accountant.step(rec.n_participating)
         state.params = eng.params
         state.history.append(RoundRecord(
-            rec.t, r, rec.accuracy, rec.comm_bytes, rec.comp_time,
-            rec.comm_time, rec.n_rejected, bytes_source=src))
-    # hand node-local state back so follow-on runs stay faithful
-    state.key = jax.device_get(eng.state.chain_key)
-    state.residuals = fleet.unstack_tree(eng.export_residuals(), n)
-    if eng.net is not None:
-        state.net = eng.net.summary()
+            rec.t, self.emitted, rec.accuracy, rec.comm_bytes, rec.comp_time,
+            rec.comm_time, rec.n_rejected, bytes_source=self.src))
+        self.emitted += 1
+
+    def finalize(self) -> None:
+        _fleet_handback(self.state, self.eng, self.n)
+
+    # -- checkpoint/resume (repro.sim) --------------------------------------
+    def export_state(self):
+        arrays = self.eng.export_sim_state()
+        meta = {"emitted": self.emitted,
+                "round": int(self.eng.state.round),
+                "t0": self.virtual_time()}
+        _export_net(self.eng.net, arrays, meta)
+        return arrays, meta
+
+    def restore_state(self, arrays, meta) -> None:
+        arrays = dict(arrays)
+        _restore_net(self.eng.net, arrays, meta)
+        self.eng.load_sim_state(arrays)
+        self.eng.state = dataclasses.replace(self.eng.state,
+                                             round=int(meta["round"]))
+        # the engine's barrier clock continues from the checkpointed time
+        # (its own history list is empty after a restore)
+        self.eng._t0 = float(meta["t0"])
+        self.state.params = self.eng.params
+        self.emitted = int(meta["emitted"])
 
 
-def _run_async_fleet(plan, pop, state, eng, acc_fn, test_dev) -> None:
-    n = pop.n_nodes
-    src = "encoded" if eng.net is not None else "analytic"
-    eng.load_state(fleet.stack_trees(state.residuals), state.key)
-    total = plan.total_arrivals
-    processed = 0
-    # one RoundRecord per n_nodes arrivals, exactly like the event loop
-    # (downstream benchmarks normalize by len(history)): windows are capped
-    # so they never straddle a record boundary — a cap only truncates the
-    # arrival prefix, so the processed order is unchanged
-    span_bytes = span_comp = span_comm = 0.0
-    span_rejected = 0
-    while processed < total:
-        boundary = n - processed % n
-        rec = eng.run_window(max_arrivals=boundary, evaluate=False)
-        processed += rec.n_processed
-        if state.accountant is not None:
-            state.accountant.step(rec.n_processed)
-        state.params = eng.params
-        span_bytes += rec.comm_bytes
-        span_comp += rec.comp_time
-        span_comm += rec.comm_time
-        span_rejected += rec.n_rejected
-        if processed % n == 0:
-            state.history.append(RoundRecord(
-                rec.t, rec.version, float(acc_fn(state.params, *test_dev)),
-                span_bytes, span_comp, span_comm, span_rejected,
-                bytes_source=src))
-            span_bytes = span_comp = span_comm = 0.0
-            span_rejected = 0
-    # hand node-local state back so follow-on runs stay faithful
-    state.key = jax.device_get(eng.state.chain_key)
-    state.residuals = fleet.unstack_tree(eng.export_residuals(), n)
-    if eng.net is not None:
-        state.net = eng.net.summary()
+class _AsyncFleetStepper:
+    """Event-loop cadence on the window-batched `AsyncFleetEngine`: one
+    record per n_nodes arrivals — windows are capped so they never
+    straddle a record boundary (a cap only truncates the arrival prefix,
+    so the processed order is unchanged)."""
+
+    def __init__(self, plan, pop, state, eng):
+        self.plan, self.pop, self.state, self.eng = plan, pop, state, eng
+        self.n = pop.n_nodes
+        self.src = "encoded" if eng.net is not None else "analytic"
+        eng.load_state(fleet.stack_trees(state.residuals), state.key)
+        self.acc_fn = eng.acc_fn
+        self.test_dev = eng.test_data
+        self.emitted = 0
+        self.processed = 0
+        self.pre_step = None
+
+    @property
+    def net(self):
+        return self.eng.net
+
+    @property
+    def done(self) -> bool:
+        return self.processed >= self.plan.total_arrivals
+
+    def virtual_time(self) -> float:
+        arr = np.asarray(jax.device_get(self.eng.state.next_arrival),
+                         np.float64)[:self.n]
+        return float(arr.min())
+
+    def step(self) -> None:
+        state, eng, n = self.state, self.eng, self.n
+        target = min(self.processed + n, self.plan.total_arrivals)
+        span_bytes = span_comp = span_comm = 0.0
+        span_rejected = 0
+        rec = None
+        while self.processed < target:
+            if self.pre_step is not None:
+                self.pre_step(self)
+            rec = eng.run_window(max_arrivals=target - self.processed,
+                                 evaluate=False)
+            self.processed += rec.n_processed
+            if state.accountant is not None:
+                state.accountant.step(rec.n_processed)
+            state.params = eng.params
+            span_bytes += rec.comm_bytes
+            span_comp += rec.comp_time
+            span_comm += rec.comm_time
+            span_rejected += rec.n_rejected
+        state.history.append(RoundRecord(
+            rec.t, rec.version,
+            float(self.acc_fn(state.params, *self.test_dev)),
+            span_bytes, span_comp, span_comm, span_rejected,
+            bytes_source=self.src))
+        self.emitted += 1
+
+    def finalize(self) -> None:
+        _fleet_handback(self.state, self.eng, self.n)
+
+    # -- checkpoint/resume (repro.sim) --------------------------------------
+    def export_state(self):
+        arrays = self.eng.export_sim_state()
+        meta = {"emitted": self.emitted, "processed": self.processed,
+                "window_idx": int(self.eng._window_idx)}
+        _export_net(self.eng.net, arrays, meta)
+        return arrays, meta
+
+    def restore_state(self, arrays, meta) -> None:
+        arrays = dict(arrays)
+        _restore_net(self.eng.net, arrays, meta)
+        self.eng.load_sim_state(arrays)
+        self.state.params = self.eng.params
+        self.emitted = int(meta["emitted"])
+        self.processed = int(meta["processed"])
+        # the window index seeds the cohort sampler's round stream
+        self.eng._window_idx = int(meta["window_idx"])
 
 
-def _run_buffered_fleet(plan, pop, state, eng, acc_fn, test_dev) -> None:
+class _BufferedFleetStepper(_AsyncFleetStepper):
     """Buffered (FedBuff-style) windows: process the arrival budget window
     by window without the event-loop record boundary — one record per
     window (load-aware policies make windows fat on purpose)."""
-    n = pop.n_nodes
-    src = "encoded" if eng.net is not None else "analytic"
-    eng.load_state(fleet.stack_trees(state.residuals), state.key)
-    total = plan.total_arrivals
-    processed = 0
-    while processed < total:
-        rec = eng.run_window(max_arrivals=total - processed, evaluate=False)
-        processed += rec.n_processed
+
+    def step(self) -> None:
+        if self.pre_step is not None:
+            self.pre_step(self)
+        state, eng = self.state, self.eng
+        rec = eng.run_window(
+            max_arrivals=self.plan.total_arrivals - self.processed,
+            evaluate=False)
+        self.processed += rec.n_processed
         if state.accountant is not None:
             state.accountant.step(rec.n_processed)
         state.params = eng.params
         state.history.append(RoundRecord(
-            rec.t, rec.version, float(acc_fn(state.params, *test_dev)),
+            rec.t, rec.version,
+            float(self.acc_fn(state.params, *self.test_dev)),
             rec.comm_bytes, rec.comp_time, rec.comm_time, rec.n_rejected,
-            bytes_source=src))
+            bytes_source=self.src))
+        self.emitted += 1
+
+
+def _fleet_handback(state, eng, n) -> None:
+    """Hand node-local state back so follow-on runs stay faithful."""
     state.key = jax.device_get(eng.state.chain_key)
     state.residuals = fleet.unstack_tree(eng.export_residuals(), n)
     if eng.net is not None:
         state.net = eng.net.summary()
+
+
+def _export_net(net, arrays, meta) -> None:
+    """Fold the `NetSim` counter/trace state into a stepper snapshot."""
+    if net is not None:
+        counters, columns = net.export_sim_state()
+        arrays["net_counters"] = counters
+        meta["net_trace"] = columns
+
+
+def _restore_net(net, arrays, meta) -> None:
+    counters = arrays.pop("net_counters", None)
+    if net is not None and counters is not None:
+        net.restore_sim_state(counters, meta.get("net_trace"))
 
 
 # ---------------------------------------------------------------------------
@@ -360,7 +475,12 @@ def _local_train_impl(loss_fn, steps, lr, bs, params, x, y, key):
 
 class _SequentialRunner:
     """The per-node upload pipeline + both reference loops, operating on a
-    (plan, population, state) triple instead of trainer attributes."""
+    (plan, population, state) triple instead of trainer attributes.
+
+    Stepper protocol: `step()` emits one `RoundRecord` (a barrier round,
+    or n_nodes arrivals of the event loop); the loop state (clock /
+    arrival heap / dispatch cache) lives on the instance so `repro.sim`
+    can snapshot and restore it between records."""
 
     def __init__(self, plan: ExperimentPlan, pop: Population,
                  state: RunState):
@@ -379,6 +499,24 @@ class _SequentialRunner:
         self._local_train = _jitted_local_train(
             pop.loss_fn, spec.train.local_steps, spec.train.lr,
             spec.train.batch_size)
+        # -- stepper loop state -------------------------------------------
+        n = pop.n_nodes
+        self.emitted = 0
+        self.pre_step = None
+        self.net = None             # no repro.net on the reference loops
+        if plan.mode == "sync":
+            self.clock = 0.0
+        else:
+            self.version = 0
+            # (arrival_time, node, dispatched_version, seq) heap
+            self.events = []
+            for node in range(n):
+                heapq.heappush(self.events,
+                               (self.node_time[node], node, 0, node))
+            self.dispatched_params = {k: state.params for k in range(n)}
+            self.acc_window: List[float] = []
+            self.seq = n
+            self.processed = 0
 
     # -- per-node upload pipeline ------------------------------------------
     def node_update(self, node: int, start_params):
@@ -410,103 +548,172 @@ class _SequentialRunner:
     def global_accuracy(self) -> float:
         return float(self.acc_fn(self.state.params, *self.test_data))
 
-    # -- synchronous barrier loop ------------------------------------------
-    def run_sync(self) -> None:
-        plan, spec, state = self.plan, self.spec, self.state
-        n = self.pop.n_nodes
-        alpha = spec.schedule.alpha
-        clock = 0.0
-        for r in range(spec.rounds):
-            uploads, accs, nbytes = [], [], 0.0
-            for node in range(n):
-                w, b, a = self.node_update(node, state.params)
-                uploads.append(w)
-                accs.append(a)
-                nbytes += b
-            accs = jnp.asarray(accs)
-            if spec.defense.detect:
-                mask, _ = detection.detect(accs, spec.defense.detect_s)
-            else:
-                mask = jnp.ones(n, bool)
-            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *uploads)
-            omega_new = detection.masked_mean(stacked, mask)
-            state.params = async_update.mix(state.params, omega_new, alpha)
-            comp = float(np.max(self.node_time))         # barrier: slowest
-            comm = float(np.max((nbytes / n) / self.node_bw))  # parallel up
-            clock += comp + comm
-            state.history.append(RoundRecord(
-                clock, r, self.global_accuracy(), nbytes, comp, comm,
-                int(n - mask.sum())))
+    # -- stepper protocol ---------------------------------------------------
+    @property
+    def done(self) -> bool:
+        if self.plan.mode == "sync":
+            return self.emitted >= self.spec.rounds
+        return self.processed >= self.plan.total_arrivals
 
-    # -- asynchronous per-arrival event loop --------------------------------
-    def run_async(self) -> None:
+    def virtual_time(self) -> float:
+        if self.plan.mode == "sync":
+            return float(self.clock)
+        return float(self.events[0][0])
+
+    def step(self) -> None:
+        if self.pre_step is not None:
+            self.pre_step(self)
+        if self.plan.mode == "sync":
+            self._step_sync()
+        else:
+            self._step_async()
+
+    def finalize(self) -> None:
+        pass        # params/key/residuals already live on the RunState
+
+    # -- synchronous barrier loop (one round per step) ----------------------
+    def _step_sync(self) -> None:
+        spec, state = self.spec, self.state
+        n = self.pop.n_nodes
+        alpha = spec.schedule.alpha
+        uploads, accs, nbytes = [], [], 0.0
+        for node in range(n):
+            w, b, a = self.node_update(node, state.params)
+            uploads.append(w)
+            accs.append(a)
+            nbytes += b
+        accs = jnp.asarray(accs)
+        if spec.defense.detect:
+            mask, _ = detection.detect(accs, spec.defense.detect_s)
+        else:
+            mask = jnp.ones(n, bool)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *uploads)
+        omega_new = detection.masked_mean(stacked, mask)
+        state.params = async_update.mix(state.params, omega_new, alpha)
+        comp = float(np.max(self.node_time))         # barrier: slowest
+        comm = float(np.max((nbytes / n) / self.node_bw))  # parallel up
+        self.clock += comp + comm
+        state.history.append(RoundRecord(
+            self.clock, self.emitted, self.global_accuracy(), nbytes, comp,
+            comm, int(n - mask.sum())))
+        self.emitted += 1
+
+    # -- asynchronous per-arrival event loop (n_nodes arrivals per step) ----
+    def _step_async(self) -> None:
         plan, spec, state = self.plan, self.spec, self.state
         n = self.pop.n_nodes
         alpha = spec.schedule.alpha
-        version = 0
-        # (arrival_time, node, dispatched_version, seq) heap
-        events = []
-        for node in range(n):
-            heapq.heappush(events, (self.node_time[node], node, 0, node))
-        dispatched_params = {k: state.params for k in range(n)}
-        acc_window: List[float] = []
-        seq = n
-        processed = 0
         # per-record accumulators: a RoundRecord spans n_nodes arrivals, so
         # traffic/time must be summed over the span, not the last arrival
+        # (steps align with record boundaries, where the spans are zero)
         span_bytes = span_comp = span_comm = 0.0
         span_rejected = 0
-        while processed < plan.total_arrivals:
-            t, node, v_disp, _ = heapq.heappop(events)
-            w, b, a = self.node_update(node, dispatched_params[node])
+        target = min(self.processed + n, plan.total_arrivals)
+        t_arrive = 0.0
+        while self.processed < target:
+            t, node, v_disp, _ = heapq.heappop(self.events)
+            w, b, a = self.node_update(node, self.dispatched_params[node])
             comm = float(b / self.node_bw[node])
             t_arrive = t + comm
-            acc_window.append(a)
-            acc_window = acc_window[-plan.detect_window:]
+            self.acc_window.append(a)
+            self.acc_window = self.acc_window[-plan.detect_window:]
             rejected = 0
             if spec.defense.detect and \
-                    len(acc_window) >= spec.defense.detect_warmup:
-                accs = jnp.asarray(acc_window)
+                    len(self.acc_window) >= spec.defense.detect_warmup:
+                accs = jnp.asarray(self.acc_window)
                 thr = detection.detection_threshold(accs,
                                                     spec.defense.detect_s)
                 if a <= float(thr):
                     rejected = 1
             if not rejected:
-                staleness = version - v_disp
+                staleness = self.version - v_disp
                 if spec.schedule.staleness_adaptive:
                     state.params = async_update.mix_stale(
                         state.params, w, alpha, staleness)
                 else:
                     state.params = async_update.mix(state.params, w, alpha)
-                version += 1
-            processed += 1
+                self.version += 1
+            self.processed += 1
             span_bytes += b
             span_comp += float(self.node_time[node])
             span_comm += comm
             span_rejected += rejected
             # redispatch node with the fresh global model
-            dispatched_params[node] = state.params
-            heapq.heappush(events,
-                           (t_arrive + self.node_time[node], node, version,
-                            seq))
-            seq += 1
-            if processed % n == 0:
-                state.history.append(RoundRecord(
-                    t_arrive, version, self.global_accuracy(), span_bytes,
-                    span_comp, span_comm, span_rejected))
-                span_bytes = span_comp = span_comm = 0.0
-                span_rejected = 0
+            self.dispatched_params[node] = state.params
+            heapq.heappush(self.events,
+                           (t_arrive + self.node_time[node], node,
+                            self.version, self.seq))
+            self.seq += 1
+        state.history.append(RoundRecord(
+            t_arrive, self.version, self.global_accuracy(), span_bytes,
+            span_comp, span_comm, span_rejected))
+        self.emitted += 1
+
+    # -- checkpoint/resume (repro.sim) --------------------------------------
+    def export_state(self):
+        state, n = self.state, self.pop.n_nodes
+        arrays = {
+            "params": jax.tree.map(np.asarray,
+                                   jax.device_get(state.params)),
+            "key": np.asarray(jax.device_get(state.key)),
+            "residuals": jax.tree.map(
+                np.asarray,
+                jax.device_get(fleet.stack_trees(state.residuals))),
+        }
+        meta = {"emitted": self.emitted}
+        if self.plan.mode == "sync":
+            meta["clock"] = float(self.clock)
+        else:
+            # the heap is a multiset with a total order (seq is unique), so
+            # any serialization order restores the identical pop sequence
+            ev = sorted(self.events)
+            arrays["heap_t"] = np.asarray([e[0] for e in ev], np.float64)
+            arrays["heap_node"] = np.asarray([e[1] for e in ev], np.int64)
+            arrays["heap_vdisp"] = np.asarray([e[2] for e in ev], np.int64)
+            arrays["heap_seq"] = np.asarray([e[3] for e in ev], np.int64)
+            arrays["dispatched"] = jax.tree.map(
+                np.asarray,
+                jax.device_get(fleet.stack_trees(
+                    [self.dispatched_params[i] for i in range(n)])))
+            meta.update(processed=self.processed, version=self.version,
+                        seq=self.seq,
+                        acc_window=[float(a) for a in self.acc_window])
+        return arrays, meta
+
+    def restore_state(self, arrays, meta) -> None:
+        state, n = self.state, self.pop.n_nodes
+        state.params = jax.tree.map(jnp.asarray, arrays["params"])
+        state.key = jnp.asarray(arrays["key"])
+        state.residuals = fleet.unstack_tree(
+            jax.tree.map(jnp.asarray, arrays["residuals"]), n)
+        self.emitted = int(meta["emitted"])
+        if self.plan.mode == "sync":
+            self.clock = float(meta["clock"])
+        else:
+            events = [(float(t), int(nd), int(v), int(s))
+                      for t, nd, v, s in zip(arrays["heap_t"],
+                                             arrays["heap_node"],
+                                             arrays["heap_vdisp"],
+                                             arrays["heap_seq"])]
+            heapq.heapify(events)
+            self.events = events
+            disp = jax.tree.map(jnp.asarray, arrays["dispatched"])
+            self.dispatched_params = {
+                i: jax.tree.map(lambda x, i=i: x[i], disp) for i in range(n)}
+            self.processed = int(meta["processed"])
+            self.version = int(meta["version"])
+            self.seq = int(meta["seq"])
+            self.acc_window = [float(a) for a in meta["acc_window"]]
 
 
 # ---------------------------------------------------------------------------
 # top-level execution
 # ---------------------------------------------------------------------------
 
-def execute(plan: ExperimentPlan, population: Population,
-            state: RunState) -> List[RoundRecord]:
-    """Run ``plan`` over ``population``, mutating ``state`` (records are
-    appended to ``state.history``; params/key/residuals/accountant advance
-    in place), so follow-on `execute` calls continue the run."""
+def make_stepper(plan: ExperimentPlan, population: Population,
+                 state: RunState, mesh: Optional["fleet.FleetMesh"] = None):
+    """Build the record stepper a plan selects (engines constructed here
+    pick up any installed obs tracer — call inside the session scope)."""
     if population.n_nodes != plan.spec.fleet.n_nodes:
         raise SpecError(
             f"population has {population.n_nodes} nodes but the plan was "
@@ -514,24 +721,24 @@ def execute(plan: ExperimentPlan, population: Population,
             f"arrival budget and record cadence derive from the spec, so "
             f"a mismatched population would run the wrong experiment")
     if plan.engine == "fleet":
-        eng = make_engine(plan, population)
+        eng = make_engine(plan, population, mesh=mesh)
         if plan.mode == "sync":
-            _run_sync_fleet(plan, population, state, eng)
-        else:
-            acc_fn = eng.acc_fn
-            test_dev = eng.test_data
-            if plan.mixing == "buffered":
-                _run_buffered_fleet(plan, population, state, eng, acc_fn,
-                                    test_dev)
-            else:
-                _run_async_fleet(plan, population, state, eng, acc_fn,
-                                 test_dev)
-    else:
-        runner = _SequentialRunner(plan, population, state)
-        if plan.mode == "sync":
-            runner.run_sync()
-        else:
-            runner.run_async()
+            return _SyncFleetStepper(plan, population, state, eng)
+        if plan.mixing == "buffered":
+            return _BufferedFleetStepper(plan, population, state, eng)
+        return _AsyncFleetStepper(plan, population, state, eng)
+    return _SequentialRunner(plan, population, state)
+
+
+def execute(plan: ExperimentPlan, population: Population,
+            state: RunState) -> List[RoundRecord]:
+    """Run ``plan`` over ``population``, mutating ``state`` (records are
+    appended to ``state.history``; params/key/residuals/accountant advance
+    in place), so follow-on `execute` calls continue the run."""
+    stepper = make_stepper(plan, population, state)
+    while not stepper.done:
+        stepper.step()
+    stepper.finalize()
     return state.history
 
 
@@ -543,7 +750,14 @@ def run(plan: ExperimentPlan, population: Optional[Population] = None,
     declarative synthetic fleet); pass one explicitly to run the plan over
     real params/data.  ``sampler`` overrides the population's declared
     participation model.
+
+    Plans carrying a `SimSpec` route through the always-on simulation
+    service (`repro.sim.SimService`) — same report, plus checkpoint/
+    traffic-trace/event-timeline behaviour along the way.
     """
+    if plan.spec.sim is not None:
+        from ..sim import SimService     # lazy: api must not import sim
+        return SimService(plan, population=population, sampler=sampler).run()
     pop = population if population is not None else materialize(plan.spec)
     if sampler is not None:
         pop = dataclasses.replace(pop, sampler=sampler)

@@ -18,7 +18,10 @@ defense (cloud-side detection) — plus a population and a placement.  An
                        simulation (default: the analytic comm model);
   * `Topology`       — sequential reference loop | single-device fleet
                        engines | node-axis `FleetMesh` sharding;
-  * `TrainSpec`      — node-local SGD hyperparameters.
+  * `TrainSpec`      — node-local SGD hyperparameters;
+  * `SimSpec`        — optional always-on-service axis: time-varying
+                       `TrafficTrace`s, a `SimEvent` mutation timeline and
+                       a checkpoint cadence (executed by `repro.sim`).
 
 `plan.compile_plan` validates cross-field constraints once and lowers a
 spec to an `ExperimentPlan`; `run.run` executes a plan.  Specs are plain
@@ -38,11 +41,13 @@ from .window import AutoWindow, WindowPolicy, window_policy_from_dict
 # v2: NetworkSpec axis + RoundRecord.bytes_source.  v3: ObsSpec axis.
 # v4: the adversary zoo (AttackMix.kind + per-kind knobs, seeded-random
 # malicious placement, FleetSpec.n_classes) and the trust-scored defense
-# (DefenseSpec.kind + trust knobs).  Older payloads are still accepted on
-# read (attack defaults to the paper's label flip, defense to the plain
-# percentile test); everything written is stamped v4.
-SCHEMA_VERSION = 4
-ACCEPTED_SCHEMA_VERSIONS = (1, 2, 3, 4)
+# (DefenseSpec.kind + trust knobs).  v5: the simulation-service axis
+# (ExperimentSpec.sim: traffic traces + event timeline + checkpoint
+# cadence) and RunReport resume metadata.  Older payloads are still
+# accepted on read (sim defaults to None — plain batch runs); everything
+# written is stamped v5.
+SCHEMA_VERSION = 5
+ACCEPTED_SCHEMA_VERSIONS = (1, 2, 3, 4, 5)
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +281,104 @@ class TrainSpec:
 
 
 # ---------------------------------------------------------------------------
+# the simulation-service axis (repro.sim)
+# ---------------------------------------------------------------------------
+
+TRACE_KINDS = ("diurnal", "flash_crowd", "outage")
+SIM_EVENT_KINDS = ("attack", "defense", "network", "nodes")
+
+
+@dataclass(frozen=True)
+class TrafficTrace:
+    """One time-varying traffic component, a pure function of virtual time.
+
+    ``kind="diurnal"``     — fleet-wide sinusoidal bandwidth modulation:
+      every node's effective uplink rate is scaled by
+      ``1 - amplitude * (0.5 + 0.5 * sin(2π (t - phase_s) / period_s))``
+      (peak load = deepest throttle);
+    ``kind="flash_crowd"`` — during ``[t_start, t_start + duration_s)`` a
+      contiguous regional block of ``node_frac`` of the fleet (starting at
+      node ``floor(region_start * n)``, wrapping) has its uplink scaled by
+      ``1 - amplitude`` (a crowd saturating the regional backhaul);
+    ``kind="outage"``      — the same regional block is unreachable for
+      the epoch: its nodes drop out of sync cohorts and their async
+      arrivals are discarded/redispatched by the churn sampler.
+
+    Traces compose multiplicatively (bandwidth) / conjunctively
+    (availability), and being pure in ``t`` they are resume-safe by
+    construction.
+    """
+    kind: str = "diurnal"
+    period_s: float = 86400.0
+    amplitude: float = 0.5
+    phase_s: float = 0.0
+    t_start: float = 0.0
+    duration_s: float = 0.0
+    node_frac: float = 1.0
+    region_start: float = 0.0
+
+
+@dataclass(frozen=True)
+class SimEvent:
+    """A scheduled mid-run mutation, applied between rounds/windows.
+
+    ``at_round`` is the record index (sync round or async window-group)
+    *before* which the event fires.  ``kind`` picks the spec slice:
+
+      * ``"attack"``  — replace `AttackMix` fields (e.g. attack onset:
+        ``{"malicious_frac": 0.5, "kind": "label_flip"}``; offset:
+        ``{"malicious_frac": 0.0}``);
+      * ``"defense"`` — replace `DefenseSpec` fields (defense toggles);
+      * ``"network"`` — replace `NetworkSpec` fields (link-regime shifts);
+      * ``"nodes"``   — membership churn: ``{"leave": [ids], "join":
+        [ids]}`` (joins re-admit previously-left nodes).
+
+    Payloads for the spec-slice kinds are re-validated by `compile_plan`
+    at submission time: every cumulative mutation along the timeline must
+    itself compile.
+    """
+    at_round: int = 1
+    kind: str = "attack"
+    payload: Dict = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class SimSpec:
+    """The always-on simulation service axis.
+
+    Attaching a `SimSpec` routes `api.run` through `repro.sim.SimService`:
+    the run becomes steppable, checkpoint/resumable (bit-exact), traffic-
+    modulated (``traces``) and mutable mid-run (``events``).  The empty
+    default mutates nothing — the service then reproduces the batch run
+    exactly.
+    """
+    traces: Tuple[TrafficTrace, ...] = ()
+    events: Tuple[SimEvent, ...] = ()
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0       # checkpoint every k records; 0 = manual
+
+
+def apply_sim_event(spec: "ExperimentSpec", event: SimEvent) -> "ExperimentSpec":
+    """The spec produced by one timeline event (pure; ``nodes`` events are
+    membership-level and leave the spec untouched)."""
+    payload = dict(event.payload)
+    if event.kind == "attack":
+        attack = dataclasses.replace(spec.fleet.attack, **payload)
+        return dataclasses.replace(
+            spec, fleet=dataclasses.replace(spec.fleet, attack=attack))
+    if event.kind == "defense":
+        return dataclasses.replace(
+            spec, defense=dataclasses.replace(spec.defense, **payload))
+    if event.kind == "network":
+        return dataclasses.replace(
+            spec, network=dataclasses.replace(spec.network, **payload))
+    if event.kind == "nodes":
+        return spec
+    raise ValueError(f"unknown SimEvent kind {event.kind!r} "
+                     f"(expected one of {SIM_EVENT_KINDS})")
+
+
+# ---------------------------------------------------------------------------
 # the whole experiment
 # ---------------------------------------------------------------------------
 
@@ -290,6 +393,7 @@ class ExperimentSpec:
     obs: ObsSpec = field(default_factory=ObsSpec)
     topology: Topology = field(default_factory=Topology)
     train: TrainSpec = field(default_factory=TrainSpec)
+    sim: Optional[SimSpec] = None   # None => plain batch run
     rounds: int = 10        # sync rounds; async runs rounds*n_nodes arrivals
     seed: int = 0
 
@@ -325,6 +429,8 @@ class ExperimentSpec:
                 v = _fleet_from_dict(v)
             elif f.name == "schedule":
                 v = _schedule_from_dict(v)
+            elif f.name == "sim":
+                v = _sim_from_dict(v)
             elif f.name in _SECTION_TYPES:
                 v = _SECTION_TYPES[f.name](**v)
             kw[f.name] = v
@@ -357,7 +463,8 @@ def _section_to_dict(v) -> Dict:
         elif dataclasses.is_dataclass(x):
             x = _section_to_dict(x)
         elif isinstance(x, tuple):
-            x = list(x)
+            x = [_section_to_dict(e) if dataclasses.is_dataclass(e) else e
+                 for e in x]
         out[f.name] = x
     return out
 
@@ -378,3 +485,16 @@ def _schedule_from_dict(d: Dict) -> SchedulePolicy:
     if "window" in d and not isinstance(d["window"], WindowPolicy):
         d["window"] = window_policy_from_dict(d["window"])
     return SchedulePolicy(**d)
+
+
+def _sim_from_dict(d) -> Optional[SimSpec]:
+    if d is None or isinstance(d, SimSpec):
+        return d
+    d = dict(d)
+    d["traces"] = tuple(
+        t if isinstance(t, TrafficTrace) else TrafficTrace(**t)
+        for t in d.get("traces", ()))
+    d["events"] = tuple(
+        e if isinstance(e, SimEvent) else SimEvent(**e)
+        for e in d.get("events", ()))
+    return SimSpec(**d)

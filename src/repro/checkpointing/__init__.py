@@ -1,1 +1,6 @@
-from .checkpoint import load_checkpoint, save_checkpoint   # noqa: F401
+from .checkpoint import (  # noqa: F401
+    CheckpointError,
+    load_checkpoint,
+    read_manifest,
+    save_checkpoint,
+)

@@ -9,6 +9,16 @@ import jax
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint does not match the structure it is being restored into."""
+
+
+def _base(path: str) -> str:
+    # suffix-strip only: a ".npz" occurring mid-path (e.g. "runs.npz.d/ck")
+    # must survive untouched
+    return path[:-len(".npz")] if path.endswith(".npz") else path
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -26,16 +36,36 @@ def save_checkpoint(path: str, tree, step: int = 0, extra: dict | None = None):
         dtypes[k] = str(v.dtype)
         # numpy's npz cannot serialise bfloat16 — store the raw bits
         stored[k] = v.view(np.uint16) if v.dtype.name == "bfloat16" else v
-    np.savez(path if path.endswith(".npz") else path + ".npz", **stored)
+    base = _base(path)
+    np.savez(base + ".npz", **stored)
     manifest = {"step": step, "keys": sorted(flat), "dtypes": dtypes,
                 "extra": extra or {}}
-    with open(path.replace(".npz", "") + ".json", "w") as f:
+    with open(base + ".json", "w") as f:
         json.dump(manifest, f)
 
 
+def read_manifest(path: str) -> Dict[str, Any]:
+    """The JSON manifest saved next to the .npz (step / keys / dtypes /
+    extra) — readable without materializing any arrays, which is how
+    `repro.sim` recovers the spec a checkpoint was saved under before it
+    can build the template tree `load_checkpoint` needs."""
+    base = _base(path)
+    try:
+        with open(base + ".json") as f:
+            return json.load(f)
+    except FileNotFoundError:
+        raise CheckpointError(
+            f"no checkpoint manifest at {base + '.json'!r}")
+
+
 def load_checkpoint(path: str, like_tree) -> Tuple[Any, int]:
-    """Restores into the structure of ``like_tree``; returns (tree, step)."""
-    base = path.replace(".npz", "")
+    """Restores into the structure of ``like_tree``; returns (tree, step).
+
+    Leaves come back as the same kind of array as the template: numpy
+    leaves restore through numpy (so float64/int64 survive even with
+    jax x64 disabled), jax leaves restore through ``jax.numpy``.
+    """
+    base = _base(path)
     data = np.load(base + ".npz")
     with open(base + ".json") as f:
         manifest = json.load(f)
@@ -45,9 +75,21 @@ def load_checkpoint(path: str, like_tree) -> Tuple[Any, int]:
     leaves = []
     for pathk, leaf in flat_like[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pathk)
+        if key not in data:
+            raise CheckpointError(
+                f"checkpoint {base!r} has no entry for leaf {key!r} "
+                f"(stored keys: {manifest.get('keys', [])})")
         arr = data[key]
         if dtypes.get(key) == "bfloat16":
             arr = arr.view(jax.numpy.bfloat16.dtype)
-        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
-        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        like = np.asarray(leaf)
+        if arr.shape != like.shape:
+            raise CheckpointError(
+                f"checkpoint leaf {key!r} has shape {arr.shape} but the "
+                f"template expects {like.shape} — the checkpoint was saved "
+                "from a differently-shaped run")
+        if isinstance(leaf, jax.Array):
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        else:
+            leaves.append(np.asarray(arr, dtype=like.dtype))
     return jax.tree_util.tree_unflatten(flat_like[1], leaves), manifest["step"]

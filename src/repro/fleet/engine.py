@@ -251,6 +251,10 @@ class FleetEngine(MeshStateIO):
             trust=cfg.trust_on,
             throttle=attack is not None and attack.needs_throttle)
         self.history: List[FleetRoundRecord] = []
+        # barrier-clock origin: run_round continues from the last record's
+        # t, or from here when the history is empty (repro.sim sets this on
+        # checkpoint restore so the resumed clock doesn't restart at zero)
+        self._t0 = 0.0
         if mesh is not None:
             self.data = mesh.put_nodes(self.data.pad_to(self.n_pad))
             self.state = dataclasses.replace(
@@ -517,7 +521,7 @@ class FleetEngine(MeshStateIO):
                 enc = self.net.commit(draw, nnz_sel)
             comm = float(draw.transfer_s.max()) if sel_nodes.size else 0.0
             comm_bytes = float(enc.sum())
-        t_prev = self.history[-1].t if self.history else 0.0
+        t_prev = self.history[-1].t if self.history else self._t0
         with timed_stage(tr, "round.evaluate", round=r) as st:
             accuracy = self.global_accuracy()
         rec = FleetRoundRecord(

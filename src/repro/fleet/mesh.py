@@ -210,3 +210,102 @@ class MeshStateIO:
         up = np.zeros(self.n_pad, bool)
         up[np.asarray(idx)[np.asarray(valid)]] = True
         return up
+
+    # -- full-state snapshot (repro.sim checkpoint/resume) ------------------
+    # per-node FleetState fields (leading node axis, trimmed to real nodes
+    # on export) and replicated fields; None fields are simply absent from
+    # the snapshot, so sync/async engines and defense on/off variants all
+    # share this one code path
+    _SIM_NODE_FIELDS = ("next_arrival", "dispatched_version", "trust",
+                        "throttle")
+    _SIM_REP_FIELDS = ("version", "acc_ring", "acc_count")
+
+    def export_sim_state(self) -> dict:
+        """Every device-side array a bit-exact resume needs, as a flat
+        host-side dict of numpy arrays/pytrees (padding rows dropped)."""
+        st = self.state
+        n = self.n_nodes
+
+        def trim(tree):
+            return jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x))[:n], tree)
+
+        out = {
+            "params": jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                   self.params),
+            "chain_key": _key_data(st.chain_key),
+            "residuals": trim(st.residuals),
+        }
+        if st.dispatched is not None:
+            out["dispatched"] = trim(st.dispatched)
+        for name in self._SIM_NODE_FIELDS:
+            v = getattr(st, name)
+            if v is not None:
+                out[name] = np.asarray(jax.device_get(v))[:n]
+        for name in self._SIM_REP_FIELDS:
+            v = getattr(st, name)
+            if v is not None:
+                out[name] = np.asarray(jax.device_get(v))
+        return out
+
+    def load_sim_state(self, tree: dict) -> None:
+        """Restore an `export_sim_state` snapshot into this engine.
+
+        The engine must be freshly constructed for the same spec shape
+        (same node count / defense fields): real-node rows are overwritten,
+        padding rows keep their init values (+inf arrival clocks, dummy
+        data) — they never participate, so the restored run is bit-exact.
+        Fields present in the snapshot but absent on this engine (or vice
+        versa, e.g. trust rings after a defense-onset event) keep their
+        fresh init — exactly the semantics a mid-run spec mutation wants.
+        """
+        import dataclasses
+        st = self.state
+        n = self.n_nodes
+        if self.mesh is not None:
+            place_nodes = self.mesh.put_nodes
+            place_rep = self.mesh.put_replicated
+        else:
+            def place_nodes(t):
+                return jax.tree.map(jnp.asarray, t)
+            place_rep = place_nodes
+
+        def rows(cur, new):
+            host = np.array(jax.device_get(cur))    # padding rows survive
+            host[:n] = np.asarray(new)
+            return host
+
+        updates = {
+            "residuals": place_nodes(
+                jax.tree.map(rows, st.residuals, tree["residuals"])),
+            "chain_key": place_rep(_key_like(st.chain_key,
+                                             tree["chain_key"])),
+        }
+        if st.dispatched is not None and "dispatched" in tree:
+            updates["dispatched"] = place_nodes(
+                jax.tree.map(rows, st.dispatched, tree["dispatched"]))
+        for name in self._SIM_NODE_FIELDS:
+            cur = getattr(st, name)
+            if cur is not None and name in tree:
+                updates[name] = place_nodes(rows(cur, tree[name]))
+        for name in self._SIM_REP_FIELDS:
+            cur = getattr(st, name)
+            if cur is not None and name in tree:
+                updates[name] = place_rep(np.asarray(tree[name]))
+        self.state = dataclasses.replace(st, **updates)
+        self.params = place_rep(jax.tree.map(jnp.asarray, tree["params"]))
+
+
+def _key_data(key):
+    """A PRNG chain key as raw host bits (typed keys unwrapped)."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return np.asarray(jax.device_get(key))
+
+
+def _key_like(cur, data):
+    """Raw key bits back to the kind of key the engine carries."""
+    data = jnp.asarray(np.asarray(data))
+    if jnp.issubdtype(cur.dtype, jax.dtypes.prng_key):
+        return jax.random.wrap_key_data(data, impl=jax.random.key_impl(cur))
+    return data

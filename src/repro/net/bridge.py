@@ -113,6 +113,10 @@ class NetSim:
         self._counters = np.zeros(self.eff_bandwidth_bps.shape[0], np.int64)
         self.trace = NetTrace(codec=self.codec.describe())
         self._tracer = tracer
+        # optional per-node rate multiplier in (0, 1], set per round/window
+        # by repro.sim traffic traces (diurnal load, flash crowds); None is
+        # the stationary default and bit-identical to the pre-sim behaviour
+        self.rate_scale: Optional[np.ndarray] = None
 
     @property
     def tracer(self):
@@ -137,8 +141,14 @@ class NetSim:
         seqs = self._counters[nodes].copy()
         np.add.at(self._counters, nodes, 1)
         link = self.link
+        eff_bw = self.eff_bandwidth_bps[nodes]
+        if self.rate_scale is not None:
+            # traffic-trace throttle (a pure function of virtual time, so
+            # checkpoint restores recompute the identical scale)
+            eff_bw = eff_bw * np.asarray(self.rate_scale,
+                                         np.float64)[nodes]
         if link.loss_prob == 0.0 and link.jitter_s == 0.0:
-            bw = self.eff_bandwidth_bps[nodes]
+            bw = eff_bw
             if link.shared_uplink_bps > 0.0:
                 bw = np.minimum(bw, link.shared_uplink_bps / max(1, conc))
             transfer = (link.latency_s
@@ -147,7 +157,7 @@ class NetSim:
                               overhead_bytes=np.zeros(u),
                               retransmits=np.zeros(u, np.int64))
         transfer, overhead, retrans = draw_transfer_batch(
-            link, self.nominal_payload_bytes, self.eff_bandwidth_bps[nodes],
+            link, self.nominal_payload_bytes, eff_bw,
             self.seed, nodes, seqs, concurrency=conc)
         return UploadDraw(nodes=nodes, seqs=seqs, transfer_s=transfer,
                           overhead_bytes=overhead, retransmits=retrans)
@@ -191,6 +201,32 @@ class NetSim:
 
     def summary(self) -> Dict:
         return self.trace.summary()
+
+    # -- checkpoint/resume (repro.sim) --------------------------------------
+    _TRACE_COLUMNS = ("nodes", "seqs", "nnz", "encoded_bytes", "wire_bytes",
+                      "transfer_s", "retransmits")
+
+    def export_sim_state(self):
+        """(counters array, trace columns): everything a bit-exact resume
+        needs beyond the constructor arguments — the per-node upload
+        counters drive the (seed, node, seq) PRNG stream, and the trace
+        columns rebuild the byte accounting (JSON floats round-trip
+        exactly, so restored summaries match to the bit)."""
+        columns = {name: list(getattr(self.trace, name))
+                   for name in self._TRACE_COLUMNS}
+        return self._counters.copy(), columns
+
+    def restore_sim_state(self, counters, columns=None) -> None:
+        counters = np.asarray(counters, np.int64)
+        if counters.shape != self._counters.shape:
+            raise ValueError(
+                f"NetSim.restore_sim_state: counter shape {counters.shape} "
+                f"!= fleet shape {self._counters.shape}")
+        self._counters[:] = counters
+        if columns is not None:
+            for name in self._TRACE_COLUMNS:
+                col = getattr(self.trace, name)
+                col[:] = columns.get(name, [])
 
 
 def netsim_from_network(network, bandwidth_bps: np.ndarray, n_params: int,

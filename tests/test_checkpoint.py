@@ -1,0 +1,131 @@
+"""`repro.checkpointing` acceptance: bit-exact pytree round trips (incl.
+bfloat16 bit views, int rings, float64-with-x64-disabled), descriptive
+`CheckpointError`s for structure mismatches, and suffix-only ``.npz``
+path handling."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _optional import given, settings, st
+
+from repro.checkpointing import (CheckpointError, load_checkpoint,
+                                 read_manifest, save_checkpoint)
+
+
+def _zeros_like_tree(tree):
+    """Template tree: same structure/shapes/dtypes/array-kinds, no values."""
+    return jax.tree.map(
+        lambda x: (jnp.zeros_like(x) if isinstance(x, jax.Array)
+                   else np.zeros_like(np.asarray(x))), tree)
+
+
+def _assert_bitwise_equal(loaded, orig):
+    for got, want in zip(jax.tree.leaves(loaded), jax.tree.leaves(orig)):
+        want_np = np.asarray(want)
+        got_np = np.asarray(got)
+        assert got_np.dtype == want_np.dtype
+        if want_np.dtype.name == "bfloat16":
+            np.testing.assert_array_equal(got_np.view(np.uint16),
+                                          want_np.view(np.uint16))
+        else:
+            np.testing.assert_array_equal(got_np, want_np)
+
+
+# ---------------------------------------------------------------------------
+# property: nested pytrees round-trip bit-exactly
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 7), st.integers(1, 5))
+def test_nested_pytree_round_trip_is_bitwise(seed, n, m):
+    rng = np.random.default_rng(seed)
+    tree = {
+        "params": {
+            "w": jnp.asarray(rng.normal(size=(n, m)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(m,)).astype(np.float32),
+                             dtype=jnp.bfloat16),
+        },
+        "rings": [jnp.asarray(rng.integers(-5, 5, size=(n,)), jnp.int32),
+                  np.asarray(rng.integers(0, 9, size=(m,)), np.int64)],
+        # float64 loop clocks must survive with jax x64 disabled
+        "clock": np.asarray(rng.normal(), np.float64),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck")
+        save_checkpoint(path, tree, step=int(seed % 97),
+                        extra={"tag": "prop"})
+        loaded, step = load_checkpoint(path, _zeros_like_tree(tree))
+        assert step == int(seed % 97)
+        assert read_manifest(path)["extra"] == {"tag": "prop"}
+        _assert_bitwise_equal(loaded, tree)
+        # jax leaves come back as jax arrays, numpy leaves as numpy
+        assert isinstance(loaded["params"]["w"], jax.Array)
+        assert not isinstance(loaded["clock"], jax.Array)
+        assert np.asarray(loaded["clock"]).dtype == np.float64
+
+
+def test_float64_and_int64_survive_without_x64():
+    """The x64-disabled default truncates through jnp — numpy template
+    leaves must restore through numpy (heap clocks, net counters)."""
+    assert not jax.config.jax_enable_x64
+    tree = {"heap_t": np.asarray([1.5, np.pi, 1e-300], np.float64),
+            "counters": np.asarray([2**40, 7], np.int64)}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck")
+        save_checkpoint(path, tree)
+        loaded, _ = load_checkpoint(path, _zeros_like_tree(tree))
+        assert loaded["heap_t"].dtype == np.float64
+        assert loaded["counters"].dtype == np.int64
+        _assert_bitwise_equal(loaded, tree)
+
+
+# ---------------------------------------------------------------------------
+# structure mismatches raise descriptive CheckpointError (not bare asserts)
+# ---------------------------------------------------------------------------
+
+def test_missing_leaf_raises_checkpoint_error():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck")
+        save_checkpoint(path, {"a": np.ones(3)})
+        with pytest.raises(CheckpointError, match="no entry for leaf 'b'"):
+            load_checkpoint(path, {"a": np.zeros(3), "b": np.zeros(2)})
+
+
+def test_shape_mismatch_raises_checkpoint_error():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck")
+        save_checkpoint(path, {"a": np.ones((3, 2))})
+        with pytest.raises(CheckpointError, match=r"shape \(3, 2\)"):
+            load_checkpoint(path, {"a": np.zeros((4, 2))})
+
+
+def test_missing_manifest_raises_checkpoint_error():
+    with pytest.raises(CheckpointError, match="manifest"):
+        read_manifest("/nonexistent/ck")
+
+
+# ---------------------------------------------------------------------------
+# path handling: ".npz" stripped only as a suffix
+# ---------------------------------------------------------------------------
+
+def test_npz_suffix_strip_is_suffix_only():
+    tree = {"a": np.arange(4, dtype=np.int32)}
+    with tempfile.TemporaryDirectory() as d:
+        # a ".npz" mid-path must survive untouched
+        base = os.path.join(d, "runs.npz.d", "ck")
+        save_checkpoint(base, tree)
+        assert os.path.exists(base + ".npz")
+        assert os.path.exists(base + ".json")
+        loaded, _ = load_checkpoint(base, _zeros_like_tree(tree))
+        _assert_bitwise_equal(loaded, tree)
+        # an explicit ".npz" suffix addresses the same checkpoint
+        loaded2, _ = load_checkpoint(base + ".npz", _zeros_like_tree(tree))
+        _assert_bitwise_equal(loaded2, tree)
+        save_checkpoint(base + ".npz", tree, step=3)
+        assert not os.path.exists(base + ".npz.npz")
+        _, step = load_checkpoint(base, _zeros_like_tree(tree))
+        assert step == 3

@@ -1,0 +1,357 @@
+"""`repro.sim` acceptance: the always-on simulation service.
+
+* Kill-and-resume parity: a run checkpointed at round k and resumed
+  reproduces the uninterrupted trajectory *bit-exactly* — sequential
+  reference loops, single-device fleet engines (sync/async, with
+  repro.net + traces + events live), and the forced-8-device mesh
+  (subprocess).
+* Traffic traces: pure-in-virtual-time modulation math, and the
+  `DynamicSampler` availability indirection.
+* SimEvents: attack onset at round k flows through rematerialization into
+  detection/trust response; membership churn; compile-time validation of
+  the whole timeline.
+* Schema v5: RunReport resume metadata round trip, pre-v5 acceptance.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.fleet import UniformSampler
+from repro.sim import DynamicSampler, SimService, modulation, region_mask
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _recs(report):
+    return [(r.t, r.version, r.accuracy, r.comm_bytes, r.comp_time,
+             r.comm_time, r.n_rejected, r.bytes_source)
+            for r in report.records]
+
+
+def _spec(kind="sync", topology="sequential", **kw):
+    base = dict(
+        fleet=api.FleetSpec(n_nodes=4),
+        schedule=api.SchedulePolicy(kind=kind),
+        privacy=api.PrivacySpec(sigma=0.05),
+        compression=api.CompressionSpec(sparsify_ratio=0.5),
+        defense=api.DefenseSpec(detect=True),
+        topology=api.Topology(kind=topology),
+        train=api.TrainSpec(local_steps=2, batch_size=8, lr=0.1),
+        rounds=3, seed=0)
+    base.update(kw)
+    return api.ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume parity, all four local execution paths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology,kind", [
+    ("sequential", "sync"), ("sequential", "async"),
+    ("single", "sync"), ("single", "async")])
+def test_kill_and_resume_is_bit_exact(topology, kind):
+    spec = _spec(kind=kind, topology=topology)
+    base = api.run(api.compile_plan(spec))
+    svc = SimService(api.compile_plan(spec))
+    svc.run(max_records=1)
+    with tempfile.TemporaryDirectory() as d:
+        path = svc.checkpoint(os.path.join(d, "ck"))
+        resumed = SimService.resume(path)
+        rep = resumed.run()
+        assert _recs(rep) == _recs(base)
+        assert rep.resumed_from == path and rep.resume_round == 1
+        assert base.resumed_from is None and base.resume_round is None
+        assert rep.epsilon_spent == base.epsilon_spent
+
+
+def test_empty_simspec_service_matches_batch_run():
+    spec = _spec(kind="async", topology="single")
+    base = api.run(api.compile_plan(spec))
+    withsim = dataclasses.replace(spec, sim=api.SimSpec())
+    rep = api.run(api.compile_plan(withsim))   # auto-routes through sim
+    assert _recs(rep) == _recs(base)
+
+
+def test_auto_checkpoint_cadence_writes_files():
+    spec = _spec(kind="sync", topology="sequential")
+    with tempfile.TemporaryDirectory() as d:
+        svc = SimService(api.compile_plan(spec), checkpoint_dir=d,
+                         checkpoint_every=1)
+        svc.run()
+        names = sorted(os.listdir(d))
+        assert "ckpt_000001.npz" in names and "ckpt_000003.json" in names
+        resumed = SimService.resume(os.path.join(d, "ckpt_000002"))
+        rep = resumed.run()
+    assert len(rep.records) == spec.rounds
+    assert rep.resume_round == 2
+
+
+# ---------------------------------------------------------------------------
+# traces + events over the fleet engines (with repro.net live)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_spec():
+    sim = api.SimSpec(
+        traces=(api.TrafficTrace(kind="diurnal", period_s=50.0,
+                                 amplitude=0.4),),
+        events=(
+            api.SimEvent(at_round=1, kind="attack",
+                         payload={"malicious_frac": 0.5,
+                                  "kind": "label_flip"}),
+            api.SimEvent(at_round=3, kind="defense",
+                         payload={"detect": True}),
+        ))
+    return _spec(
+        kind="async", topology="single", rounds=5,
+        network=api.NetworkSpec(codec="sparse_coo", bandwidth_sigma=0.3,
+                                latency_s=0.01),
+        defense=api.DefenseSpec(detect=False), sim=sim)
+
+
+@pytest.fixture(scope="module")
+def traced_base(traced_spec):
+    return SimService(api.compile_plan(traced_spec)).run()
+
+
+def test_attack_onset_event_triggers_detection(traced_spec, traced_base):
+    """Attack at round 1 + defense toggle at round 3: the detector must
+    start rejecting only after the toggle, and the trajectory must differ
+    from the event-free run."""
+    rejected = [r.n_rejected for r in traced_base.records]
+    assert sum(rejected[:3]) == 0          # detector off until round 3
+    assert sum(rejected[3:]) > 0           # then it fires on the attack
+    assert traced_base.detections          # and the report logs it
+    quiet = dataclasses.replace(
+        traced_spec, sim=dataclasses.replace(traced_spec.sim, events=()))
+    base = SimService(api.compile_plan(quiet)).run()
+    assert _recs(base) != _recs(traced_base)
+
+
+@pytest.mark.parametrize("kill_at", [2, 4])
+def test_resume_across_event_boundaries(traced_spec, traced_base, kill_at):
+    """Resuming from a checkpoint taken after events applied (mutated
+    spec in the manifest) continues bit-exactly, including the NetSim
+    byte accounting."""
+    svc = SimService(api.compile_plan(traced_spec))
+    svc.run(max_records=kill_at)
+    with tempfile.TemporaryDirectory() as d:
+        path = svc.checkpoint(os.path.join(d, "ck"))
+        rep = SimService.resume(path).run()
+    assert _recs(rep) == _recs(traced_base)
+    assert rep.net == traced_base.net
+
+
+def test_membership_events_and_outage_trace_resume():
+    sim = api.SimSpec(
+        traces=(api.TrafficTrace(kind="outage", t_start=0.0,
+                                 duration_s=1e9, node_frac=0.4,
+                                 region_start=0.5),),
+        events=(api.SimEvent(at_round=1, kind="nodes",
+                             payload={"leave": [0]}),
+                api.SimEvent(at_round=2, kind="nodes",
+                             payload={"join": [0]})))
+    spec = _spec(kind="sync", topology="single", rounds=4,
+                 network=api.NetworkSpec(codec="sparse_coo"), sim=sim)
+    base = SimService(api.compile_plan(spec)).run()
+    svc = SimService(api.compile_plan(spec))
+    svc.run(max_records=1)
+    with tempfile.TemporaryDirectory() as d:
+        path = svc.checkpoint(os.path.join(d, "ck"))
+        rep = SimService.resume(path).run()
+    assert _recs(rep) == _recs(base)
+    # the trace + membership actually moved the trajectory
+    plain = dataclasses.replace(spec, sim=None)
+    assert _recs(api.run(api.compile_plan(plain))) != _recs(base)
+
+
+def test_records_jsonl_stream_rebuilt_on_resume(tmp_path):
+    stream = str(tmp_path / "records.jsonl")
+    spec = _spec(kind="sync", topology="sequential",
+                 obs=api.ObsSpec(enabled=True, records_jsonl=stream))
+    svc = SimService(api.compile_plan(spec))
+    svc.run(max_records=2)
+    path = svc.checkpoint(str(tmp_path / "ck"))
+    rep = SimService.resume(path).run()
+    replayed = api.replay_records(stream)
+    assert len(replayed.records) == spec.rounds
+    assert _recs(replayed) == _recs(rep)
+
+
+# ---------------------------------------------------------------------------
+# traffic math + sampler indirection (no runs)
+# ---------------------------------------------------------------------------
+
+def test_diurnal_modulation_math():
+    trc = api.TrafficTrace(kind="diurnal", period_s=100.0, amplitude=0.5,
+                           phase_s=0.0)
+    scale, up = modulation((trc,), 4, 0.0)
+    np.testing.assert_allclose(scale, 0.75)   # sin(0)=0 -> 1 - a/2
+    assert up.all()
+    scale, _ = modulation((trc,), 4, 25.0)    # sin peak -> 1 - a
+    np.testing.assert_allclose(scale, 0.5)
+    scale, _ = modulation((trc,), 4, 75.0)    # sin trough -> 1
+    np.testing.assert_allclose(scale, 1.0)
+
+
+def test_flash_crowd_and_outage_are_regional_and_epochal():
+    flash = api.TrafficTrace(kind="flash_crowd", t_start=10.0,
+                             duration_s=5.0, amplitude=0.8, node_frac=0.5,
+                             region_start=0.5)
+    out = api.TrafficTrace(kind="outage", t_start=10.0, duration_s=5.0,
+                           node_frac=0.25, region_start=0.0)
+    scale, up = modulation((flash, out), 8, 0.0)     # before both epochs
+    assert scale is None and up.all()
+    scale, up = modulation((flash, out), 8, 12.0)    # inside both
+    region = region_mask(8, 0.5, 0.5)
+    np.testing.assert_allclose(scale[region], 0.2)
+    np.testing.assert_allclose(scale[~region], 1.0)
+    np.testing.assert_array_equal(up, ~region_mask(8, 0.25, 0.0))
+    scale, up = modulation((flash, out), 8, 15.0)    # epochs are half-open
+    assert scale is None and up.all()
+
+
+def test_region_mask_wraps():
+    np.testing.assert_array_equal(
+        region_mask(4, 0.5, 0.75),
+        np.asarray([True, False, False, True]))
+
+
+def test_dynamic_sampler_wraps_and_masks():
+    dyn = DynamicSampler(4)
+    idx, valid = dyn.cohort(0, 4)
+    np.testing.assert_array_equal(idx, np.arange(4))
+    assert valid.all()                       # == FullParticipation
+    dyn.up[1] = False
+    _, valid = dyn.cohort(1, 4)
+    np.testing.assert_array_equal(valid, [True, False, True, True])
+    # wrapping an RNG sampler: same draws, availability intersected
+    a, b = UniformSampler(3, seed=7), UniformSampler(3, seed=7)
+    wrapped = DynamicSampler(4, inner=a)
+    idx_w, valid_w = wrapped.cohort(0, 4)
+    idx_b, valid_b = b.cohort(0, 4)
+    np.testing.assert_array_equal(idx_w, idx_b)
+    np.testing.assert_array_equal(valid_w, valid_b & wrapped.up[idx_w])
+
+
+# ---------------------------------------------------------------------------
+# spec validation + serialization
+# ---------------------------------------------------------------------------
+
+def test_sim_spec_round_trips_through_json(traced_spec):
+    d = json.loads(json.dumps(traced_spec.to_dict()))
+    assert api.ExperimentSpec.from_dict(d) == traced_spec
+    assert api.ExperimentSpec.from_dict(_spec().to_dict()).sim is None
+
+
+def test_compile_validates_sim_timeline():
+    with pytest.raises(api.SpecError, match="checkpoint_dir"):
+        api.compile_plan(_spec(sim=api.SimSpec(checkpoint_every=2)))
+    with pytest.raises(api.SpecError, match="net"):    # traces need repro.net
+        api.compile_plan(_spec(
+            topology="single",
+            sim=api.SimSpec(traces=(api.TrafficTrace(kind="diurnal"),))))
+    with pytest.raises(api.SpecError, match="at_round"):
+        api.compile_plan(_spec(sim=api.SimSpec(events=(
+            api.SimEvent(at_round=99, kind="defense",
+                         payload={"detect": False}),))))
+    with pytest.raises(api.SpecError, match="sequential"):
+        api.compile_plan(_spec(sim=api.SimSpec(events=(
+            api.SimEvent(at_round=1, kind="nodes",
+                         payload={"leave": [0]}),))))
+    # an event whose cumulative spec is invalid is rejected at compile
+    with pytest.raises(api.SpecError, match="yields an invalid spec"):
+        api.compile_plan(_spec(sim=api.SimSpec(events=(
+            api.SimEvent(at_round=1, kind="attack",
+                         payload={"malicious_frac": 2.0}),))))
+
+
+def test_apply_sim_event_kinds():
+    spec = _spec()
+    ev = api.SimEvent(at_round=1, kind="defense", payload={"detect": False})
+    assert not api.apply_sim_event(spec, ev).defense.detect
+    assert api.apply_sim_event(
+        spec, api.SimEvent(at_round=1, kind="nodes",
+                           payload={"leave": [0]})) == spec
+    with pytest.raises(ValueError, match="unknown SimEvent"):
+        api.apply_sim_event(
+            spec, dataclasses.replace(ev, kind="wormhole"))
+
+
+def test_external_population_rejects_attack_events(traced_spec):
+    pop = api.materialize(_spec(kind="async", topology="single"))
+    with pytest.raises(ValueError, match="rematerialize"):
+        SimService(api.compile_plan(traced_spec), population=pop)
+
+
+def test_report_resume_metadata_round_trip():
+    rep = api.RunReport(mode="sync", engine="fleet",
+                        resumed_from="/ck/ckpt_000002", resume_round=2)
+    d = json.loads(rep.to_json())
+    assert d["schema_version"] == 5
+    loaded = api.RunReport.from_dict(d)
+    assert loaded.resumed_from == "/ck/ckpt_000002"
+    assert loaded.resume_round == 2
+    # pre-v5 payloads carry no resume metadata -> uninterrupted
+    old = {k: v for k, v in d.items()
+           if k not in ("resumed_from", "resume_round")}
+    old["schema_version"] = 4
+    loaded = api.RunReport.from_dict(old)
+    assert loaded.resumed_from is None and loaded.resume_round is None
+
+
+# ---------------------------------------------------------------------------
+# mesh topology: kill-and-resume on 8 forced host devices (subprocess,
+# pattern from test_fleet_shard.py)
+# ---------------------------------------------------------------------------
+
+def test_mesh_resume_parity_on_8_devices_in_subprocess():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, tempfile
+        import jax
+        from repro import api
+        from repro.sim import SimService
+
+        def recs(report):
+            return [(r.t, r.version, r.accuracy, r.comm_bytes, r.comp_time,
+                     r.comm_time, r.n_rejected) for r in report.records]
+
+        out = {"n_devices": len(jax.devices())}
+        for kind in ("sync", "async"):
+            spec = api.ExperimentSpec(
+                fleet=api.FleetSpec(n_nodes=6),
+                schedule=api.SchedulePolicy(kind=kind),
+                privacy=api.PrivacySpec(sigma=0.05),
+                defense=api.DefenseSpec(detect=True),
+                topology=api.Topology(kind="mesh", devices=8),
+                train=api.TrainSpec(local_steps=2, batch_size=8, lr=0.1),
+                rounds=3, seed=0)
+            base = api.run(api.compile_plan(spec))
+            svc = SimService(api.compile_plan(spec))
+            svc.run(max_records=1)
+            with tempfile.TemporaryDirectory() as d:
+                p = svc.checkpoint(d + "/ck")
+                rep = SimService.resume(p).run()
+            out[kind + "_exact"] = recs(rep) == recs(base)
+            out[kind + "_engine"] = rep.engine
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)          # the child forces its own devices
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    assert rec["n_devices"] == 8
+    assert rec["sync_exact"] and rec["async_exact"]
+    assert rec["sync_engine"] == "fleet-mesh"
