@@ -1,0 +1,158 @@
+"""Fleet-health smoke: injected stragglers + attack onset must page.
+
+Drives `repro.sim.SimService` through a hostile scenario — a quarter of
+the fleet slowed ~8×, a label-flip attack switching on mid-run against
+an armed detector, sparse_coo uploads metered against a deliberately
+tight byte budget — with the `ObsSpec.health` probes live, then asserts
+the monitoring actually *noticed*: the straggler, byte-budget, and
+reject-rate (detection-drift) probes must each have opened at least one
+``health.incident``, reconstructed purely from the events JSONL (the
+acceptance bar: trace-only, no engine internals).  The same stream is
+then rendered through `tools/obs_report.py`-style postmortem and diffed
+against a clean-fleet control run to exercise the regression verdicts.
+
+Rows land in ``results/health_smoke.json`` and are pinned by
+``tools/bench_check.py`` (wall-clock fields fingerprint-exempt).
+
+  PYTHONPATH=src python -m benchmarks.health_smoke          # full scenario
+  PYTHONPATH=src python -m benchmarks.health_smoke --smoke  # tiny CI run
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import tempfile
+import time
+
+from repro import api
+from repro.obs import FleetAnalytics, HealthSpec, read_events
+from repro.obs.report import postmortem_md, run_diff_md
+from repro.sim import SimService
+
+from .common import append_trajectory
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "health_smoke.json")
+
+
+def _spec(smoke: bool, events_jsonl: str,
+          health: bool = True, attack: bool = True) -> api.ExperimentSpec:
+    n = 8 if smoke else 12
+    rounds = 6 if smoke else 10
+    onset = 2 if smoke else 3
+    events = ()
+    if attack:
+        events = (api.SimEvent(at_round=onset, kind="attack",
+                               payload={"kind": "label_flip",
+                                        "malicious_frac": 0.5}),)
+    hlt = None
+    if health:
+        # thresholds tuned to page on this scenario: the straggler tail
+        # sits ~8x over the median gap, sparse_coo windows run well over
+        # the (deliberately tight) byte budget, and the armed detector's
+        # reject rate jumps past 0.3 once half the fleet flips labels
+        hlt = HealthSpec(
+            straggler_factor=3.0, straggler_min_arrivals=3,
+            bytes_per_record_budget=6000.0,
+            reject_rate_threshold=0.3, reject_rate_window=8,
+            warmup_records=1)
+    return api.ExperimentSpec(
+        fleet=api.FleetSpec(
+            n_nodes=n, hw=(8, 8), samples_per_node=240 // n,
+            n_test=128, n_cloud_test=64,
+            profile=api.NodeHeterogeneity(
+                heterogeneity=0.3, straggler_frac=0.25,
+                straggler_slowdown=8.0)),
+        schedule=api.SchedulePolicy(kind="async"),
+        network=api.NetworkSpec(codec="sparse_coo", bandwidth_sigma=0.3,
+                                latency_s=0.01),
+        compression=api.CompressionSpec(sparsify_ratio=0.5),
+        defense=api.DefenseSpec(detect=True, detect_warmup=4),
+        obs=api.ObsSpec(enabled=True, events_jsonl=events_jsonl,
+                        health=hlt),
+        topology=api.Topology(kind="single"),
+        train=api.TrainSpec(local_steps=4, batch_size=16, lr=0.1),
+        sim=api.SimSpec(events=events), rounds=rounds, seed=0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI variant")
+    ap.add_argument("--no-write", action="store_true",
+                    help="skip the results/ append (CI smoke)")
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as d:
+        hostile_path = os.path.join(d, "hostile.jsonl")
+        control_path = os.path.join(d, "control.jsonl")
+
+        t0 = time.time()
+        spec = _spec(args.smoke, hostile_path)
+        report = SimService(api.compile_plan(spec)).run()
+        wall = time.time() - t0
+
+        # -- acceptance: incidents reconstructable from the trace alone
+        events = read_events(hostile_path)
+        an = FleetAnalytics.from_events(events)
+        fired = sorted({str(i["probe"]) for i in an.incidents})
+        print(f"incidents by probe: "
+              f"{ {p: sum(1 for i in an.incidents if i['probe'] == p) for p in fired} }",
+              flush=True)
+        for probe in ("straggler", "byte_budget", "reject_rate"):
+            if probe not in fired:
+                raise SystemExit(
+                    f"health_smoke: probe {probe!r} fired no "
+                    f"health.incident (fired: {fired})")
+
+        # -- the postmortem must render from the same trace-only input
+        from repro.obs import read_jsonl
+        rows_hostile = read_jsonl(hostile_path)
+        md = postmortem_md(rows_hostile)
+        for section in ("## Incidents", "## Detection quality",
+                        "stragglers"):
+            if section not in md:
+                raise SystemExit(f"health_smoke: postmortem missing "
+                                 f"{section!r} section")
+        print(f"postmortem: {len(md.splitlines())} lines, "
+              f"{len(an.incidents)} incidents", flush=True)
+
+        # -- control run (clean fleet, no attack) + run-vs-run diff
+        control = _spec(args.smoke, control_path, health=False,
+                        attack=False)
+        control = dataclasses.replace(
+            control, fleet=dataclasses.replace(
+                control.fleet,
+                profile=api.NodeHeterogeneity(heterogeneity=0.3)))
+        SimService(api.compile_plan(control)).run()
+        diff_md, n_reg = run_diff_md(read_jsonl(control_path),
+                                     rows_hostile,
+                                     label_a="control",
+                                     label_b="hostile")
+        print(f"run diff: {n_reg} regression(s) hostile vs control",
+              flush=True)
+        if "| metric |" not in diff_md:
+            raise SystemExit("health_smoke: run diff table missing")
+
+    det = an.detection_quality()
+    rows = [{
+        "bench": "health_smoke", "smoke": bool(args.smoke),
+        "rounds": len(report.records),
+        "final_accuracy": float(report.final_accuracy),
+        "probes_fired": fired,
+        "n_incidents": len(an.incidents),
+        "n_alerts": len(an.alerts),
+        "n_verdicts": int(an.n_verdicts),
+        "n_rejected": int(an.n_rejected),
+        "detection_tp": int(det["tp"]), "detection_fp": int(det["fp"]),
+        "detection_tn": int(det["tn"]), "detection_fn": int(det["fn"]),
+        "diff_regressions": int(n_reg),
+        "wall_s": wall,
+    }]
+    if not args.no_write:
+        append_trajectory(RESULTS_PATH, rows)
+        print(f"wrote {len(rows)} rows -> {RESULTS_PATH}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

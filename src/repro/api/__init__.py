@@ -32,6 +32,7 @@ from .report import (RoundRecord, RunReport,  # noqa: F401
                      replay_records)
 from .run import (RunState, execute, init_state,  # noqa: F401
                   make_engine, make_stepper, run)
+from ..obs.health import HealthSpec  # noqa: F401  (the ObsSpec.health axis)
 from .spec import (ACCEPTED_SCHEMA_VERSIONS, SCHEMA_VERSION,  # noqa: F401
                    AttackMix, CompressionSpec, DefenseSpec, ExperimentSpec,
                    FleetSpec, NetworkSpec, NodeHeterogeneity, ObsSpec,

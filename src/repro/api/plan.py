@@ -288,6 +288,57 @@ def compile_plan(spec: ExperimentSpec) -> ExperimentPlan:
              "the sequential reference loop has none (use topology.kind="
              "'single' or 'mesh')")
 
+    # -- fleet health (repro.obs.health) -------------------------------------
+    hlt = obs.health
+    if hlt is not None:
+        _require(obs.enabled,
+                 "obs.health declares SLO probes over the trace stream — "
+                 "it needs obs.enabled=True")
+        probes = hlt.enabled_probes()
+        _require(len(probes) > 0,
+                 "obs.health enables no probe — every threshold is 0/off; "
+                 "set at least one of straggler_factor, "
+                 "bytes_per_record_budget, reject_rate_threshold, "
+                 "occupancy_floor")
+        _require(hlt.straggler_factor == 0 or hlt.straggler_factor > 1.0,
+                 f"obs.health.straggler_factor flags nodes slower than "
+                 f"factor × the fleet median gap — it must be > 1 when "
+                 f"set, got {hlt.straggler_factor}")
+        _require(hlt.straggler_min_arrivals >= 2,
+                 f"obs.health.straggler_min_arrivals must be >= 2 (one "
+                 f"arrival has no cadence), got "
+                 f"{hlt.straggler_min_arrivals}")
+        _require(hlt.bytes_per_record_budget >= 0,
+                 f"obs.health.bytes_per_record_budget must be >= 0, got "
+                 f"{hlt.bytes_per_record_budget}")
+        _require(0.0 <= hlt.reject_rate_threshold <= 1.0,
+                 f"obs.health.reject_rate_threshold must be in [0, 1], "
+                 f"got {hlt.reject_rate_threshold}")
+        _require(hlt.reject_rate_window >= 1,
+                 f"obs.health.reject_rate_window must be >= 1, got "
+                 f"{hlt.reject_rate_window}")
+        _require(0.0 <= hlt.occupancy_floor < 1.0,
+                 f"obs.health.occupancy_floor must be in [0, 1), got "
+                 f"{hlt.occupancy_floor}")
+        _require(hlt.warmup_records >= 0,
+                 f"obs.health.warmup_records must be >= 0, got "
+                 f"{hlt.warmup_records}")
+        if "straggler" in probes:
+            _require(sch.kind != "sync",
+                     "obs.health.straggler_factor scores arrival cadence — "
+                     "sync barrier rounds emit no arrival instants; use "
+                     "schedule.kind='async' or 'buffered'")
+        if "byte_budget" in probes:
+            _require(spec.network.enabled,
+                     "obs.health.bytes_per_record_budget meters net.upload "
+                     "events — it needs a real network codec "
+                     "(network.codec != 'analytic')")
+        if "reject_rate" in probes:
+            _require(dfs.detect,
+                     "obs.health.reject_rate_threshold watches the "
+                     "detect.verdict audit log — it needs "
+                     "defense.detect=True")
+
     # -- simulation service (repro.sim) -------------------------------------
     sim = spec.sim
     if sim is not None:
@@ -430,6 +481,8 @@ def compile_plan(spec: ExperimentSpec) -> ExperimentPlan:
             stages.append("trust_weighted_agg")
     if obs.enabled:
         stages.append("obs_trace")
+    if obs.health is not None:
+        stages.append("health_probes")
     stages.append({"barrier": "masked_mean_mix",
                    "sequential": "eq6_arrival_mix",
                    "buffered": "fedbuff_window_mix"}[mixing])

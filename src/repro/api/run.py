@@ -88,10 +88,14 @@ class _ObsSession:
         o = plan.spec.obs
         self.enabled = o.enabled
         self.tracer: Optional[_obs.Tracer] = None
+        self.analytics: Optional[_obs.FleetAnalytics] = None
+        self.health: Optional[_obs.HealthMonitor] = None
         self._chrome_path = o.chrome_trace
         self._mem: Optional[_obs.MemorySink] = None
         self._events: Optional[_obs.JsonlSink] = None
         self._records: Optional[_obs.JsonlWriter] = None
+        self._last_virt_t = 0.0
+        self._last_records_done = 0
         if not self.enabled:
             return
         engine_name = ("fleet-mesh" if plan.mesh_devices is not None
@@ -107,8 +111,19 @@ class _ObsSession:
                                           header=dict(header,
                                                       stream="events"))
             sinks.append(self._events)
+        if o.health is not None:
+            # the analytics sink sees every event the file sinks see —
+            # including the monitor's own alerts/incidents, which it
+            # collects but never probes on
+            self.analytics = _obs.FleetAnalytics(
+                n_nodes=plan.spec.fleet.n_nodes)
+            sinks.append(self.analytics)
         self.tracer = _obs.Tracer(sinks=sinks, enabled=True,
                                   stage_timings=o.stage_timings)
+        if o.health is not None:
+            self.health = _obs.HealthMonitor(
+                o.health, self.analytics, self.tracer,
+                n_nodes=plan.spec.fleet.n_nodes)
         if o.records_jsonl:
             self._records = _obs.JsonlWriter(o.records_jsonl,
                                              header=dict(header,
@@ -135,12 +150,27 @@ class _ObsSession:
             return None
         return _StreamingHistory(self.record)
 
+    def poll_health(self, virt_t: float, records_done: int) -> None:
+        """Evaluate the health probes between records (no-op without an
+        `ObsSpec.health` axis)."""
+        if self.health is None:
+            return
+        self._last_virt_t = virt_t
+        self._last_records_done = records_done
+        self.health.evaluate(virt_t, records_done)
+
     def finish(self, report: Optional[RunReport] = None) -> None:
-        """Flush everything: report footer on the record stream, metrics
-        snapshot on the event stream, the Chrome-trace export, then close
-        every sink."""
+        """Flush everything: close open health incidents, report footer
+        on the record stream, metrics snapshot on the event stream, the
+        Chrome-trace export, then close every sink."""
         if not self.enabled:
             return
+        if self.health is not None:
+            # run end closes whatever is still open (tagged unresolved),
+            # before the metrics snapshot so incident counters land in it
+            t = max(self._last_virt_t,
+                    self.analytics.t_max or 0.0)
+            self.health.finalize(t, self._last_records_done)
         if self._records is not None:
             if report is not None:
                 footer = {k: v for k, v in report.to_dict().items()
@@ -720,6 +750,13 @@ def make_stepper(plan: ExperimentPlan, population: Population,
             f"compiled for fleet.n_nodes={plan.spec.fleet.n_nodes} — the "
             f"arrival budget and record cadence derive from the spec, so "
             f"a mismatched population would run the wrong experiment")
+    tr = _obs.get_tracer()
+    if tr.enabled:
+        # ground truth for trace-only detection-quality reconstruction:
+        # which nodes actually run the attack (analytics folds this into
+        # the detect.verdict confusion matrix)
+        tr.instant("fleet.population", n_nodes=population.n_nodes,
+                   malicious=sorted(population.malicious_ids))
     if plan.engine == "fleet":
         eng = make_engine(plan, population, mesh=mesh)
         if plan.mode == "sync":
@@ -731,11 +768,19 @@ def make_stepper(plan: ExperimentPlan, population: Population,
 
 
 def execute(plan: ExperimentPlan, population: Population,
-            state: RunState) -> List[RoundRecord]:
+            state: RunState,
+            session: Optional[_ObsSession] = None) -> List[RoundRecord]:
     """Run ``plan`` over ``population``, mutating ``state`` (records are
     appended to ``state.history``; params/key/residuals/accountant advance
-    in place), so follow-on `execute` calls continue the run."""
+    in place), so follow-on `execute` calls continue the run.  With a
+    health-carrying obs ``session``, the probes are polled between
+    records through the stepper's ``pre_step`` hook (the same seam the
+    simulation service modulates traffic through)."""
     stepper = make_stepper(plan, population, state)
+    if session is not None and session.health is not None:
+        def _poll(st) -> None:
+            session.poll_health(st.virtual_time(), len(state.history))
+        stepper.pre_step = _poll
     while not stepper.done:
         stepper.step()
     stepper.finalize()
@@ -768,7 +813,7 @@ def run(plan: ExperimentPlan, population: Optional[Population] = None,
         state.history = streamed
     try:
         with session.scope():
-            records = execute(plan, pop, state)
+            records = execute(plan, pop, state, session=session)
     except BaseException:
         session.finish(None)        # flush what streamed before the crash
         raise

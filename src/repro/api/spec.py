@@ -36,6 +36,7 @@ import json
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
+from ..obs.health import HealthSpec
 from .window import AutoWindow, WindowPolicy, window_policy_from_dict
 
 # v2: NetworkSpec axis + RoundRecord.bytes_source.  v3: ObsSpec axis.
@@ -43,11 +44,12 @@ from .window import AutoWindow, WindowPolicy, window_policy_from_dict
 # malicious placement, FleetSpec.n_classes) and the trust-scored defense
 # (DefenseSpec.kind + trust knobs).  v5: the simulation-service axis
 # (ExperimentSpec.sim: traffic traces + event timeline + checkpoint
-# cadence) and RunReport resume metadata.  Older payloads are still
-# accepted on read (sim defaults to None — plain batch runs); everything
-# written is stamped v5.
-SCHEMA_VERSION = 5
-ACCEPTED_SCHEMA_VERSIONS = (1, 2, 3, 4, 5)
+# cadence) and RunReport resume metadata.  v6: the fleet-health axis
+# (ObsSpec.health: HealthSpec SLO probes + incident detection).  Older
+# payloads are still accepted on read (health defaults to None — no
+# probes); everything written is stamped v6.
+SCHEMA_VERSION = 6
+ACCEPTED_SCHEMA_VERSIONS = (1, 2, 3, 4, 5, 6)
 
 
 # ---------------------------------------------------------------------------
@@ -248,13 +250,21 @@ class ObsSpec:
       * ``stage_timings`` — `block_until_ready`-fenced spans around each
         host pipeline stage (build/device program/net draw+commit/eval).
         Off by default even when tracing: fencing serializes JAX's async
-        dispatch, an intentional measurement-mode perf change.
+        dispatch, an intentional measurement-mode perf change;
+      * ``health``        — optional `repro.obs.HealthSpec`: declarative
+        SLO probes (straggler factor, per-record byte budget, detection
+        reject-rate ceiling, occupancy floor) evaluated between records,
+        emitting ``health.alert`` instants and ``health.incident`` spans
+        into the same trace stream.  Requires ``enabled=True``; probes
+        only *read* derived analytics and *write* events, so the
+        simulation trajectory is untouched.
     """
     enabled: bool = False
     events_jsonl: Optional[str] = None
     chrome_trace: Optional[str] = None
     records_jsonl: Optional[str] = None
     stage_timings: bool = False
+    health: Optional[HealthSpec] = None
 
 
 @dataclass(frozen=True)
@@ -431,6 +441,8 @@ class ExperimentSpec:
                 v = _schedule_from_dict(v)
             elif f.name == "sim":
                 v = _sim_from_dict(v)
+            elif f.name == "obs":
+                v = _obs_from_dict(v)
             elif f.name in _SECTION_TYPES:
                 v = _SECTION_TYPES[f.name](**v)
             kw[f.name] = v
@@ -485,6 +497,16 @@ def _schedule_from_dict(d: Dict) -> SchedulePolicy:
     if "window" in d and not isinstance(d["window"], WindowPolicy):
         d["window"] = window_policy_from_dict(d["window"])
     return SchedulePolicy(**d)
+
+
+def _obs_from_dict(d) -> ObsSpec:
+    if isinstance(d, ObsSpec):
+        return d
+    d = dict(d)
+    h = d.get("health")
+    if h is not None and not isinstance(h, HealthSpec):
+        d["health"] = HealthSpec(**h)
+    return ObsSpec(**d)
 
 
 def _sim_from_dict(d) -> Optional[SimSpec]:

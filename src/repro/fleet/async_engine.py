@@ -755,7 +755,8 @@ class AsyncFleetEngine(MeshStateIO):
             # byte-accurate: price each upload's measured nonzero count
             # through the wire codec; times are the link draws
             with timed_stage(tr, "net.commit", window=w):
-                enc = self.net.commit(draw, np.asarray(m["nnz"])[proc])
+                enc = self.net.commit(draw, np.asarray(m["nnz"])[proc],
+                                      ctx={"window": w})
             uplink = draw.transfer_s
             comm_bytes = float(enc.sum())
         else:

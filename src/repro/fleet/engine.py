@@ -518,7 +518,7 @@ class FleetEngine(MeshStateIO):
             with timed_stage(tr, "net.draw", round=r) as st:
                 draw = self.net.draw(sel_nodes, extra_concurrency=flood)
             with timed_stage(tr, "net.commit", round=r) as st:
-                enc = self.net.commit(draw, nnz_sel)
+                enc = self.net.commit(draw, nnz_sel, ctx={"round": r})
             comm = float(draw.transfer_s.max()) if sel_nodes.size else 0.0
             comm_bytes = float(enc.sum())
         t_prev = self.history[-1].t if self.history else self._t0

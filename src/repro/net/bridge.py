@@ -163,10 +163,14 @@ class NetSim:
                           overhead_bytes=overhead, retransmits=retrans)
 
     # -- phase 2: exact byte accounting -------------------------------------
-    def commit(self, draw: UploadDraw, nnz: np.ndarray) -> np.ndarray:
+    def commit(self, draw: UploadDraw, nnz: np.ndarray,
+               ctx: Optional[Dict] = None) -> np.ndarray:
         """Resolve the batch's exact encoded bytes from the measured
         nonzero counts and append every upload to the trace.  Returns the
-        (U,) encoded byte counts."""
+        (U,) encoded byte counts.  ``ctx`` tags (e.g. ``{"round": r}`` /
+        ``{"window": w}`` from the engines) are merged into each
+        ``net.upload`` instant so trace consumers can key byte accounting
+        by record without correlating streams."""
         nnz = np.asarray(nnz, np.int64)
         if nnz.shape != draw.nodes.shape:
             raise ValueError(f"commit: nnz shape {nnz.shape} != draw batch "
@@ -183,12 +187,13 @@ class NetSim:
         t.retransmits.extend(int(x) for x in draw.retransmits)
         tr = self.tracer
         if tr.enabled:
+            extra = ctx or {}
             for i in range(draw.nodes.size):
                 tr.instant("net.upload", node=int(draw.nodes[i]),
                            seq=int(draw.seqs[i]), nnz=int(nnz[i]),
                            encoded_bytes=int(enc[i]),
                            transfer_s=float(draw.transfer_s[i]),
-                           retransmits=int(draw.retransmits[i]))
+                           retransmits=int(draw.retransmits[i]), **extra)
             m = tr.metrics
             m.counter("net.uploads").inc(draw.nodes.size)
             m.counter("net.encoded_bytes").inc(float(np.sum(enc)))

@@ -12,7 +12,16 @@ The observability layer under the whole fleet/net/kernel stack:
     `read_jsonl`), `MemorySink` for tests, and the Chrome-trace/Perfetto
     exporter (`chrome_trace`/`write_chrome_trace`);
   * `timers`  — `block_until_ready`-fenced per-stage timing
-    (`timed_stage`) and the kernel profiling primitive (`bench_kernel`).
+    (`timed_stage`) and the kernel profiling primitive (`bench_kernel`);
+  * `analysis` — `FleetAnalytics`, the streaming trace-analytics sink
+    folding arrival/window/upload/verdict events into derived fleet
+    indicators (straggler scores, occupancy/skew, byte accounting,
+    detection confusion);
+  * `health`  — declarative `HealthSpec` SLO probes and the
+    `HealthMonitor` that turns analytics state into `health.alert`
+    instants and `health.incident` spans in the same trace stream;
+  * `report`  — trace-only Markdown postmortems (`postmortem_md`) and
+    run-vs-run diffs (`run_diff_md`), fronted by `tools/obs_report.py`.
 
 Enabled per experiment through `api.ObsSpec`; with the spec at its
 default (off) no event is constructed and the engines' jitted programs
@@ -20,11 +29,14 @@ are unchanged — tracing costs nothing until asked for.  `repro.obs`
 imports nothing from the rest of the repo (and jax only lazily, for
 fencing), so every layer down to the kernels can depend on it.
 """
+from .analysis import FleetAnalytics, NodeStats  # noqa: F401
 from .events import (TraceEvent, Tracer, get_tracer,  # noqa: F401
                      set_tracer, use_tracer)
+from .health import HealthMonitor, HealthSpec  # noqa: F401
 from .metrics import (SECONDS_EDGES, STALENESS_EDGES,  # noqa: F401
                       WINDOW_SIZE_EDGES, Counter, Gauge, Histogram,
                       MetricsRegistry)
+from .report import postmortem_md, run_diff_md  # noqa: F401
 from .sinks import (OBS_SCHEMA_VERSION, JsonlSink, JsonlWriter,  # noqa: F401
                     MemorySink, Sink, chrome_trace, read_events,
                     read_jsonl, write_chrome_trace)

@@ -19,6 +19,7 @@ for tests.  Stdlib-only, like the rest of `repro.obs`.
 from __future__ import annotations
 
 import bisect
+import re
 from typing import Dict, List, Optional, Sequence, Tuple
 
 
@@ -87,6 +88,35 @@ class Histogram:
         self.min = v if self.min is None else min(self.min, v)
         self.max = v if self.max is None else max(self.max, v)
 
+    def quantile(self, q: float) -> Optional[float]:
+        """Estimate the q-quantile by linear interpolation inside the
+        bucket the target rank lands in.
+
+        Bucket i spans ``(edges[i-1], edges[i]]``; the first bucket's
+        lower bound and the overflow bucket's upper bound are the
+        *observed* min/max (tracked per histogram), so the estimate is
+        always inside the observed range — tighter than the Prometheus
+        convention of clamping to the outermost edge.  Returns None on an
+        empty histogram.
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile q must be in [0, 1], got {q}")
+        if self.total == 0:
+            return None
+        target = q * self.total
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if cum + c >= target:
+                lo = self.edges[i - 1] if i > 0 else self.min
+                hi = (self.edges[i] if i < len(self.edges) else self.max)
+                frac = (target - cum) / c if c else 0.0
+                v = lo + (hi - lo) * max(0.0, min(1.0, frac))
+                return float(min(max(v, self.min), self.max))
+            cum += c
+        return float(self.max)
+
     def snapshot(self) -> Dict:
         return {"type": "histogram", "edges": list(self.edges),
                 "counts": list(self.counts), "count": self.total,
@@ -134,6 +164,48 @@ class MetricsRegistry:
         session appends to the event JSONL at run end."""
         return {name: self._metrics[name].snapshot()
                 for name in sorted(self._metrics)}
+
+    def to_prom_text(self) -> str:
+        """The registry as Prometheus text exposition (version 0.0.4):
+        ``# TYPE`` line per metric, cumulative ``_bucket{le=...}`` series
+        plus ``_sum``/``_count`` for histograms.  Metric names are
+        sanitized to the Prometheus charset (dots become underscores), so
+        a snapshot served or dumped this way is scrapeable as-is."""
+        lines: List[str] = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            pname = _prom_name(name)
+            if isinstance(m, Counter):
+                lines.append(f"# TYPE {pname} counter")
+                lines.append(f"{pname} {_prom_float(m.value)}")
+            elif isinstance(m, Gauge):
+                lines.append(f"# TYPE {pname} gauge")
+                lines.append(f"{pname} {_prom_float(m.value)}")
+            else:                       # Histogram: cumulative buckets
+                lines.append(f"# TYPE {pname} histogram")
+                cum = 0
+                for edge, c in zip(m.edges, m.counts):
+                    cum += c
+                    lines.append(f'{pname}_bucket{{le="{_prom_float(edge)}"}}'
+                                 f" {cum}")
+                cum += m.counts[-1]
+                lines.append(f'{pname}_bucket{{le="+Inf"}} {cum}')
+                lines.append(f"{pname}_sum {_prom_float(m.sum)}")
+                lines.append(f"{pname}_count {m.total}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+_PROM_BAD = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    out = _PROM_BAD.sub("_", name)
+    return out if not out[:1].isdigit() else "_" + out
+
+
+def _prom_float(v: float) -> str:
+    f = float(v)
+    return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
 
 
 # Shared bucket ladders: powers-of-two style edges the engines use so

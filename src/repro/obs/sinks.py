@@ -173,7 +173,8 @@ def chrome_trace(events: Iterable[TraceEvent]) -> Dict[str, Any]:
 
     tid_for(_CLOUD_TRACK)               # stable tid 1 for the cloud track
     for ev in sorted(events, key=lambda e: e.seq):
-        tid = tid_for(_track(ev))
+        track = _track(ev)
+        tid = tid_for(track)
         ts = _ts_us(ev, wall0)
         args = {k: v for k, v in ev.tags.items()}
         if ev.kind == "span":
@@ -184,8 +185,15 @@ def chrome_trace(events: Iterable[TraceEvent]) -> Dict[str, Any]:
         elif ev.kind == "instant":
             out.append({"ph": "i", "name": ev.name, "pid": 1, "tid": tid,
                         "ts": ts, "s": "t", "args": args})
-        else:                           # counter
-            out.append({"ph": "C", "name": ev.name, "pid": 1, "tid": tid,
+        else:
+            # counter -> a Perfetto *counter track* ("C" samples render as
+            # a stepped series, not instant markers).  Counter tracks are
+            # identified by (pid, name), so per-node counters get the
+            # track folded into the name — each node plots as its own
+            # series instead of interleaving into one garbled track.
+            cname = (ev.name if track == _CLOUD_TRACK
+                     else f"{ev.name} ({track})")
+            out.append({"ph": "C", "name": cname, "pid": 1, "tid": tid,
                         "ts": ts, "args": {ev.name: ev.value}})
     return {"traceEvents": out, "displayTimeUnit": "ms",
             "otherData": {"producer": "repro.obs",

@@ -228,6 +228,10 @@ class SimService:
         net = stepper.net
         if net is not None:
             net.rate_scale = scale
+        # fleet-health probes ride the same between-records seam: they
+        # read the session's streaming analytics and emit health.alert/
+        # health.incident events (no-op without an ObsSpec.health axis)
+        self.session.poll_health(stepper.virtual_time(), self.records_done)
 
     # -- SimEvent timeline ---------------------------------------------------
     def _apply_due_events(self) -> None:

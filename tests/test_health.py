@@ -1,0 +1,372 @@
+"""repro.obs fleet health: analytics, SLO probes, incidents, postmortems.
+
+Tiers:
+  * unit        — `FleetAnalytics` folds hand-built event streams into
+    hand-computed indicators (straggler scores, occupancy/skew, byte
+    accounting, confusion matrix); `HealthMonitor` opens/closes/
+    finalizes level-triggered incidents with the right spans;
+  * api         — `HealthSpec` serialization round trip, `compile_plan`
+    rejections for contradictory health axes;
+  * acceptance  — a hostile SimService run (straggler tail + armed
+    detector + tight byte budget) fires real incidents reconstructable
+    from the events JSONL alone; health disabled leaves the trajectory
+    bit-identical; the postmortem and run-diff render from trace-only
+    input, including through the `tools/obs_report.py` CLI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import api
+from repro.obs import (FleetAnalytics, HealthMonitor, HealthSpec,
+                       MemorySink, TraceEvent, Tracer, read_events,
+                       read_jsonl)
+from repro.obs.report import postmortem_md, run_diff_md
+from repro.sim import SimService
+
+
+def _ev(kind, name, virt_t=None, virt_dur=None, value=None, seq=0, **tags):
+    return TraceEvent(kind=kind, name=name, wall_t=0.0, virt_t=virt_t,
+                      virt_dur=virt_dur, value=value, tags=tags, seq=seq)
+
+
+def _arrival(node, t):
+    return _ev("instant", "arrival", virt_t=t, node=node, arrived=True)
+
+
+def _verdict(node, rejected, threshold=0.5, detect=True):
+    return _ev("instant", "detect.verdict", node=node, rejected=rejected,
+               threshold=threshold, accuracy=0.6, detect=detect)
+
+
+# ---------------------------------------------------------------------------
+# unit: FleetAnalytics
+# ---------------------------------------------------------------------------
+
+def test_analytics_straggler_scores_hand_computed():
+    events = [_ev("instant", "fleet.population", n_nodes=3, malicious=[])]
+    events += [_arrival(0, t) for t in (0.0, 1.0, 2.0, 3.0)]   # gap 1.0
+    events += [_arrival(1, t) for t in (0.0, 1.5, 3.0)]        # gap 1.5
+    events += [_arrival(2, t) for t in (0.0, 9.0)]             # gap 9.0
+    an = FleetAnalytics.from_events(events)
+    # arrival counts [4, 3, 2]: median 3 >= min_arrivals, fleet is scored;
+    # gaps [1.0, 1.5, 9.0], median 1.5
+    scores = an.straggler_scores(min_arrivals=2)
+    assert scores[0] == pytest.approx(1.0 / 1.5)
+    assert scores[1] == pytest.approx(1.0)
+    assert scores[2] == pytest.approx(9.0 / 1.5)
+    top = an.top_stragglers(k=1)
+    assert top[0]["node"] == 2 and top[0]["score"] == pytest.approx(6.0)
+    # a cold fleet (median below min_arrivals) is not scored at all
+    assert FleetAnalytics.from_events(
+        events[:1] + [_arrival(0, 0.0), _arrival(1, 1.0)]
+    ).straggler_scores() == {}
+
+
+def test_analytics_scores_barely_seen_nodes_by_extent():
+    """The straggler signature in a fixed-arrival-budget run is *absence*:
+    a node with 0-1 arrivals must still score, via the run-extent lower
+    bound, or the slowest nodes would be invisible to the probe."""
+    events = [_ev("instant", "fleet.population", n_nodes=3, malicious=[])]
+    events += [_arrival(0, float(t)) for t in range(11)]       # gap 1.0
+    events += [_arrival(1, float(t)) for t in range(11)]       # gap 1.0
+    events += [_arrival(2, 5.0)]                               # seen once
+    an = FleetAnalytics.from_events(events)
+    scores = an.straggler_scores(min_arrivals=2)
+    # extent 10.0 over one arrival: gap lower-bound 10, median gap 1.0
+    assert scores[2] == pytest.approx(10.0)
+    # an entirely unseen node scores the same way (extent / 1)
+    an2 = FleetAnalytics.from_events(events[:-1])
+    assert an2.straggler_scores(min_arrivals=2)[2] == pytest.approx(10.0)
+
+
+def test_analytics_occupancy_skew_and_bytes():
+    events = [_ev("instant", "fleet.population", n_nodes=4, malicious=[])]
+    for w, n_proc in enumerate((4, 4, 1)):
+        events.append(_ev("span", "window", virt_t=float(w), virt_dur=1.0,
+                          window=w, n_processed=n_proc, n_rejected=0))
+        events.append(_ev("instant", "net.upload", node=0, window=w,
+                          encoded_bytes=100 * (w + 1), retransmits=w))
+    an = FleetAnalytics.from_events(events)
+    assert an.recent_occupancy() == pytest.approx((4 + 4 + 1) / 3 / 4)
+    assert an.window_skew() == pytest.approx(4.0 / 4.0)  # median 4, max 4
+    assert an.total_upload_bytes == 600.0
+    assert an.total_retransmits == 3
+    assert an.bytes_by_record == {"window:0": 100.0, "window:1": 200.0,
+                                  "window:2": 300.0}
+    snap = an.snapshot()
+    assert snap["n_windows"] == 3 and snap["n_nodes"] == 4
+    json.dumps(snap)                            # snapshot is JSON-ready
+
+
+def test_analytics_confusion_matrix_against_ground_truth():
+    events = [_ev("instant", "fleet.population", n_nodes=4,
+                  malicious=[1, 3])]
+    events += [
+        _verdict(1, rejected=True),             # malicious rejected: TP
+        _verdict(3, rejected=False),            # malicious accepted: FN
+        _verdict(0, rejected=True),             # honest rejected:    FP
+        _verdict(2, rejected=False),            # honest accepted:    TN
+        _verdict(2, rejected=False),            # honest accepted:    TN
+        _verdict(1, rejected=True, detect=False),  # unarmed: not a verdict
+    ]
+    an = FleetAnalytics.from_events(events)
+    det = an.detection_quality()
+    assert (det["tp"], det["fp"], det["tn"], det["fn"]) == (1, 1, 2, 1)
+    assert det["precision"] == pytest.approx(0.5)
+    assert det["recall"] == pytest.approx(0.5)
+    assert det["accuracy"] == pytest.approx(3 / 5)
+    assert an.n_verdicts == 5 and an.n_rejected == 2
+    assert an.recent_reject_rate(4) == pytest.approx(0.25)
+    assert an.recent_reject_rate(6) is None     # not enough verdicts yet
+    # without ground truth the confusion stays zeroed but rates still work
+    an2 = FleetAnalytics.from_events(events[1:])
+    assert an2.detection_quality()["ground_truth"] is False
+    assert an2.reject_rate() == pytest.approx(0.4)
+
+
+# ---------------------------------------------------------------------------
+# unit: HealthMonitor
+# ---------------------------------------------------------------------------
+
+def _monitor(spec, n_nodes=4):
+    an = FleetAnalytics(n_nodes=n_nodes)
+    sink = MemorySink()
+    tr = Tracer([sink, an])
+    return HealthMonitor(spec, an, tr, n_nodes=n_nodes), tr, sink
+
+
+def test_monitor_reject_rate_open_close_cycle():
+    spec = HealthSpec(reject_rate_threshold=0.5, reject_rate_window=4,
+                      warmup_records=0)
+    mon, tr, sink = _monitor(spec)
+    for i in range(4):
+        tr.instant("detect.verdict", node=i % 4, rejected=True,
+                   threshold=0.5, detect=True)
+    mon.evaluate(virt_t=10.0, records_done=1)
+    alerts = [e for e in sink.events if e.name == "health.alert"]
+    assert len(alerts) == 1
+    assert alerts[0].tags["probe"] == "reject_rate"
+    assert alerts[0].tags["value"] == pytest.approx(1.0)
+    assert not [e for e in sink.events if e.name == "health.incident"]
+    # condition persists: same incident, no second alert
+    mon.evaluate(virt_t=11.0, records_done=2)
+    assert len([e for e in sink.events if e.name == "health.alert"]) == 1
+    # condition clears: the incident closes with its full virtual extent
+    for i in range(4):
+        tr.instant("detect.verdict", node=i % 4, rejected=False,
+                   threshold=0.5, detect=True)
+    mon.evaluate(virt_t=15.0, records_done=3)
+    (inc,) = [e for e in sink.events if e.name == "health.incident"]
+    assert inc.kind == "span" and inc.virt_t == 10.0
+    assert inc.virt_dur == pytest.approx(5.0)
+    assert inc.tags["resolved"] is True and inc.tags["polls"] == 2
+    assert inc.tags["worst"] == pytest.approx(1.0)
+    assert tr.metrics.snapshot()["health.incidents"]["value"] == 1.0
+
+
+def test_monitor_byte_budget_and_warmup():
+    spec = HealthSpec(bytes_per_record_budget=100.0, warmup_records=2)
+    mon, tr, sink = _monitor(spec)
+    tr.instant("net.upload", node=0, encoded_bytes=500, window=0)
+    mon.evaluate(virt_t=1.0, records_done=0)     # warmup: no probe fires
+    mon.evaluate(virt_t=2.0, records_done=1)
+    assert not [e for e in sink.events if e.name == "health.alert"]
+    # past warmup the probe meters the post-warmup byte delta per record
+    tr.instant("net.upload", node=1, encoded_bytes=400, window=2)
+    mon.evaluate(virt_t=3.0, records_done=2)
+    (alert,) = [e for e in sink.events if e.name == "health.alert"]
+    assert alert.tags["probe"] == "byte_budget"
+    assert alert.tags["value"] == pytest.approx(400.0)
+    # finalize closes the still-open incident, tagged unresolved
+    mon.finalize(virt_t=4.0, records_done=3)
+    (inc,) = [e for e in sink.events if e.name == "health.incident"]
+    assert inc.tags["resolved"] is False
+    mon.finalize(virt_t=5.0, records_done=3)     # idempotent
+    assert len([e for e in sink.events
+                if e.name == "health.incident"]) == 1
+
+
+def test_monitor_straggler_per_node_incidents():
+    spec = HealthSpec(straggler_factor=3.0, straggler_min_arrivals=2,
+                      warmup_records=0)
+    mon, tr, sink = _monitor(spec, n_nodes=3)
+    for t in range(8):
+        tr.instant("arrival", virt_t=float(t), node=0)
+        tr.instant("arrival", virt_t=float(t), node=1)
+    tr.instant("arrival", virt_t=0.0, node=2)    # the slow tail: seen once
+    mon.evaluate(virt_t=8.0, records_done=4)
+    (alert,) = [e for e in sink.events if e.name == "health.alert"]
+    assert alert.tags["probe"] == "straggler" and alert.tags["node"] == 2
+    mon.finalize(virt_t=9.0, records_done=5)
+    (inc,) = [e for e in sink.events if e.name == "health.incident"]
+    assert inc.tags["node"] == 2
+
+
+# ---------------------------------------------------------------------------
+# api: serialization + compile_plan validation
+# ---------------------------------------------------------------------------
+
+def _spec(**kw):
+    base = dict(
+        fleet=api.FleetSpec(n_nodes=4, samples_per_node=20, n_test=32,
+                            n_cloud_test=16,
+                            attack=api.AttackMix(malicious_frac=0.25)),
+        schedule=api.SchedulePolicy(kind="async"),
+        defense=api.DefenseSpec(detect=True),
+        network=api.NetworkSpec(codec="sparse_coo"),
+        train=api.TrainSpec(local_steps=2, batch_size=8, lr=0.1),
+        rounds=2, seed=0)
+    base.update(kw)
+    return api.ExperimentSpec(**base)
+
+
+def test_health_spec_round_trips_and_lowers():
+    h = HealthSpec(straggler_factor=4.0, bytes_per_record_budget=1e4,
+                   reject_rate_threshold=0.4, warmup_records=3)
+    spec = _spec(obs=api.ObsSpec(enabled=True, health=h))
+    back = api.ExperimentSpec.from_dict(json.loads(spec.to_json()))
+    assert back.obs.health == h and back == spec
+    plan = api.compile_plan(spec)
+    assert "health_probes" in plan.stages
+    assert "health_probes" not in api.compile_plan(_spec()).stages
+    # pre-health payloads (schema v5) still load, health defaulting off
+    d = spec.to_dict()
+    d["schema_version"] = 5
+    del d["obs"]["health"]
+    assert api.ExperimentSpec.from_dict(d).obs.health is None
+
+
+@pytest.mark.parametrize("spec_kw, health_kw, match", [
+    (dict(obs=None), dict(straggler_factor=3.0), "enabled"),
+    (dict(), dict(), "no probe"),
+    (dict(), dict(straggler_factor=0.5), "must be > 1"),
+    (dict(), dict(straggler_factor=3.0, straggler_min_arrivals=1),
+     "min_arrivals"),
+    (dict(), dict(reject_rate_threshold=1.5), "reject_rate_threshold"),
+    (dict(), dict(reject_rate_threshold=0.5, reject_rate_window=0),
+     "reject_rate_window"),
+    (dict(), dict(occupancy_floor=1.0), "occupancy_floor"),
+    (dict(), dict(straggler_factor=3.0, warmup_records=-1), "warmup"),
+    (dict(schedule=api.SchedulePolicy(kind="sync")),
+     dict(straggler_factor=3.0), "arrival"),
+    (dict(network=api.NetworkSpec()), dict(bytes_per_record_budget=1e3),
+     "codec"),
+    (dict(defense=api.DefenseSpec(detect=False)),
+     dict(reject_rate_threshold=0.5), "detect"),
+])
+def test_compile_plan_rejects_bad_health(spec_kw, health_kw, match):
+    obs_kw = spec_kw.pop("obs", "default")
+    obs = (api.ObsSpec(enabled=False, health=HealthSpec(**health_kw))
+           if obs_kw is None
+           else api.ObsSpec(enabled=True, health=HealthSpec(**health_kw)))
+    with pytest.raises(api.SpecError, match=match):
+        api.compile_plan(_spec(obs=obs, **spec_kw))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: a hostile SimService run pages, trace-only
+# ---------------------------------------------------------------------------
+
+def _hostile_spec(events_jsonl, health=True):
+    hlt = HealthSpec(straggler_factor=3.0, straggler_min_arrivals=2,
+                     bytes_per_record_budget=2000.0,
+                     reject_rate_threshold=0.2, reject_rate_window=4,
+                     warmup_records=1) if health else None
+    return api.ExperimentSpec(
+        fleet=api.FleetSpec(
+            n_nodes=4, samples_per_node=20, n_test=32, n_cloud_test=16,
+            attack=api.AttackMix(malicious_frac=0.5),
+            profile=api.NodeHeterogeneity(straggler_frac=0.25,
+                                          straggler_slowdown=8.0)),
+        schedule=api.SchedulePolicy(kind="async"),
+        defense=api.DefenseSpec(detect=True, detect_warmup=2),
+        network=api.NetworkSpec(codec="sparse_coo"),
+        compression=api.CompressionSpec(sparsify_ratio=0.5),
+        obs=api.ObsSpec(enabled=True, events_jsonl=events_jsonl,
+                        health=hlt),
+        topology=api.Topology(kind="single"),
+        train=api.TrainSpec(local_steps=2, batch_size=8, lr=0.1),
+        sim=api.SimSpec(), rounds=4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def hostile_run(tmp_path_factory):
+    td = tmp_path_factory.mktemp("health")
+    path = str(td / "events.jsonl")
+    rep = SimService(api.compile_plan(_hostile_spec(path))).run()
+    return rep, path
+
+
+def test_hostile_run_incidents_from_trace_alone(hostile_run):
+    rep, path = hostile_run
+    an = FleetAnalytics.from_events(read_events(path))
+    probes = {str(i["probe"]) for i in an.incidents}
+    assert {"straggler", "byte_budget"} <= probes, probes
+    for inc in an.incidents:
+        assert inc["duration"] is not None and inc["duration"] >= 0.0
+        assert inc["t"] is not None
+    assert len(an.alerts) >= len({(i["probe"], i.get("node"))
+                                  for i in an.incidents})
+    # ground truth rode the stream: confusion matrix is reconstructable
+    det = an.detection_quality()
+    assert det["ground_truth"] is True
+    assert det["tp"] + det["fp"] + det["tn"] + det["fn"] == an.n_verdicts
+    assert an.n_verdicts > 0
+
+
+def test_health_disabled_is_bit_identical(hostile_run, tmp_path):
+    """The off-by-default contract: the same hostile run without the
+    health axis (and without it plus without obs entirely) produces the
+    identical trajectory — probes observe, never steer."""
+    rep, _ = hostile_run
+    plain = str(tmp_path / "plain.jsonl")
+    spec_off = dataclasses.replace(
+        _hostile_spec(plain, health=False))
+    rep_off = SimService(api.compile_plan(spec_off)).run()
+    assert rep_off.records == rep.records
+    assert rep_off.final_accuracy == rep.final_accuracy
+    assert rep_off.detections == rep.detections
+    spec_dark = dataclasses.replace(_hostile_spec(None, health=False),
+                                    obs=api.ObsSpec())
+    rep_dark = SimService(api.compile_plan(spec_dark)).run()
+    assert rep_dark.records == rep.records
+
+
+def test_postmortem_and_diff_render_trace_only(hostile_run, tmp_path):
+    rep, path = hostile_run
+    rows = read_jsonl(path)
+    md = postmortem_md(rows, top_k=3)
+    for section in ("# Fleet postmortem", "## Run summary", "## Incidents",
+                    "## Top 3 stragglers", "## Detection quality"):
+        assert section in md
+    assert "straggler" in md and "byte_budget" in md
+    # self-diff: no regressions, every metric unchanged
+    diff, n_reg = run_diff_md(rows, rows)
+    assert n_reg == 0 and "No regressions" in diff
+    assert "unchanged" in diff
+
+
+def test_obs_report_cli_subprocess(hostile_run, tmp_path):
+    _, path = hostile_run
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    tool = os.path.join(repo, "tools", "obs_report.py")
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo, "src"))
+    out_md = str(tmp_path / "pm.md")
+    r = subprocess.run([sys.executable, tool, "postmortem", path,
+                        "-o", out_md], capture_output=True, text=True,
+                       env=env, timeout=120)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "# Fleet postmortem" in open(out_md).read()
+    r = subprocess.run([sys.executable, tool, "diff", path, path,
+                        "--fail-on-regression"], capture_output=True,
+                       text=True, env=env, timeout=120)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "No regressions" in r.stdout

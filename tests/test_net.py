@@ -199,7 +199,7 @@ def test_network_spec_json_round_trip_and_v1_acceptance():
         latency_s=0.01, jitter_s=0.1, loss_prob=0.05,
         shared_uplink_bps=1e8))
     d = spec.to_dict()
-    assert d["schema_version"] == api.SCHEMA_VERSION == 5
+    assert d["schema_version"] == api.SCHEMA_VERSION >= 5
     assert api.ExperimentSpec.from_dict(d) == spec
     # v1 payloads (no network section) still load, with analytic defaults
     v1 = _spec().to_dict()
@@ -222,7 +222,7 @@ def test_report_round_trip_with_net_and_bytes_source():
                         "encoded_bytes": 1e4, "wire_bytes": 1.2e4,
                         "transfer_s": 0.4, "retransmits": 2})
     d = rep.to_dict()
-    assert d["schema_version"] == 5
+    assert d["schema_version"] == api.SCHEMA_VERSION
     assert d["records"][0]["bytes_source"] == "encoded"
     rep2 = api.RunReport.from_json(rep.to_json())
     assert rep2 == dataclasses.replace(rep, final_params=None)

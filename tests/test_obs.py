@@ -153,6 +153,127 @@ def test_chrome_trace_structure():
     json.dumps(doc)                                    # serializable as-is
 
 
+def test_chrome_trace_counter_tracks_perfetto_shape():
+    """Counter events must export as Perfetto *counter tracks*: phase
+    "C", value under args keyed by the counter name, and per-node
+    counters on distinctly named tracks (Perfetto identifies counter
+    tracks by (pid, name) — two nodes sharing one name would interleave
+    into a single garbled series)."""
+    sink = MemorySink()
+    tr = Tracer([sink])
+    tr.counter("bytes", 100.0, virt_t=1.0, node=0)
+    tr.counter("bytes", 250.0, virt_t=2.0, node=1)
+    tr.counter("ring.held", 3.0, virt_t=2.5)           # cloud-side counter
+    doc = chrome_trace(sink.events)
+    counters = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    assert len(counters) == 3
+    for c in counters:
+        assert set(c) >= {"ph", "name", "pid", "tid", "ts", "args"}
+        assert len(c["args"]) == 1                     # one series per track
+    by_name = {c["name"]: c for c in counters}
+    # per-node counters: distinct track names, value keyed by counter name
+    assert by_name["bytes (node 0)"]["args"] == {"bytes": 100.0}
+    assert by_name["bytes (node 1)"]["args"] == {"bytes": 250.0}
+    # cloud-track counters keep the bare name
+    assert by_name["ring.held"]["args"] == {"ring.held": 3.0}
+    assert by_name["ring.held"]["tid"] == 1            # the cloud track
+    json.dumps(doc)
+
+
+def test_histogram_quantile_hand_computed():
+    mx = MetricsRegistry()
+    h = mx.histogram("lat", [1.0, 2.0, 4.0])
+    assert h.quantile(0.5) is None                     # empty histogram
+    for v in (0.5, 1.5, 3.0, 100.0):
+        h.observe(v)
+    # counts [1, 1, 1, 1]: one per bucket incl. the +inf overflow; outer
+    # bounds are the observed min/max (0.5 and 100.0)
+    assert h.quantile(0.0) == pytest.approx(0.5)
+    assert h.quantile(0.25) == pytest.approx(1.0)
+    assert h.quantile(0.5) == pytest.approx(2.0)
+    assert h.quantile(0.9) == pytest.approx(4.0 + (100.0 - 4.0) * 0.6)
+    assert h.quantile(1.0) == pytest.approx(100.0)
+    with pytest.raises(ValueError, match="quantile"):
+        h.quantile(1.5)
+    # single-value histogram: every quantile is that value
+    h1 = MetricsRegistry().histogram("one", [10.0])
+    h1.observe(3.0)
+    assert h1.quantile(0.5) == pytest.approx(3.0)
+
+
+def test_to_prom_text_hand_computed():
+    mx = MetricsRegistry()
+    mx.counter("net.uploads").inc(12)
+    mx.gauge("ring.occupancy").set(0.75)
+    h = mx.histogram("lat", [1.0, 2.0])
+    for v in (0.5, 1.5, 9.0):
+        h.observe(v)
+    text = mx.to_prom_text()
+    lines = text.splitlines()
+    assert "# TYPE lat histogram" in lines
+    assert 'lat_bucket{le="1"} 1' in lines              # cumulative
+    assert 'lat_bucket{le="2"} 2' in lines
+    assert 'lat_bucket{le="+Inf"} 3' in lines
+    assert "lat_sum 11" in lines
+    assert "lat_count 3" in lines
+    # dots sanitized to the Prometheus charset
+    assert "# TYPE net_uploads counter" in lines
+    assert "net_uploads 12" in lines
+    assert "ring_occupancy 0.75" in lines
+    assert text.endswith("\n")
+    assert MetricsRegistry().to_prom_text() == ""
+
+
+# ---------------------------------------------------------------------------
+# unit: read_jsonl edge cases (satellite: crash-exposure corners)
+# ---------------------------------------------------------------------------
+
+def test_read_jsonl_header_only_file(tmp_path):
+    p = str(tmp_path / "empty.jsonl")
+    w = obs.JsonlWriter(p, header={"stream": "events"})
+    w.close()
+    rows = read_jsonl(p)
+    assert len(rows) == 1 and rows[0]["kind"] == "header"
+    assert read_events(p) == []
+    assert read_jsonl(p, strict=False) == rows
+
+
+def test_read_jsonl_tail_valid_json_prefix_is_kept(tmp_path):
+    """A crash between the JSON bytes and the trailing newline leaves a
+    final line that is *complete valid JSON* — indistinguishable from a
+    clean last line, so it is kept under both strictness modes (the
+    documented limit of newline-framed crash detection)."""
+    p = str(tmp_path / "ev.jsonl")
+    sink = obs.JsonlSink(p, header={"stream": "t"})
+    tr = Tracer([sink])
+    tr.instant("tick", i=0)
+    tr.instant("tick", i=1)
+    tr.close()
+    clean = read_jsonl(p)
+    with open(p) as f:
+        body = f.read()
+    assert body.endswith("\n")
+    with open(p, "w") as f:
+        f.write(body[:-1])                  # crash ate only the newline
+    assert read_jsonl(p) == clean
+    assert read_jsonl(p, strict=False) == clean
+
+
+def test_read_jsonl_strict_false_drops_exactly_one(tmp_path):
+    p = str(tmp_path / "ev.jsonl")
+    sink = obs.JsonlSink(p, header={"stream": "t"})
+    tr = Tracer([sink])
+    for i in range(5):
+        tr.instant("tick", i=i)
+    tr.close()
+    clean = read_jsonl(p)
+    with open(p, "a") as f:
+        f.write('{"kind":"instant","name":"torn","wall_t":1.2,"ta')
+    dropped = read_jsonl(p, strict=False)
+    assert dropped == clean                 # exactly the torn tail is gone
+    assert len(dropped) == 6                # header + 5 complete records
+
+
 # ---------------------------------------------------------------------------
 # unit: timers
 # ---------------------------------------------------------------------------

@@ -296,7 +296,7 @@ def test_report_resume_metadata_round_trip():
     rep = api.RunReport(mode="sync", engine="fleet",
                         resumed_from="/ck/ckpt_000002", resume_round=2)
     d = json.loads(rep.to_json())
-    assert d["schema_version"] == 5
+    assert d["schema_version"] == api.SCHEMA_VERSION
     loaded = api.RunReport.from_dict(d)
     assert loaded.resumed_from == "/ck/ckpt_000002"
     assert loaded.resume_round == 2

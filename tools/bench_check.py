@@ -52,6 +52,28 @@ def _close(a, b, rtol: float) -> bool:
     return a == b
 
 
+def _walk_diff(path, b, c, rtol, out):
+    """Recursive per-key diff: every drift is reported as its own dotted/
+    indexed leaf path (``name[3].net.codec: 'coo' -> 'bitpack'``), so a
+    baseline re-pin is reviewable value by value instead of as one
+    monolithic nested-blob mismatch."""
+    if isinstance(b, dict) and isinstance(c, dict):
+        for k in sorted(set(b) | set(c)):
+            if k not in b:
+                out.append(f"{path}.{k}: new column {c[k]!r}")
+            elif k not in c:
+                out.append(f"{path}.{k}: column dropped (was {b[k]!r})")
+            else:
+                _walk_diff(f"{path}.{k}", b[k], c[k], rtol, out)
+    elif isinstance(b, list) and isinstance(c, list):
+        if len(b) != len(c):
+            out.append(f"{path}: length {len(b)} -> {len(c)}")
+        for i, (bv, cv) in enumerate(zip(b, c)):
+            _walk_diff(f"{path}[{i}]", bv, cv, rtol, out)
+    elif not _close(b, c, rtol):
+        out.append(f"{path}: {b!r} -> {c!r}")
+
+
 def diff_one(name, base, cur, rtol):
     """Human-readable drift list between two fingerprints."""
     out = []
@@ -59,15 +81,7 @@ def diff_one(name, base, cur, rtol):
         out.append(f"{name}: {len(base)} baseline records vs {len(cur)} "
                    f"current — sweep coverage changed")
     for i, (b, c) in enumerate(zip(base, cur)):
-        keys = sorted(set(b) | set(c))
-        for k in keys:
-            if k not in b:
-                out.append(f"{name}[{i}].{k}: new column {c[k]!r}")
-            elif k not in c:
-                out.append(f"{name}[{i}].{k}: column dropped "
-                           f"(was {b[k]!r})")
-            elif not _close(b[k], c[k], rtol):
-                out.append(f"{name}[{i}].{k}: {b[k]!r} -> {c[k]!r}")
+        _walk_diff(f"{name}[{i}]", b, c, rtol, out)
     return out
 
 

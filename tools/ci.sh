@@ -7,7 +7,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== 1/10 import sweep (every repro.* and benchmarks.* module) =="
+echo "== 1/11 import sweep (every repro.* and benchmarks.* module) =="
 python - <<'EOF'
 import importlib
 import pkgutil
@@ -32,35 +32,35 @@ print(f"imported {len(mods) - len(failures)}/{len(mods)} modules")
 raise SystemExit(1 if failures else 0)
 EOF
 
-echo "== 2/10 tier-1 pytest =="
+echo "== 2/11 tier-1 pytest =="
 python -m pytest -q
 
-echo "== 3/10 fleet smokes on synthetic data (2 sync rounds + 2 async windows) =="
+echo "== 3/11 fleet smokes on synthetic data (2 sync rounds + 2 async windows) =="
 python -m benchmarks.fleet_scale --smoke
 python -m benchmarks.async_scale --smoke
 
-echo "== 4/10 multi-device sharded fleet smoke (4 forced host devices) =="
+echo "== 4/11 multi-device sharded fleet smoke (4 forced host devices) =="
 python -m benchmarks.fleet_shard --smoke
 
-echo "== 5/10 api smoke (spec -> plan -> run, every schedule x topology) =="
+echo "== 5/11 api smoke (spec -> plan -> run, every schedule x topology) =="
 python -m benchmarks.api_smoke
 XLA_FLAGS=--xla_force_host_platform_device_count=2 \
     python -m benchmarks.api_smoke --mesh 2
 
-echo "== 6/10 network smoke (wire codecs + lossy-link run) =="
+echo "== 6/11 network smoke (wire codecs + lossy-link run) =="
 python -m benchmarks.net_sweep --smoke
 
-echo "== 7/10 pallas fused-kernel smoke (megakernel + window-fold engines) =="
+echo "== 7/11 pallas fused-kernel smoke (megakernel + window-fold engines) =="
 python -m benchmarks.api_smoke --backend pallas
 
-echo "== 8/10 obs smoke (traced run + pinned benchmark baselines) =="
+echo "== 8/11 obs smoke (traced run + pinned benchmark baselines) =="
 python -m benchmarks.obs_smoke
 python tools/bench_check.py
 
-echo "== 9/10 attack-matrix smoke (adversary zoo x defense x schedule) =="
+echo "== 9/11 attack-matrix smoke (adversary zoo x defense x schedule) =="
 python -m benchmarks.attack_matrix --smoke
 
-echo "== 10/10 simulation-service smoke (run -> kill -> resume -> verify parity) =="
+echo "== 10/11 simulation-service smoke (run -> kill -> resume -> verify parity) =="
 python -m benchmarks.service_sim --smoke --no-write
 python - <<'EOS'
 import os, tempfile
@@ -85,4 +85,8 @@ assert recs(rep) == recs(base), "service resume parity violated"
 assert rep.resume_round == 1
 print("service kill/resume parity OK")
 EOS
+
+echo "== 11/11 fleet-health smoke (SLO probes + postmortem/diff rendering) =="
+python -m benchmarks.health_smoke --smoke --no-write
+python tools/bench_check.py
 echo "CI OK"

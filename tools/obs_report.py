@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Render fleet postmortems and run-vs-run diffs from trace streams.
+
+Trace-only input: both commands consume the events JSONL an
+`ObsSpec(events_jsonl=...)` run streams (header + `TraceEvent` rows) and
+never touch engine internals, so they work on live runs, crash
+artifacts, and traces copied off other machines alike.
+
+    # one run's story: incidents, stragglers, SLO compliance, detection
+    python tools/obs_report.py postmortem /tmp/run/events.jsonl
+
+    # two runs side by side, non-zero exit on regression (CI gate)
+    python tools/obs_report.py diff base/events.jsonl cand/events.jsonl \
+        --fail-on-regression
+"""
+import argparse
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+from repro.obs import read_jsonl  # noqa: E402
+from repro.obs.report import postmortem_md, run_diff_md  # noqa: E402
+
+
+def _load(path: str, strict: bool):
+    try:
+        return read_jsonl(path, strict=strict)
+    except ValueError as e:
+        raise SystemExit(f"obs_report: {e}\n(re-run with --tolerate-torn "
+                         f"to drop a crash-torn final line)")
+
+
+def _write(text: str, out):
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            f.write(text)
+        print(f"wrote {out}")
+    else:
+        print(text, end="")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Markdown postmortems and run diffs from obs trace "
+                    "streams (trace-only input)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    pm = sub.add_parser("postmortem",
+                        help="render one run's Markdown postmortem")
+    pm.add_argument("events", help="events JSONL from ObsSpec.events_jsonl")
+    pm.add_argument("-o", "--out", default=None, help="output path "
+                    "(default: stdout)")
+    pm.add_argument("--top-k", type=int, default=5,
+                    help="stragglers to list (default 5)")
+    pm.add_argument("--tolerate-torn", action="store_true",
+                    help="drop a crash-torn final JSONL line instead of "
+                         "failing")
+
+    df = sub.add_parser("diff", help="render a run-vs-run Markdown diff")
+    df.add_argument("events_a", help="baseline events JSONL")
+    df.add_argument("events_b", help="candidate events JSONL")
+    df.add_argument("-o", "--out", default=None)
+    df.add_argument("--rtol", type=float, default=0.05,
+                    help="relative tolerance before a directional move "
+                         "counts as a regression (default 0.05)")
+    df.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 when any metric regresses (CI gate)")
+    df.add_argument("--tolerate-torn", action="store_true")
+
+    args = ap.parse_args(argv)
+    strict = not args.tolerate_torn
+    if args.cmd == "postmortem":
+        rows = _load(args.events, strict)
+        _write(postmortem_md(rows, top_k=args.top_k), args.out)
+        return 0
+    rows_a = _load(args.events_a, strict)
+    rows_b = _load(args.events_b, strict)
+    md, n_reg = run_diff_md(rows_a, rows_b,
+                            label_a=os.path.basename(args.events_a),
+                            label_b=os.path.basename(args.events_b),
+                            rtol=args.rtol)
+    _write(md, args.out)
+    if n_reg and args.fail_on_regression:
+        print(f"obs_report: {n_reg} regression(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
